@@ -1,0 +1,70 @@
+"""Shared benchmark helpers: paper-calibrated targets + real CPU targets."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry as arch_registry
+from repro.core.offload import JaxTarget, OffloadEngine, SimTarget
+from repro.core.power import PAPER_LATENCY_S, PAPER_TDP_W
+from repro.data.pipeline import SyntheticImages
+from repro.models import googlenet
+from repro.models.registry import fns_for
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+# time-scale for the calibrated simulation (keeps benchmarks fast while
+# preserving the paper's latency RATIOS, which the figures are about)
+SIM_SCALE = 0.05
+SIM_ITEMS = 60
+
+
+def save_artifact(name: str, payload: dict) -> str:
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path
+
+
+def paper_vpu_targets(n: int, *, transfer_frac: float = 0.2):
+    """n simulated NCS devices with the paper's 100.7 ms single-inference
+    latency, split into USB-transfer and SHAVE-compute shares."""
+    lat = PAPER_LATENCY_S["vpu"] * SIM_SCALE
+    return [SimTarget(f"vpu{i}", compute_s=lat * (1 - transfer_frac),
+                      transfer_s=lat * transfer_frac,
+                      tdp_watts=PAPER_TDP_W["vpu"]) for i in range(n)]
+
+
+def paper_host_target(kind: str, batch: int = 1):
+    """Simulated CPU/GPU target with the paper's batch-scaling behaviour.
+
+    The paper observed poor batch scaling on the hosts (CPU 1.1x at 8,
+    GPU 1.9x at 8): latency(batch) = lat1 * batch / scaling(batch)."""
+    lat1 = PAPER_LATENCY_S[kind] * SIM_SCALE
+    limit = {"cpu": 1.147, "gpu": 1.925}[kind]
+    # smooth saturating speedup matching the paper's 1- and 8-batch points
+    speedup = 1.0 + (limit - 1.0) * (batch - 1) / 7.0 if batch > 1 else 1.0
+    return SimTarget(f"{kind}-b{batch}", compute_s=lat1 * batch / speedup,
+                     tdp_watts=PAPER_TDP_W[kind])
+
+
+def googlenet_cpu_target(cfg=None, batch: int = 1):
+    """REAL GoogLeNet inference on this host (JAX CPU) as an offload target."""
+    cfg = cfg or arch_registry.GOOGLENET
+    params = googlenet.init(cfg, jax.random.PRNGKey(0))
+    fwd = jax.jit(lambda imgs: googlenet.predict(cfg, params, imgs)[2])
+
+    def fn(batch_imgs):
+        return np.asarray(fwd(jnp.asarray(batch_imgs)))
+    return JaxTarget(fn, name=f"host-googlenet-b{batch}", tdp_watts=80.0)
+
+
+def image_stream(n: int, batch: int, size: int = 64, seed: int = 0):
+    src = SyntheticImages(num_classes=1000, batch=batch, size=size, seed=seed)
+    return [src.sample(batch) for _ in range(n)]

@@ -1,0 +1,50 @@
+"""Paper Fig 6a: inference throughput, batch=8, CPU vs GPU vs 8xVPU.
+
+Two modes:
+  * calibrated — SimTargets with the paper's measured latencies; reproduces
+    the figure's numbers (77.2 / 44.0 / 74.2 img/s) up to scheduling noise.
+  * host — REAL GoogLeNet inference through the same engine on this CPU
+    (absolute numbers differ; the engine/protocol is identical).
+"""
+from __future__ import annotations
+
+from repro.core.offload import OffloadEngine
+from repro.core.power import PAPER_THROUGHPUT_8
+
+from benchmarks.common import (SIM_ITEMS, SIM_SCALE, googlenet_cpu_target,
+                               image_stream, paper_host_target,
+                               paper_vpu_targets, save_artifact)
+
+
+def run(verbose: bool = True) -> dict:
+    out = {"paper_reference_img_s": PAPER_THROUGHPUT_8}
+
+    # --- calibrated reproduction -------------------------------------------
+    calib = {}
+    with OffloadEngine(paper_vpu_targets(8)) as eng:
+        _, st = eng.run(range(SIM_ITEMS))
+    calib["vpu_x8"] = st.throughput * SIM_SCALE
+    for kind in ("cpu", "gpu"):
+        with OffloadEngine([paper_host_target(kind, batch=8)]) as eng:
+            _, st = eng.run(range(SIM_ITEMS // 8))
+        calib[kind] = st.throughput * 8 * SIM_SCALE
+    out["calibrated_img_s"] = calib
+
+    # --- real host inference through the same engine ------------------------
+    stream = image_stream(6, batch=8)
+    with OffloadEngine([googlenet_cpu_target(batch=8)]) as eng:
+        _, st = eng.run([s["images"] for s in stream])
+    out["host_googlenet_img_s"] = st.throughput * 8
+
+    if verbose:
+        print("fig6a  paper img/s:", PAPER_THROUGHPUT_8)
+        print("fig6a  calibrated img/s:",
+              {k: round(v, 1) for k, v in calib.items()})
+        print("fig6a  host GoogLeNet img/s:",
+              round(out["host_googlenet_img_s"], 2))
+    save_artifact("fig6a_throughput", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

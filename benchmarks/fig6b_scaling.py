@@ -1,0 +1,45 @@
+"""Paper Fig 6b: relative performance scaling vs batch/device count.
+
+VPU scaling is near-ideal (the NCSw overlap), CPU/GPU batch scaling is poor
+(1.1x / 1.9x at 8).  We reproduce the VPU curve by actually running the
+offload engine over 1..8 simulated devices, and the host curves from the
+paper's saturation model.  Paper values at n=8: VPU ~7.8x.
+"""
+from __future__ import annotations
+
+from repro.core.offload import OffloadEngine
+
+from benchmarks.common import (SIM_ITEMS, paper_host_target,
+                               paper_vpu_targets, save_artifact)
+
+
+def run(verbose: bool = True) -> dict:
+    vpu = {}
+    base = None
+    for n in (1, 2, 4, 8):
+        with OffloadEngine(paper_vpu_targets(n)) as eng:
+            _, st = eng.run(range(SIM_ITEMS))
+        if base is None:
+            base = st.throughput
+        vpu[n] = st.throughput / base
+    cpu = {}
+    gpu = {}
+    for n in (1, 2, 4, 8):
+        for kind, d in (("cpu", cpu), ("gpu", gpu)):
+            t = paper_host_target(kind, batch=n)
+            d[n] = (paper_host_target(kind, 1).compute_s * n) / \
+                (t.compute_s * n) * n / n  # speedup = lat1*n / lat(n)
+            d[n] = paper_host_target(kind, 1).compute_s * n / t.compute_s
+    out = {"vpu_speedup": vpu, "cpu_speedup": cpu, "gpu_speedup": gpu,
+           "paper_reference": {"vpu_8": 7.8, "cpu_8": 1.147, "gpu_8": 1.925}}
+    if verbose:
+        print("fig6b  VPU speedup:", {k: round(v, 2) for k, v in vpu.items()})
+        print("fig6b  CPU speedup:", {k: round(v, 2) for k, v in cpu.items()})
+        print("fig6b  GPU speedup:", {k: round(v, 2) for k, v in gpu.items()})
+    save_artifact("fig6b_scaling", out)
+    assert vpu[8] > 6.5, "multi-VPU scaling should be near-ideal"
+    return out
+
+
+if __name__ == "__main__":
+    run()

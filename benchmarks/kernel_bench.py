@@ -1,0 +1,86 @@
+"""Kernel micro-benchmarks: correctness deltas + analytic VMEM/MXU roofline
+per block configuration (no TPU on this host, so the report is structural:
+working-set bytes vs VMEM, FLOPs per HBM byte vs the v5e ridge point).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.matmul.kernel import matmul
+from repro.kernels.matmul.ref import matmul_ref
+from repro.kernels.ssm_scan.kernel import ssm_scan
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+from repro.roofline.hw import TPU_V5E
+
+from benchmarks.common import save_artifact
+
+RIDGE = TPU_V5E.peak_flops_bf16 / TPU_V5E.hbm_bandwidth   # flops/byte
+
+
+def _gemm_stats(m, n, k, bm, bn, bk, dtype_bytes=2):
+    vmem = (bm * bk + bk * bn) * dtype_bytes + bm * bn * 4
+    flops = 2 * m * n * k
+    hbm = (m * k + k * n) * dtype_bytes * (n // bn if False else 1) + \
+        m * n * dtype_bytes
+    # per-tile K-stream model: x tile read n/bn times, y tile read m/bm times
+    hbm = (m * k * (n // bn) + k * n * (m // bm)) * dtype_bytes \
+        + m * n * dtype_bytes
+    return {"vmem_bytes": vmem, "flops": flops, "hbm_bytes": hbm,
+            "intensity": flops / hbm, "ridge": RIDGE,
+            "compute_bound": flops / hbm > RIDGE}
+
+
+def run(verbose: bool = True) -> dict:
+    out = {}
+    # correctness spot checks (interpret mode)
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    x = jax.random.normal(ks[0], (256, 256), jnp.bfloat16)
+    y = jax.random.normal(ks[1], (256, 256), jnp.bfloat16)
+    ref = matmul_ref(x, y).astype(jnp.float32)
+    err = float(jnp.abs(
+        matmul(x, y, bm=128, bn=128, bk=128, interpret=True).astype(jnp.float32)
+        - ref).max())
+    out["matmul_err"] = err / float(jnp.abs(ref).max())   # relative (bf16)
+
+    q = jax.random.normal(ks[2], (1, 256, 4, 64))
+    k = jax.random.normal(ks[3], (1, 256, 2, 64))
+    v = jax.random.normal(ks[4], (1, 256, 2, 64))
+    out["flash_err"] = float(jnp.abs(
+        flash_attention(q, k, v, bq=128, bkv=128, interpret=True)
+        - flash_attention_ref(q, k, v)).max())
+
+    qd = jax.random.normal(ks[5], (2, 4, 64))
+    lengths = jnp.array([100, 200], jnp.int32)
+    out["decode_err"] = float(jnp.abs(
+        decode_attention(qd, k, v, lengths, bkv=128, interpret=True)
+        - decode_attention_ref(qd, k, v, lengths)).max())
+
+    ld = -jax.nn.softplus(jax.random.normal(ks[6], (1, 256, 4)))
+    lg = 0.1 * jax.random.normal(ks[7], (1, 256, 4))
+    qs = jax.random.normal(ks[2], (1, 256, 4, 16))
+    ks_ = jax.random.normal(ks[3], (1, 256, 4, 16))
+    vs = jax.random.normal(ks[4], (1, 256, 4, 16))
+    out["ssm_err"] = float(jnp.abs(
+        ssm_scan(qs, ks_, vs, ld, lg, chunk=64, interpret=True)
+        - ssm_scan_ref(qs, ks_, vs, ld, lg, chunk=64)).max())
+
+    # structural roofline for the production GEMM tiling
+    out["gemm_512"] = _gemm_stats(8192, 8192, 8192, 512, 512, 512)
+    out["gemm_256"] = _gemm_stats(8192, 8192, 8192, 256, 256, 256)
+    if verbose:
+        print("kernels errs:", {k: v for k, v in out.items()
+                                if k.endswith("_err")})
+        print("gemm tiling 512:", {k: round(v, 2) if isinstance(v, float)
+                                   else v for k, v in out["gemm_512"].items()})
+    save_artifact("kernel_bench", out)
+    assert max(v for k, v in out.items() if k.endswith("_err")) < 1e-2
+    return out
+
+
+if __name__ == "__main__":
+    run()

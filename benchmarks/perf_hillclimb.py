@@ -1,0 +1,141 @@
+"""§Perf hillclimb driver: three cells, hypothesis -> change -> measure.
+
+Cells (from the §Roofline baseline):
+  A llama3-405b x train_4k    — most collective-bound (FSDP gathers + TP)
+  B llama3-405b x decode_32k  — most representative of the paper's technique
+                                (multi-device serving offload, reduced precision)
+  C qwen3-moe-235b-a22b x train_4k — worst roofline fraction (EP dispatch)
+
+Run:  PYTHONPATH=src python -m benchmarks.perf_hillclimb
+Writes artifacts/bench/perf_hillclimb.json with every iteration's roofline
+terms; EXPERIMENTS.md §Perf narrates the log.
+"""
+import os
+
+# the dry-run device flag, scoped to this driver exactly like dryrun.py
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import json  # noqa: E402
+import time  # noqa: E402
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+from repro.roofline.hw import TPU_V5E  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench",
+                   "perf_hillclimb.json")
+
+
+def terms(rec):
+    h = rec["hlo"]
+    links = TPU_V5E.ici_link_bandwidth * TPU_V5E.ici_links
+    t = {
+        "compute_s": h["flops_per_device"] / TPU_V5E.peak_flops_bf16,
+        "memory_s": h["bytes_per_device"] / TPU_V5E.hbm_bandwidth,
+        "collective_s": h["collective_ring_bytes"] / links,
+        "peak_gib": rec["memory"]["peak_bytes_per_device"] / 2**30,
+        "args_gib": rec["memory"]["argument_bytes"] / 2**30,
+        "useful": rec["model"]["useful_flops_ratio"],
+    }
+    t["bound_s"] = max(t["compute_s"], t["memory_s"], t["collective_s"])
+    t["dominant"] = max(("compute_s", "memory_s", "collective_s"),
+                        key=lambda k: t[k])
+    t["roofline_frac"] = rec["model"]["model_flops_global"] / (
+        rec["devices"] * TPU_V5E.peak_flops_bf16 * t["bound_s"])
+    return t
+
+
+def iterate(log, cell_name, arch, shape, steps):
+    print(f"\n#### {cell_name}: {arch} x {shape}")
+    results = []
+    for label, hypothesis, overrides in steps:
+        t0 = time.time()
+        rec = run_cell(arch, shape, False, None, overrides=overrides,
+                       verbose=False)
+        if rec["status"] != "OK":
+            print(f"  {label}: FAILED {rec.get('error', '')[:100]}")
+            results.append({"label": label, "hypothesis": hypothesis,
+                            "overrides": overrides, "status": "FAIL"})
+            continue
+        t = terms(rec)
+        t.update({"label": label, "hypothesis": hypothesis,
+                  "overrides": overrides, "status": "OK",
+                  "wall_s": round(time.time() - t0, 1)})
+        results.append(t)
+        print(f"  {label:28s} compute {t['compute_s']:7.2f}  "
+              f"mem {t['memory_s']:7.2f}  coll {t['collective_s']:7.2f}  "
+              f"bound {t['bound_s']:7.2f} ({t['dominant'][:-2]})  "
+              f"frac {t['roofline_frac']:.3f}  peak {t['peak_gib']:.1f}GiB")
+    log[cell_name] = results
+    return results
+
+
+def main():
+    log = {}
+
+    iterate(log, "A_llama405_train", "llama3-405b", "train_4k", [
+        ("baseline (accum=16)",
+         "paper-faithful baseline: FSDP+TP+SP, full remat, chunk=1024",
+         {}),
+        ("accum 16->8",
+         "FSDP weight all-gathers happen once per microbatch; halving "
+         "microbatch count halves gather traffic (collective term ~40%+ "
+         "down) at the cost of 2x saved-carry memory",
+         {"accum": 8}),
+        ("accum 8 + chunk 4096",
+         "single-chunk attention removes inter-chunk (m,l,acc) carry "
+         "traffic from the scan: memory term down, flops unchanged",
+         {"accum": 8, "chunk": 4096}),
+        ("accum 8 + chunk 4096 + remat dots",
+         "saving dot outputs (dots_with_no_batch_dims policy) removes the "
+         "recompute pass' matmuls: compute term down ~25%, memory up",
+         {"accum": 8, "chunk": 4096, "remat": "dots"}),
+        ("accum 4 + chunk 4096",
+         "push gather amortization further: 4 microbatches; check memory "
+         "headroom (carries x4 vs accum 16)",
+         {"accum": 4, "chunk": 4096}),
+    ])
+
+    iterate(log, "B_llama405_decode", "llama3-405b", "decode_32k", [
+        ("baseline (bf16 KV)",
+         "paper-faithful reduced-precision serving: bf16 weights + bf16 "
+         "sequence-sharded KV cache, LSE-merge decode",
+         {}),
+        ("int8 KV cache [beyond-paper]",
+         "the paper shows FP16 inference is safe; int8 KV with per-(slot,"
+         "head) absmax scales halves cache bytes (8.6->4.3 GiB/chip) and "
+         "cache read traffic; top-1 agreement verified in tests",
+         {"cache_dtype": "int8"}),
+        ("int8 KV + kv replicated (ablation)",
+         "REFUTATION check: without sequence-sharded KV the cache "
+         "replicates across the model axis and memory explodes — confirms "
+         "the LSE-merge layout is load-bearing",
+         {"cache_dtype": "int8", "seq_shard_kv": False}),
+    ])
+
+    iterate(log, "C_qwen3moe_train", "qwen3-moe-235b-a22b", "train_4k", [
+        ("baseline (cf=1.25, accum=8)",
+         "paper-faithful baseline: EP all-to-all dispatch, capacity 1.25",
+         {}),
+        ("capacity 1.25->1.0",
+         "dispatch/expert buffers and a2a payloads scale linearly with "
+         "capacity_factor: expect ~20% off collective+memory terms at the "
+         "cost of more dropped tokens under imbalance",
+         {"capacity_factor": 1.0}),
+        ("cf 1.0 + accum 8->16",
+         "per-microbatch dispatch buffers halve with token count per "
+         "microbatch: live memory down; total a2a bytes unchanged",
+         {"capacity_factor": 1.0, "accum": 16}),
+        ("cf 1.0 + accum 16 + chunk 4096",
+         "attention chunk carries removed (same as cell A)",
+         {"capacity_factor": 1.0, "accum": 16, "chunk": 4096}),
+    ])
+
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(log, f, indent=1)
+    print(f"\nwrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

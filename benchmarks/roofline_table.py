@@ -1,0 +1,42 @@
+"""Generate the 40-cell roofline table from dry-run artifacts (§Roofline)."""
+from __future__ import annotations
+
+import os
+
+from repro.roofline.analysis import (from_record, improvement_hint,
+                                     load_records, table)
+
+from benchmarks.common import save_artifact
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def run(verbose: bool = True) -> dict:
+    recs = load_records(ART)
+    ok = [r for r in recs if r.get("status") == "OK"]
+    if not ok:
+        print("roofline: no dry-run artifacts yet — run "
+              "`python -m repro.launch.dryrun --all --mesh both`")
+        return {}
+    out = {"n_cells": len(recs)}
+    for mesh in ("single", "multi"):
+        md = table(recs, mesh=mesh)
+        out[f"table_{mesh}"] = md
+        if verbose:
+            print(f"\n== roofline ({mesh}-pod) ==")
+            print(md)
+    hints = {}
+    for rec in ok:
+        if rec["mesh"] != "single":
+            continue
+        r = from_record(rec)
+        hints[f"{r.arch}|{r.shape}"] = {
+            "dominant": r.dominant, "hint": improvement_hint(r),
+            "roofline_fraction": r.roofline_fraction}
+    out["hints"] = hints
+    save_artifact("roofline_table", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Run every benchmark (one per paper figure + roofline + kernels).
+
+  PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> int:
+    from benchmarks import (fig6a_throughput, fig6b_scaling, fig7_error_rate,
+                            fig8_throughput_watt, kernel_bench,
+                            roofline_table, serving_bench)
+    suites = [
+        ("fig6a_throughput", fig6a_throughput.run),
+        ("fig6b_scaling", fig6b_scaling.run),
+        ("fig7_error_rate", fig7_error_rate.run),
+        ("fig8_throughput_watt", fig8_throughput_watt.run),
+        ("serving_bench", serving_bench.run),
+        ("kernel_bench", kernel_bench.run),
+        ("roofline_table", roofline_table.run),
+    ]
+    failures = 0
+    for name, fn in suites:
+        t0 = time.time()
+        print(f"\n=== {name} ===")
+        try:
+            fn()
+            print(f"--- {name} OK ({time.time()-t0:.1f}s)")
+        except Exception:   # noqa: BLE001
+            failures += 1
+            print(f"--- {name} FAILED")
+            traceback.print_exc()
+    print(f"\nbenchmarks: {len(suites)-failures}/{len(suites)} OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,143 @@
+"""NumPy-backed sharded checkpointer: per-host leaf files, atomic commit,
+optional async save, retention, auto-resume.
+
+Layout:
+  <dir>/step_00000100/            (committed atomically via rename)
+    MANIFEST.json                 {leaf path -> file, shape, dtype}
+    p0000_<leaf>.npy              one file per pytree leaf per process
+  <dir>/LATEST                    text file with the last committed step
+
+Multi-host posture: every process writes only the leaves (or shards) it is
+addressable for, under its process index; this container is single-process,
+so files carry prefix ``p0000``.  Commit order (write tmp -> fsync -> rename
+-> update LATEST) guarantees a crash never leaves a half checkpoint visible,
+which is what the trainer's auto-resume relies on.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def _leaf_name(path) -> str:
+    s = jax.tree_util.keystr(path)
+    return re.sub(r"[^A-Za-z0-9_.]+", "_", s).strip("_")
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save -----------------------------------------------------------------
+
+    def save(self, step: int, tree: Pytree) -> None:
+        """Snapshot to host memory synchronously; write to disk (maybe async)."""
+        leaves = jax.tree_util.tree_leaves_with_path(tree)
+        host = [(p, np.asarray(jax.device_get(l))) for p, l in leaves]
+        self.wait()
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host)
+
+    def _write(self, step: int, host_leaves) -> None:
+        proc = jax.process_index()
+        final = os.path.join(self.directory, f"step_{step:08d}")
+        tmp = final + f".tmp{proc}"
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {}
+        for path, arr in host_leaves:
+            name = f"p{proc:04d}_{_leaf_name(path)}"
+            np.save(os.path.join(tmp, name + ".npy"), arr)
+            manifest[_leaf_name(path)] = {
+                "file": name + ".npy",
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+            }
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            json.dump({"step": step, "leaves": manifest}, f, indent=1)
+        for fname in os.listdir(tmp):
+            fd = os.open(os.path.join(tmp, fname), os.O_RDONLY)
+            os.fsync(fd)
+            os.close(fd)
+        if os.path.isdir(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        with open(os.path.join(self.directory, "LATEST.tmp"), "w") as f:
+            f.write(str(step))
+        os.replace(os.path.join(self.directory, "LATEST.tmp"),
+                   os.path.join(self.directory, "LATEST"))
+        self._retain()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _retain(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore ----------------------------------------------------------------
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.directory):
+            m = re.fullmatch(r"step_(\d+)", d)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        p = os.path.join(self.directory, "LATEST")
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            step = int(f.read().strip())
+        if os.path.isdir(os.path.join(self.directory, f"step_{step:08d}")):
+            return step
+        # fall back to the newest fully-committed directory
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Pytree) -> Pytree:
+        """Restore into the structure of ``like`` (arrays or SDS stand-ins)."""
+        self.wait()
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        proc = jax.process_index()
+        leaves = jax.tree_util.tree_leaves_with_path(like)
+        out = []
+        for path, leaf in leaves:
+            name = f"p{proc:04d}_{_leaf_name(path)}.npy"
+            arr = np.load(os.path.join(d, name))
+            if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(
+                    f"checkpoint shape mismatch at {_leaf_name(path)}: "
+                    f"{arr.shape} vs {leaf.shape}")
+            out.append(arr)
+        treedef = jax.tree_util.tree_structure(like)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def restore_latest(self, like: Pytree) -> tuple[int, Pytree] | None:
+        step = self.latest_step()
+        if step is None:
+            return None
+        return step, self.restore(step, like)

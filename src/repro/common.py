@@ -1,0 +1,93 @@
+"""Small shared utilities: dtype resolution, initializers, pytree helpers."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Iterable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+_DTYPES = {
+    "float32": jnp.float32,
+    "bfloat16": jnp.bfloat16,
+    "float16": jnp.float16,
+    "int32": jnp.int32,
+    "int8": jnp.int8,
+}
+
+
+def dtype_of(name: str | jnp.dtype) -> jnp.dtype:
+    if isinstance(name, str):
+        return _DTYPES[name]
+    return name
+
+
+def truncated_normal_init(key: jax.Array, shape: tuple[int, ...], dtype,
+                          stddev: float | None = None,
+                          fan_in_axis: int = -2) -> jax.Array:
+    """Truncated-normal init with 1/sqrt(fan_in) default stddev."""
+    if stddev is None:
+        fan_in = shape[fan_in_axis] if len(shape) >= 2 else shape[0]
+        stddev = 1.0 / np.sqrt(max(fan_in, 1))
+    x = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * stddev
+    return x.astype(dtype)
+
+
+def zeros_init(key: jax.Array, shape: tuple[int, ...], dtype) -> jax.Array:
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key: jax.Array, shape: tuple[int, ...], dtype) -> jax.Array:
+    del key
+    return jnp.ones(shape, dtype)
+
+
+def split_keys(key: jax.Array, names: Iterable[str]) -> Mapping[str, jax.Array]:
+    names = list(names)
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))
+
+
+def tree_size_bytes(tree: Pytree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(np.prod(l.shape) * np.dtype(l.dtype).itemsize for l in leaves
+               if hasattr(l, "shape"))
+
+
+def tree_num_params(tree: Pytree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(np.prod(l.shape) for l in leaves if hasattr(l, "shape")))
+
+
+def cast_tree(tree: Pytree, dtype) -> Pytree:
+    dt = dtype_of(dtype)
+
+    def _cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dt)
+        return x
+
+    return jax.tree_util.tree_map(_cast, tree)
+
+
+def assert_no_nans(tree: Pytree, where: str = "") -> None:
+    """Host-side NaN check (tests/smoke only; pulls values to host)."""
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating):
+            if bool(jnp.any(~jnp.isfinite(leaf))):
+                name = jax.tree_util.keystr(path)
+                raise AssertionError(f"non-finite values at {where}{name}")
+
+
+def shape_dtype(shape: tuple[int, ...], dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype_of(dtype))
+
+
+def abstractify(tree: Pytree) -> Pytree:
+    """Concrete pytree -> ShapeDtypeStruct pytree (for lowering)."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)

@@ -1,0 +1,54 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+`input_specs(cfg, shape)` returns the *data* arguments of the step function
+selected by ``shape.kind`` (train/prefill/decode); the dry-run combines them
+with abstract params/optimizer-state from the model table.  Nothing here
+allocates device memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import shape_dtype
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.registry import fns_for
+
+
+def _lm_batch(cfg: ModelConfig, B: int, S: int, *, labels: bool):
+    d = {"tokens": shape_dtype((B, S), "int32")}
+    if labels:
+        d["labels"] = shape_dtype((B, S), "int32")
+    if cfg.m_rope:
+        d["positions"] = shape_dtype((3, B, S), "int32")
+    if cfg.family == "audio":
+        d["frames"] = shape_dtype(
+            (B, cfg.encdec.num_encoder_frames, cfg.d_model), "bfloat16")
+    return d
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                cache_dtype: str = "bfloat16"):
+    """Returns (batch_specs, extra) where extra holds decode-state specs."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "cnn":
+        d = {"images": shape_dtype((B, 224, 224, 3), "float32")}
+        if shape.kind == "train":
+            d["labels"] = shape_dtype((B,), "int32")
+        return d, None
+    if shape.kind == "train":
+        return _lm_batch(cfg, B, S, labels=True), None
+    if shape.kind == "prefill":
+        return _lm_batch(cfg, B, S, labels=False), None
+    if shape.kind == "decode":
+        fns = fns_for(cfg)
+        state = jax.eval_shape(
+            lambda: fns.init_decode_state(cfg, B, S, cache_dtype))
+        tokens = shape_dtype((B, 1), "int32")
+        return {"tokens": tokens}, state
+    raise ValueError(shape.kind)
+
+
+def abstract_params(cfg: ModelConfig):
+    fns = fns_for(cfg)
+    return jax.eval_shape(lambda: fns.init(cfg, jax.random.PRNGKey(0)))

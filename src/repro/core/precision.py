@@ -1,0 +1,74 @@
+"""Precision policies + the paper's §4.2 error-delta estimators.
+
+The paper checks that FP16 on the VPU is inference-safe vs the FP32 CPU
+reference: (a) top-1 error differs by only 0.09 %, (b) mean absolute
+confidence difference (on top-1-correct images) is 0.44 %.  We reproduce
+both estimators exactly; on TPU the reduced precision of interest is bf16
+(and fp16 for parity with the paper), so the policy covers both.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import cast_tree
+
+
+@dataclass(frozen=True)
+class PrecisionPolicy:
+    """What dtype each tensor class uses."""
+    name: str
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    cache_dtype: str = "bfloat16"
+
+    def apply_to_config(self, cfg):
+        return cfg.replace(param_dtype=self.param_dtype,
+                           compute_dtype=self.compute_dtype)
+
+    def cast_params(self, params):
+        return cast_tree(params, self.param_dtype)
+
+
+FP32 = PrecisionPolicy("fp32")
+BF16 = PrecisionPolicy("bf16", param_dtype="float32",
+                       compute_dtype="bfloat16")
+FP16 = PrecisionPolicy("fp16", param_dtype="float16",
+                       compute_dtype="float16", cache_dtype="float16")
+POLICIES = {p.name: p for p in (FP32, BF16, FP16)}
+
+
+# --- paper §4.2 estimators ---------------------------------------------------
+
+def top1_error_rate(probs: np.ndarray, labels: np.ndarray) -> float:
+    """Fraction of images whose argmax != label (top-1 estimation)."""
+    pred = np.argmax(probs, axis=-1)
+    return float(np.mean(pred != labels))
+
+
+def top1_delta(probs_a: np.ndarray, probs_b: np.ndarray,
+               labels: np.ndarray) -> float:
+    """|top-1 error(a) - top-1 error(b)| (paper Fig 7a quantity)."""
+    return abs(top1_error_rate(probs_a, labels) -
+               top1_error_rate(probs_b, labels))
+
+
+def confidence_delta(probs_a: np.ndarray, probs_b: np.ndarray,
+                     labels: np.ndarray) -> float:
+    """Mean |confidence_a - confidence_b| over images both predict correctly
+    ("after filtering the top-1 miss-predictions", paper Fig 7b)."""
+    pa, pb = np.argmax(probs_a, -1), np.argmax(probs_b, -1)
+    both = (pa == labels) & (pb == labels)
+    if not np.any(both):
+        return float("nan")
+    ca = np.max(probs_a, -1)[both]
+    cb = np.max(probs_b, -1)[both]
+    return float(np.mean(np.abs(ca - cb)))
+
+
+def prediction_agreement(probs_a: np.ndarray, probs_b: np.ndarray) -> float:
+    """Fraction of inputs where both precisions pick the same top-1 class."""
+    return float(np.mean(np.argmax(probs_a, -1) == np.argmax(probs_b, -1)))

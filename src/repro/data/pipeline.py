@@ -1,0 +1,125 @@
+"""Data pipeline: deterministic synthetic sources + host-side prefetch.
+
+The real ILSVRC-2012 dataset and pretrained Caffe weights are not available
+offline, so sources are synthetic-but-deterministic (seeded); the paper's
+quantities we reproduce (scaling, precision deltas, throughput/W) do not
+depend on the actual pixels.  The pipeline shape matches production: an
+iterator of host batches, a background prefetch thread, and per-host
+sharding of the global batch.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator
+
+import jax
+import numpy as np
+
+
+class SyntheticTokens:
+    """LM token stream: (tokens, labels) with labels = next token."""
+
+    def __init__(self, cfg, batch: int, seq_len: int, *, seed: int = 0):
+        self.cfg = cfg
+        self.batch = batch
+        self.seq_len = seq_len
+        self.rng = np.random.default_rng(seed)
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        # a deterministic, slightly-structured stream (zipfian-ish ids)
+        z = self.rng.zipf(1.3, size=(self.batch, self.seq_len + 1))
+        toks = (z % self.cfg.vocab_size).astype(np.int32)
+        out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if self.cfg.m_rope:
+            pos = np.broadcast_to(np.arange(self.seq_len, dtype=np.int32),
+                                  (self.batch, self.seq_len))
+            out["positions"] = np.broadcast_to(pos, (3, *pos.shape)).copy()
+        if self.cfg.family == "audio":
+            out["frames"] = self.rng.standard_normal(
+                (self.batch, self.cfg.encdec.num_encoder_frames,
+                 self.cfg.d_model), dtype=np.float32)
+        return out
+
+
+class SyntheticImages:
+    """ILSVRC-like image stream for GoogLeNet: (images, labels).
+
+    Images are seeded Gaussian blobs around class-dependent means so that a
+    *deterministic* mapping image->class exists (the FP16-vs-FP32 comparison
+    needs the same inputs on both precisions, not real photos).
+    """
+
+    def __init__(self, num_classes: int = 1000, batch: int = 8,
+                 size: int = 224, *, seed: int = 0):
+        self.num_classes = num_classes
+        self.batch = batch
+        self.size = size
+        self.rng = np.random.default_rng(seed)
+
+    def sample(self, n: int) -> dict:
+        labels = self.rng.integers(0, self.num_classes, size=n).astype(np.int32)
+        base = (labels[:, None, None, None].astype(np.float32)
+                / self.num_classes - 0.5)
+        noise = self.rng.standard_normal(
+            (n, self.size, self.size, 3), dtype=np.float32)
+        return {"images": base + 0.5 * noise, "labels": labels}
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> dict:
+        return self.sample(self.batch)
+
+
+class Prefetcher:
+    """Background-thread prefetch of host batches (depth-bounded queue)."""
+
+    def __init__(self, it: Iterator[dict], depth: int = 2):
+        self.it = it
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self.thread = threading.Thread(target=self._run, daemon=True)
+        self.thread.start()
+
+    def _run(self):
+        try:
+            for item in self.it:
+                if self._stop.is_set():
+                    return
+                self.q.put(item)
+        finally:
+            self.q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self.q.get()
+        if item is None:
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop.set()
+
+
+def shard_batch(batch: dict, mesh, rules) -> dict:
+    """Place a host batch onto the mesh with the policy's batch sharding."""
+    from jax.sharding import NamedSharding
+    out = {}
+    for k, v in batch.items():
+        if k == "positions" and v.ndim >= 3 and v.shape[0] == 3:
+            axes = (None, "batch", "seq")
+        elif v.ndim == 1:
+            axes = ("batch",)
+        elif v.ndim == 2:
+            axes = ("batch", "seq")
+        else:
+            axes = ("batch",) + (None,) * (v.ndim - 1)
+        spec = rules.spec([a for a in axes])
+        out[k] = jax.device_put(v, NamedSharding(mesh, spec))
+    return out

@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (  # noqa: F401
+    ShardingRules,
+    constrain,
+    current_rules,
+    logical_to_spec,
+    rules_for,
+    use_rules,
+)

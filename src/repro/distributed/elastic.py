@@ -1,0 +1,66 @@
+"""Elastic re-meshing: shrink the data axis on device loss and re-shard
+state onto the surviving mesh.
+
+Policy (1000+-node posture): the `model` (TP/EP) axis is sacred — losing a
+chip inside a TP group kills the whole replica group, so recovery drops an
+integer number of data-parallel rows and continues with a smaller global
+batch (or the same batch via more grad-accum).  The pod axis behaves like
+the data axis one level up.
+
+On this container the "devices" are XLA host-platform placeholders, so the
+re-shard is exercised with real device_puts in tests; on a real fleet the
+same code runs after the cluster manager returns the surviving topology.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed.sharding import ShardingRules
+
+Pytree = Any
+
+
+def surviving_mesh(mesh: Mesh, lost_device_ids: set[int]) -> Mesh:
+    """Rebuild the mesh without the data-rows containing lost devices.
+
+    mesh.devices has shape (*outer, data, model) — we drop rows along the
+    -2 (data) axis that contain any lost device.
+    """
+    devs = mesh.devices
+    axis_names = mesh.axis_names
+    data_axis = len(devs.shape) - 2
+    keep_rows = []
+    for i in range(devs.shape[data_axis]):
+        row = np.take(devs, i, axis=data_axis)
+        ids = {d.id for d in row.flatten()}
+        if not (ids & lost_device_ids):
+            keep_rows.append(i)
+    if not keep_rows:
+        raise RuntimeError("no surviving data rows — cannot re-mesh")
+    new_devs = np.take(devs, keep_rows, axis=data_axis)
+    return Mesh(new_devs, axis_names,
+                axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+
+
+def reshard(tree: Pytree, axes_tree: Pytree, new_mesh: Mesh,
+            rules: ShardingRules) -> Pytree:
+    """Re-place every leaf onto the new mesh under the same logical axes."""
+    def _is_axes_leaf(t):
+        return (isinstance(t, tuple) and not hasattr(t, "_fields")
+                and all(x is None or isinstance(x, (str, tuple)) for x in t))
+
+    shardings = jax.tree_util.tree_map(
+        lambda axes: NamedSharding(new_mesh, rules.spec(list(axes))),
+        axes_tree, is_leaf=_is_axes_leaf)
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, s), tree, shardings)
+
+
+def shrink_batch(batch_size: int, old_rows: int, new_rows: int) -> int:
+    """Largest batch divisible by the surviving data rows."""
+    per = batch_size // old_rows
+    return per * new_rows

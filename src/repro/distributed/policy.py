@@ -1,0 +1,145 @@
+"""Sharding policy glue: NamedShardings for every pytree a step touches.
+
+Builds, per (arch x shape x mesh) cell: parameter shardings (from the param
+tables' logical axes), optimizer-state shardings (derived by the optimizer
+from param axes), decode-state shardings (per family), and input-batch
+shardings.  This is the one place the dry-run, trainer, and serving launcher
+get their in/out_shardings from.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import ShardingRules, rules_for
+from repro.models import encdec, hybrid, recurrent, transformer
+from repro.models.layers.module import axes_of
+from repro.models.registry import fns_for
+
+
+def _is_axes_leaf(t) -> bool:
+    """Plain tuple of axis names (NamedTuples are containers, not leaves)."""
+    return (isinstance(t, tuple) and not hasattr(t, "_fields")
+            and all(x is None or isinstance(x, (str, tuple)) for x in t))
+
+
+def _to_shardings(axes_tree, mesh: Mesh, rules: ShardingRules):
+    def conv(axes):
+        return NamedSharding(mesh, rules.spec(list(axes)))
+    return jax.tree_util.tree_map(conv, axes_tree, is_leaf=_is_axes_leaf)
+
+
+def param_axes(cfg: ModelConfig):
+    return axes_of(fns_for(cfg).table(cfg))
+
+
+def param_shardings(cfg, mesh, rules):
+    return _to_shardings(param_axes(cfg), mesh, rules)
+
+
+def opt_state_shardings(cfg, optimizer, mesh, rules):
+    return _to_shardings(optimizer.state_axes(param_axes(cfg)), mesh, rules)
+
+
+# --- decode state -----------------------------------------------------------
+
+def decode_state_axes(cfg: ModelConfig, cache_dtype: str = "bfloat16"):
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        if cache_dtype == "int8":
+            return transformer.QuantKVCache(
+                k=("layers", "batch", "kv_seq", "kv_heads", None),
+                v=("layers", "batch", "kv_seq", "kv_heads", None),
+                k_scale=("layers", "batch", "kv_seq", "kv_heads"),
+                v_scale=("layers", "batch", "kv_seq", "kv_heads"),
+                length=("batch",))
+        return transformer.KVCache(
+            k=("layers", "batch", "kv_seq", "kv_heads", None),
+            v=("layers", "batch", "kv_seq", "kv_heads", None),
+            length=("batch",))
+    if fam == "hybrid":
+        return hybrid.HybridState(
+            conv_seg=(None, None, "batch", None, "ff"),
+            ssm_seg=(None, None, "batch", "heads", None, None),
+            conv_tail=(None, "batch", None, "ff"),
+            ssm_tail=(None, "batch", "heads", None, None),
+            kv_k=(None, "batch", "kv_seq", "kv_heads", None),
+            kv_v=(None, "batch", "kv_seq", "kv_heads", None),
+            length=("batch",))
+    if fam == "ssm":
+        from repro.models.layers.xlstm import MLSTMState, SLSTMState
+        states = []
+        for i in range(cfg.num_layers):
+            if i % cfg.xlstm.slstm_every == 1:
+                states.append(SLSTMState(h=("batch", None), c=("batch", None),
+                                         n=("batch", None), m=("batch", None)))
+            else:
+                states.append(MLSTMState(conv=("batch", None, "ff"),
+                                         mem=("batch", "heads", None, None)))
+        return {"states": states, "length": ("batch",)}
+    if fam == "audio":
+        return encdec.EncDecState(
+            self_k=("layers", "batch", "kv_seq", "kv_heads", None),
+            self_v=("layers", "batch", "kv_seq", "kv_heads", None),
+            cross_k=("layers", "batch", None, "kv_heads", None),
+            cross_v=("layers", "batch", None, "kv_heads", None),
+            length=("batch",))
+    raise ValueError(fam)
+
+
+def decode_state_shardings(cfg, mesh, rules, cache_dtype: str = "bfloat16"):
+    return _to_shardings(decode_state_axes(cfg, cache_dtype), mesh, rules)
+
+
+# --- inputs -------------------------------------------------------------------
+
+def batch_axes_for(name: str, ndim: int):
+    if name == "positions":
+        return (None, "batch", "seq")
+    if name == "frames":
+        return ("batch", None, None)
+    if name == "images":
+        return ("batch", None, None, None)
+    if ndim == 1:
+        return ("batch",)
+    return ("batch", "seq")[:ndim] if ndim <= 2 else \
+        ("batch",) + (None,) * (ndim - 1)
+
+
+def batch_shardings(batch_specs: dict, mesh, rules):
+    return {k: NamedSharding(mesh, rules.spec(list(batch_axes_for(k, v.ndim))))
+            for k, v in batch_specs.items()}
+
+
+def sharded_bytes_per_device(sds_tree, shardings_tree, mesh: Mesh) -> int:
+    """Exact per-device bytes of a pytree under NamedShardings (analytic —
+    not subject to the CPU backend's bf16->f32 legalization inflation)."""
+    import numpy as np
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def leaf_bytes(sds, sh) -> int:
+        n = int(np.prod(sds.shape)) if sds.shape else 1
+        n *= np.dtype(sds.dtype).itemsize
+        denom = 1
+        for entry in sh.spec:
+            if entry is None:
+                continue
+            for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                denom *= sizes.get(ax, 1)
+        return -(-n // denom)
+
+    leaves_s = jax.tree_util.tree_leaves(sds_tree)
+    leaves_h = jax.tree_util.tree_leaves(
+        shardings_tree, is_leaf=lambda x: isinstance(x, NamedSharding))
+    assert len(leaves_s) == len(leaves_h), (len(leaves_s), len(leaves_h))
+    return sum(leaf_bytes(s, h) for s, h in zip(leaves_s, leaves_h))
+
+
+# --- cell bundle ----------------------------------------------------------------
+
+def cell_policy(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, **overrides):
+    """Everything the dry-run / launcher needs for one cell."""
+    rules = rules_for(cfg, shape, mesh, **overrides)
+    return rules

@@ -1,0 +1,225 @@
+"""Logical-axis sharding: rules, constraints, and per-arch policies.
+
+Model code annotates activations/params with *logical* axis names ("batch",
+"heads", "embed", ...).  A :class:`ShardingRules` maps logical names to mesh
+axes; policies in :func:`rules_for` pick the mapping per (arch x shape x mesh).
+
+Outside a mesh/rules context every constraint is a no-op, so the same model
+code runs in single-device tests and pod-scale dry-runs.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# Logical axis vocabulary (see DESIGN.md §4):
+#   batch      activation batch dim
+#   seq        activation sequence dim
+#   kv_seq     KV-cache sequence dim (context parallelism during decode)
+#   embed      model dim of params (FSDP shard axis)
+#   embed_act  model dim of activations (sequence-parallel regions only)
+#   heads      attention query heads (TP)
+#   kv_heads   attention KV heads (TP when divisible, else replicated)
+#   ff         feed-forward hidden (TP)
+#   vocab      vocabulary dim (TP)
+#   experts    MoE expert dim (EP)
+#   ff_expert  per-expert hidden dim
+#   layers     stacked-layer scan dim (never sharded)
+#   state      SSM/xLSTM recurrent state dims (never sharded)
+#   conv       conv kernel spatial dims (never sharded)
+
+Axis = Any  # str | tuple[str, ...] | None
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    rules: Mapping[str, Axis] = field(default_factory=dict)
+
+    def spec(self, axes: Sequence[str | None]) -> P:
+        parts = []
+        for ax in axes:
+            if ax is None:
+                parts.append(None)
+            else:
+                parts.append(self.rules.get(ax))
+        # Trim trailing Nones for tidier specs.
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+
+_STATE = threading.local()
+
+
+def current_rules() -> ShardingRules | None:
+    return getattr(_STATE, "rules", None)
+
+
+def current_mesh() -> Mesh | None:
+    m = getattr(_STATE, "mesh", None)
+    if m is not None:
+        return m
+    # Fall back to an ambient `with mesh:` context if one is active.
+    env = jax._src.mesh.thread_resources.env  # noqa: SLF001
+    return env.physical_mesh if not env.physical_mesh.empty else None
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules, mesh: Mesh | None = None):
+    prev_r = getattr(_STATE, "rules", None)
+    prev_m = getattr(_STATE, "mesh", None)
+    _STATE.rules, _STATE.mesh = rules, mesh
+    try:
+        yield rules
+    finally:
+        _STATE.rules, _STATE.mesh = prev_r, prev_m
+
+
+def logical_to_spec(axes: Sequence[str | None],
+                    rules: ShardingRules | None = None) -> P:
+    rules = rules or current_rules()
+    if rules is None:
+        return P()
+    return rules.spec(axes)
+
+
+def constrain(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Annotate ``x`` with logical axes; no-op without active rules/mesh."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.spec(axes)
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, axes: Sequence[str | None],
+                   rules: ShardingRules | None = None) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(axes, rules))
+
+
+# ---------------------------------------------------------------------------
+# Policies
+# ---------------------------------------------------------------------------
+
+def _mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Closed-form parameter-count estimate used for policy decisions."""
+    d, L = cfg.d_model, cfg.num_layers
+    attn = d * cfg.q_dim + 2 * d * cfg.kv_dim + cfg.q_dim * d
+    if cfg.moe is not None:
+        m = cfg.moe
+        routed = m.num_experts * 3 * d * m.d_ff_expert
+        shared = m.num_shared_experts * 3 * d * m.d_ff_shared
+        router = d * m.num_experts
+        moe_layers = L - m.first_k_dense
+        ffn = moe_layers * (routed + shared + router)
+        ffn += m.first_k_dense * 3 * d * (m.d_ff_dense or cfg.d_ff)
+        ffn_per_layer = 0
+    else:
+        ffn_per_layer = 3 * d * cfg.d_ff
+        ffn = L * ffn_per_layer
+    embed = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    return L * attn + ffn + embed
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: only top-k + shared experts count)."""
+    if cfg.moe is None:
+        return param_count(cfg)
+    d, L, m = cfg.d_model, cfg.num_layers, cfg.moe
+    attn = d * cfg.q_dim + 2 * d * cfg.kv_dim + cfg.q_dim * d
+    routed = m.top_k * 3 * d * m.d_ff_expert
+    shared = m.num_shared_experts * 3 * d * m.d_ff_shared
+    moe_layers = L - m.first_k_dense
+    ffn = moe_layers * (routed + shared + d * m.num_experts)
+    ffn += m.first_k_dense * 3 * d * (m.d_ff_dense or cfg.d_ff)
+    embed = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    return L * attn + ffn + embed
+
+
+# Models above this size get FSDP (params sharded on the data axis too).
+FSDP_THRESHOLD_PARAMS = 8e9
+
+
+def rules_for(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+              *, fsdp: bool | None = None,
+              seq_shard_kv: bool | None = None) -> ShardingRules:
+    """Pick the sharding policy for one (arch x shape x mesh) cell."""
+    model_sz = _mesh_axis_size(mesh, "model")
+    data_sz = _mesh_axis_size(mesh, "data")
+    pod_sz = _mesh_axis_size(mesh, "pod")
+    has_pod = "pod" in mesh.axis_names
+
+    n_params = param_count(cfg)
+    if fsdp is None:
+        fsdp = n_params >= FSDP_THRESHOLD_PARAMS and shape.kind == "train"
+        # Serving giant models: weights must still be spread beyond TP to fit
+        # (bf16 serving params; keep per-chip weight share under ~2 GB).
+        if shape.kind != "train":
+            fsdp = n_params * 2 / (model_sz or 1) > 2e9
+    if seq_shard_kv is None:
+        # Context-parallel KV cache: decode runs the LSE-merge shard_map path;
+        # prefill lays its returned cache out the same way so the decode step
+        # can consume it without a reshard.
+        seq_shard_kv = shape.kind in ("decode", "prefill")
+
+    batch_axes: Axis = ("pod", "data") if has_pod else ("data",)
+    dp_total = data_sz * (pod_sz if has_pod else 1)
+    if shape.global_batch % dp_total != 0 or shape.global_batch < dp_total:
+        # e.g. long_500k batch=1: replicate batch rather than pad.
+        batch_axes = None
+
+    heads_axis: Axis = "model" if cfg.num_heads % max(model_sz, 1) == 0 else None
+    kv_heads_axis: Axis = "model" if cfg.num_kv_heads % max(model_sz, 1) == 0 else None
+    # Odd vocabularies (e.g. whisper's 51865) cannot shard across the model
+    # axis; replicate the embedding/LM head instead of padding the table.
+    vocab_axis: Axis = "model" if cfg.vocab_size % max(model_sz, 1) == 0 else None
+
+    rules: dict[str, Axis] = {
+        "batch": batch_axes,
+        "seq": None,
+        # MoE dispatch region: sequence sharded over the model axis so every
+        # device owns a disjoint token slice before the EP all-to-all.
+        "seq_model": "model",
+        # Sequence-parallel residual stream (training): the scan-carried
+        # activations between blocks shard their seq dim over the model axis,
+        # cutting saved-carry memory by |model|; XLA turns the TP all-reduce
+        # at block exit into reduce-scatter + all-gather (same bytes).
+        "seq_sp": "model" if (shape.kind == "train"
+                              and shape.seq_len % max(model_sz, 1) == 0)
+                  else None,
+        "kv_seq": "model" if seq_shard_kv else None,
+        "embed": "data" if fsdp else None,
+        "embed_act": None,
+        "heads": heads_axis,
+        "kv_heads": kv_heads_axis,
+        "ff": "model",
+        "vocab": vocab_axis,
+        "experts": "model",
+        "ff_expert": None,
+        "layers": None,
+        "state": None,
+        "conv": None,
+    }
+    if cfg.moe is not None:
+        # EP owns the model axis for expert weights; dense-part TP unchanged.
+        rules["ff_expert"] = None
+    # When decode KV is sequence-sharded, attention runs distributed over
+    # kv_seq; KV heads stay local to avoid double-sharding the cache.
+    if seq_shard_kv:
+        rules["kv_heads"] = None
+    return ShardingRules(rules)

@@ -1,0 +1,70 @@
+"""Implicit-GEMM 2-D convolution for the GoogLeNet hot-spot — Pallas TPU.
+
+GoogLeNet feature maps are small (<= 56x56 after the stem, <= 2.5 MiB fp32
+per image including halos), so the whole padded map is staged into VMEM
+once per (image, C_out block) and the K_h x K_w spatial taps unroll into
+shifted (H*W, C_in) x (C_in, bc) GEMMs on the MXU — im2col without ever
+materializing patches in HBM.  This mirrors what the paper's SIPP + SHAVE
+pipeline does with 5x5 line buffers in the 2 MB CMX, scaled to VMEM sizes.
+
+Oracle: `models.layers.conv.conv2d` (XLA conv_general_dilated).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, kh: int, kw: int,
+                 stride: int, hout: int, wout: int):
+    cin = x_ref.shape[3]
+    acc = jnp.zeros((hout * wout, o_ref.shape[3]), jnp.float32)
+    x = x_ref[0]                                          # (Hp, Wp, Cin)
+    for i in range(kh):
+        for j in range(kw):
+            xs = jax.lax.slice(
+                x, (i, j, 0),
+                (i + (hout - 1) * stride + 1, j + (wout - 1) * stride + 1,
+                 cin),
+                (stride, stride, 1))                      # (hout, wout, Cin)
+            acc += jax.lax.dot_general(
+                xs.reshape(hout * wout, cin), w_ref[i, j],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+    acc += b_ref[...].astype(jnp.float32)[None, :]
+    o_ref[0] = acc.reshape(hout, wout, -1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "bc", "interpret"))
+def conv2d(x: jax.Array, w: jax.Array, b: jax.Array, *, stride: int = 1,
+           bc: int = 128, interpret: bool = False) -> jax.Array:
+    """SAME conv. x: (B, H, W, Cin); w: (KH, KW, Cin, Cout); b: (Cout,)."""
+    B, H, W, Cin = x.shape
+    KH, KW, _, Cout = w.shape
+    hout = -(-H // stride)
+    wout = -(-W // stride)
+    pad_h = max((hout - 1) * stride + KH - H, 0)
+    pad_w = max((wout - 1) * stride + KW - W, 0)
+    xp = jnp.pad(x, ((0, 0), (pad_h // 2, pad_h - pad_h // 2),
+                     (pad_w // 2, pad_w - pad_w // 2), (0, 0)))
+    Hp, Wp = xp.shape[1], xp.shape[2]
+    bc = min(bc, Cout)
+    assert Cout % bc == 0, (Cout, bc)
+    return pl.pallas_call(
+        functools.partial(_conv_kernel, kh=KH, kw=KW, stride=stride,
+                          hout=hout, wout=wout),
+        grid=(B, Cout // bc),
+        in_specs=[
+            pl.BlockSpec((1, Hp, Wp, Cin), lambda n, c: (n, 0, 0, 0)),
+            pl.BlockSpec((KH, KW, Cin, bc), lambda n, c: (0, 0, 0, c)),
+            pl.BlockSpec((bc,), lambda n, c: (c,)),
+        ],
+        out_specs=pl.BlockSpec((1, hout, wout, bc),
+                               lambda n, c: (n, 0, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((B, hout, wout, Cout), x.dtype),
+        interpret=interpret,
+    )(xp, w, b)

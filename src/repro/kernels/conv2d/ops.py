@@ -1,0 +1,16 @@
+"""Jit'd wrapper with backend dispatch for the conv2d kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.conv2d.kernel import conv2d as _pallas
+from repro.kernels.conv2d.ref import conv2d_ref
+from repro.kernels.dispatch import use_pallas
+
+
+def conv2d(x, w, b, *, stride: int = 1, **block_kw):
+    if use_pallas():
+        interpret = jax.default_backend() != "tpu"
+        return _pallas(x, w, b, stride=stride, interpret=interpret,
+                       **block_kw)
+    return conv2d_ref(x, w, b, stride=stride)

@@ -1,0 +1,11 @@
+"""Oracle: XLA conv (same math as models.layers.conv.conv2d)."""
+from __future__ import annotations
+
+import jax
+
+
+def conv2d_ref(x, w, b, *, stride: int = 1):
+    out = jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), window_strides=(stride, stride),
+        padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + b.astype(x.dtype)

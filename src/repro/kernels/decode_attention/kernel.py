@@ -1,0 +1,96 @@
+"""Flash-decode: one query token vs a long KV cache — Pallas TPU.
+
+Grid (B, K_heads, S/bkv): for each (batch, kv-head) the G grouped query
+heads attend to KV blocks streamed through VMEM; running (m, l, acc) live
+in scratch, per-sequence valid length masks dead slots.  This is the
+split-K decode kernel whose distributed twin is the LSE-merge path in
+`distributed.collectives` (the per-shard partials there are exactly this
+kernel's (out, m, l) triple).
+
+Oracle: `models.layers.attention.chunked_attention` with kv_len masking.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, scale: float, bkv: int, n_kv: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, :, :]                         # (G, D)
+    k = k_ref[0, :, 0, :]                         # (bkv, D)
+    v = v_ref[0, :, 0, :]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    valid = len_ref[0, 0]
+    k_pos = ik * bkv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(k_pos < valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                           # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    m_safe = jnp.maximum(m_new, NEG_INF / 2)
+    p = jnp.exp(s - m_safe)
+    corr = jnp.exp(jnp.minimum(m_prev - m_new, 0.0))
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finalize():
+        o_ref[0, 0, :, :] = (acc_ref[...] /
+                             jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bkv", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, *, bkv: int = 1024,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B, H, D); k/v: (B, S, K, D); lengths: (B,) valid KV per sequence.
+
+    Returns (B, H, D).
+    """
+    B, H, D = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    bkv = min(bkv, S)
+    assert S % bkv == 0, (S, bkv)
+    n_kv = S // bkv
+    scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(B, K, G, D)
+    len2d = lengths.reshape(B, 1).astype(jnp.int32)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, bkv=bkv, n_kv=n_kv),
+        grid=(B, K, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, ik: (b, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((1, bkv, 1, D), lambda b, h, ik: (b, ik, h, 0)),
+            pl.BlockSpec((1, bkv, 1, D), lambda b, h, ik: (b, ik, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(len2d, qg, k, v)
+    return out.reshape(B, H, D)

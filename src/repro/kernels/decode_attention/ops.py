@@ -1,0 +1,15 @@
+"""Jit'd wrapper with backend dispatch for flash-decode."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention as _pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.dispatch import use_pallas
+
+
+def decode_attention(q, k, v, lengths, **block_kw):
+    if use_pallas():
+        interpret = jax.default_backend() != "tpu"
+        return _pallas(q, k, v, lengths, interpret=interpret, **block_kw)
+    return decode_attention_ref(q, k, v, lengths)

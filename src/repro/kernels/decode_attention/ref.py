@@ -1,0 +1,18 @@
+"""Oracle for flash-decode: chunked attention with kv_len masking."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers.attention import chunked_attention
+
+
+def decode_attention_ref(q, k, v, lengths, *, chunk=1024):
+    """q: (B, H, D); k/v: (B, S, K, D); lengths: (B,)."""
+    B, H, D = q.shape
+    S = k.shape[1]
+    out = chunked_attention(
+        q[:, None], k, v, causal=False,
+        q_positions=jnp.zeros((B, 1), jnp.int32),
+        kv_positions=jnp.arange(S, dtype=jnp.int32),
+        kv_len=lengths, chunk=chunk)
+    return out[:, 0]

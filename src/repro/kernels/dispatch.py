@@ -1,0 +1,36 @@
+"""Kernel backend dispatch.
+
+Pallas kernels target TPU; on this CPU-only container they execute in
+``interpret=True`` mode (Python evaluation of the kernel body), which is
+correct but slow — so the model layers default to their jnp oracles and
+kernels are opt-in (``enable_pallas()``), becoming the default on a real
+TPU backend.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+_STATE = threading.local()
+
+
+def use_pallas() -> bool:
+    import jax
+    forced = getattr(_STATE, "forced", None)
+    if forced is not None:
+        return forced
+    return jax.default_backend() == "tpu"
+
+
+def enable_pallas(on: bool = True) -> None:
+    _STATE.forced = on
+
+
+@contextlib.contextmanager
+def pallas_enabled(on: bool = True):
+    prev = getattr(_STATE, "forced", None)
+    _STATE.forced = on
+    try:
+        yield
+    finally:
+        _STATE.forced = prev

@@ -1,0 +1,107 @@
+"""Fused causal GQA flash attention (prefill) — Pallas TPU.
+
+Grid (B, H, S/bq, S/bkv), KV innermost; online-softmax running stats
+(m, l) and the fp32 accumulator live in VMEM scratch across KV steps.
+Blocks entirely above the causal diagonal are skipped with `pl.when`
+(halving prefill work); the diagonal block is masked elementwise.
+
+Default blocks bq=bkv=512, D=128: working set q(512x128x4) + k/v + acc
+~ 1 MiB — sized so one (q, kv) tile pair streams through the MXU while the
+next KV tile prefetches from HBM.  The jnp oracle is
+`models.layers.attention.chunked_attention`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, bq: int, bkv: int, n_kv: int, causal: bool):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _block():
+        q = q_ref[0, :, 0, :]                     # (bq, D)
+        k = k_ref[0, :, 0, :]                     # (bkv, D)
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bkv)
+        if causal:
+            q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (bq, bkv), 0)
+            k_pos = ik * bkv + jax.lax.broadcasted_iota(jnp.int32,
+                                                        (bq, bkv), 1)
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_prev = m_ref[...]                       # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        m_safe = jnp.maximum(m_new, NEG_INF / 2)
+        p = jnp.exp(s - m_safe)                   # (bq, bkv)
+        corr = jnp.exp(jnp.minimum(m_prev - m_new, 0.0))
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)   # (bq, D)
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = m_new
+
+    if causal:
+        # skip blocks strictly above the diagonal
+        pl.when(ik * bkv <= iq * bq + bq - 1)(_block)
+    else:
+        _block()
+
+    @pl.when(ik == n_kv - 1)
+    def _finalize():
+        o_ref[0, :, 0, :] = (acc_ref[...] /
+                             jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bkv",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 512, bkv: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, S, H, D); k/v: (B, S, K, D), H % K == 0. Returns (B, S, H, D)."""
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    bq, bkv = min(bq, S), min(bkv, S)
+    assert S % bq == 0 and S % bkv == 0, (S, bq, bkv)
+    scale = 1.0 / (D ** 0.5)
+    n_kv = S // bkv
+    grid = (B, H, S // bq, n_kv)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, bq=bq, bkv=bkv,
+                          n_kv=n_kv, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, bkv, 1, D),
+                         lambda b, h, iq, ik, _G=G: (b, ik, h // _G, 0)),
+            pl.BlockSpec((1, bkv, 1, D),
+                         lambda b, h, iq, ik, _G=G: (b, ik, h // _G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D),
+                               lambda b, h, iq, ik: (b, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

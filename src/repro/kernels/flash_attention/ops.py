@@ -1,0 +1,16 @@
+"""Jit'd wrapper with backend dispatch for prefill flash attention."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.dispatch import use_pallas
+from repro.kernels.flash_attention.kernel import flash_attention as _pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def flash_attention(q, k, v, *, causal: bool = True, **block_kw):
+    if use_pallas():
+        interpret = jax.default_backend() != "tpu"
+        return _pallas(q, k, v, causal=causal, interpret=interpret,
+                       **block_kw)
+    return flash_attention_ref(q, k, v, causal=causal)

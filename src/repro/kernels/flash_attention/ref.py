@@ -1,0 +1,6 @@
+"""Oracle: the shared chunked online-softmax attention."""
+from repro.models.layers.attention import chunked_attention
+
+
+def flash_attention_ref(q, k, v, *, causal=True, chunk=512):
+    return chunked_attention(q, k, v, causal=causal, chunk=chunk)

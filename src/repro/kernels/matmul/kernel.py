@@ -1,0 +1,57 @@
+"""Block GEMM with explicit VMEM tiling — the TPU adaptation of the paper's
+cited Ionica et al. Myriad-1 DGEMM (CMX tiles -> VMEM tiles, SHAVE VLIW
+lanes -> MXU 128x128 systolic array).
+
+Tiling: grid (M/bm, N/bn, K/bk); K is the innermost ("arbitrary") dimension
+so each (i, j) output tile accumulates over K in an fp32 VMEM scratch and
+writes once.  Default 512^3 blocks = 3 MiB fp32 working set per step —
+small against the ~128 MiB/core VMEM, MXU-aligned (multiples of 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(x: jax.Array, y: jax.Array, *, bm: int = 512, bn: int = 512,
+           bk: int = 512, interpret: bool = False) -> jax.Array:
+    """x: (M, K) @ y: (K, N) -> (M, N); fp32 accumulation in VMEM."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        f"shape ({m},{k})x({k},{n}) not divisible by blocks ({bm},{bn},{bk})"
+    n_k = k // bk
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, y)

@@ -1,0 +1,15 @@
+"""Jit'd public wrapper with backend dispatch for the block GEMM."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.dispatch import use_pallas
+from repro.kernels.matmul.kernel import matmul as matmul_pallas
+from repro.kernels.matmul.ref import matmul_ref
+
+
+def matmul(x: jax.Array, y: jax.Array, **block_kw) -> jax.Array:
+    if use_pallas():
+        interpret = jax.default_backend() != "tpu"
+        return matmul_pallas(x, y, interpret=interpret, **block_kw)
+    return matmul_ref(x, y)

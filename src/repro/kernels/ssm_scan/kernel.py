@@ -1,0 +1,90 @@
+"""Chunked SSD / decayed linear-attention scan — Pallas TPU.
+
+The shared recurrence behind Mamba-2 and mLSTM:
+
+    H_t = exp(d_t) H_{t-1} + exp(g_t) k_t v_t^T ;  y_t = q_t . H_t
+
+Grid (B, H, S/Q) with the chunk dimension innermost and sequential: the
+(N, P) fp32 state lives in VMEM scratch across chunk steps (the TPU
+analogue of keeping the working set resident in the Myriad's CMX between
+SIPP stages).  Per chunk: intra-chunk quadratic part on the MXU + rank-Q
+state update; cross-chunk recurrence is carried, never materialized to HBM.
+
+Oracle: `models.layers.ssm.chunked_linear_attn`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(q_ref, k_ref, v_ref, d_ref, g_ref, o_ref, state_ref, *,
+                chunk: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)     # (Q, N)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)     # (Q, P)
+    d = d_ref[0, :, 0].astype(jnp.float32)        # (Q,)
+    g = g_ref[0, :, 0].astype(jnp.float32)
+
+    cum = jnp.cumsum(d)                           # (Q,)
+    total = cum[-1]
+    # intra-chunk: w[i,j] = exp(cum_i - cum_j + g_j), i >= j
+    logw = cum[:, None] - cum[None, :] + g[None, :]
+    causal = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    w = jnp.where(causal, jnp.exp(jnp.minimum(logw, 30.0)), 0.0)
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    y_diag = jax.lax.dot_general(scores * w, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    # inter-chunk: y_off = exp(cum_i) * q_i . H_prev
+    h_prev = state_ref[...]                       # (N, P)
+    y_off = jnp.exp(jnp.minimum(cum, 30.0))[:, None] * jax.lax.dot_general(
+        q, h_prev, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[0, :, 0, :] = (y_diag + y_off).astype(o_ref.dtype)
+    # state update: H = exp(total) H + sum_j exp(total - cum_j + g_j) k_j v_j
+    wk = jnp.exp(jnp.minimum(total - cum + g, 30.0))[:, None]      # (Q,1)
+    s_c = jax.lax.dot_general(k * wk, v, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (N,P)
+    state_ref[...] = jnp.exp(jnp.minimum(total, 30.0)) * h_prev + s_c
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_scan(q: jax.Array, k: jax.Array, v: jax.Array,
+             log_decay: jax.Array, log_gate: jax.Array, *,
+             chunk: int = 128, interpret: bool = False) -> jax.Array:
+    """q/k: (B, S, H, N); v: (B, S, H, P); log_decay/log_gate: (B, S, H).
+
+    Returns y (B, S, H, P) fp32 (matching the oracle's accumulation dtype).
+    """
+    B, S, H, N = k.shape
+    P = v.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    grid = (B, H, S // chunk)
+    return pl.pallas_call(
+        functools.partial(_ssm_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, P), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, log_decay, log_gate)

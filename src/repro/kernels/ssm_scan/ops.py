@@ -1,0 +1,16 @@
+"""Jit'd wrapper with backend dispatch for the SSD chunk scan."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.dispatch import use_pallas
+from repro.kernels.ssm_scan.kernel import ssm_scan as _pallas
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+
+def ssm_scan(q, k, v, log_decay, log_gate, *, chunk: int = 128):
+    if use_pallas():
+        interpret = jax.default_backend() != "tpu"
+        return _pallas(q, k, v, log_decay, log_gate, chunk=chunk,
+                       interpret=interpret)
+    return ssm_scan_ref(q, k, v, log_decay, log_gate, chunk=chunk)

@@ -1,0 +1,7 @@
+"""Oracle: the shared chunked linear-recurrence core."""
+from repro.models.layers.ssm import chunked_linear_attn
+
+
+def ssm_scan_ref(q, k, v, log_decay, log_gate, *, chunk=128):
+    y, _ = chunked_linear_attn(q, k, v, log_decay, log_gate, chunk=chunk)
+    return y

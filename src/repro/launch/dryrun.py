@@ -1,0 +1,295 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver builds the real step function (train_step /
+prefill / decode), lowers it against ShapeDtypeStruct stand-ins with the
+cell's sharding policy, compiles for the production mesh, and records:
+
+  * ``compiled.memory_analysis()``  — proves the cell fits per-device HBM
+  * ``compiled.cost_analysis()``    — XLA's per-iteration FLOPs/bytes
+  * parsed-HLO totals (trip-count-corrected FLOPs, fusion-boundary bytes,
+    per-kind collective bytes)      — inputs to EXPERIMENTS.md §Roofline
+
+Artifacts land in ``artifacts/dryrun/<cell>.json``.  Any failure here
+(sharding mismatch, OOM at compile, unsupported collective) is a bug in the
+framework, not in the run.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out artifacts/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import registry as arch_registry
+from repro.configs.base import SHAPES_BY_NAME
+from repro.configs.specs import abstract_params, input_specs
+from repro.distributed import policy
+from repro.distributed.sharding import rules_for, use_rules
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import fns_for
+from repro.optim.optimizers import make_optimizer
+from repro.roofline.hlo_parse import analyze_hlo
+from repro.training.train_step import make_train_step
+from repro.distributed.sharding import active_param_count, param_count
+
+
+def build_lowerable(cfg, shape, mesh, rules, *, overrides=None):
+    """Returns (fn, jit_kwargs, abstract_args) for the cell's step."""
+    fns = fns_for(cfg)
+    ov = overrides or {}
+    p_sh = policy.param_shardings(cfg, mesh, rules)
+    p_sds = abstract_params(cfg)
+    cache_dtype = ov.get("cache_dtype", "bfloat16")
+    batch_specs, state_specs = input_specs(cfg, shape, cache_dtype)
+    b_sh = policy.batch_shardings(batch_specs, mesh, rules)
+    chunk = ov.get("chunk", {"train": 4096, "prefill": 2048,
+                             "decode": 1024}[shape.kind])
+
+    if shape.kind == "train":
+        optimizer = make_optimizer(cfg)
+        step = make_train_step(cfg, optimizer,
+                               accum=ov.get("accum", cfg.accum_steps),
+                               chunk=chunk)
+        o_sds = jax.eval_shape(optimizer.init, p_sds)
+        o_sh = policy.opt_state_shardings(cfg, optimizer, mesh, rules)
+        return (step,
+                dict(in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, None),
+                     donate_argnums=(0, 1)),
+                (p_sds, o_sds, batch_specs))
+
+    if shape.kind == "prefill":
+        s_sh = policy.decode_state_shardings(cfg, mesh, rules)
+
+        def step(params, batch):
+            return fns.prefill(cfg, params, batch, max_len=shape.seq_len,
+                               chunk=chunk)
+        return (step,
+                dict(in_shardings=(p_sh, b_sh),
+                     out_shardings=(None, s_sh)),
+                (p_sds, batch_specs))
+
+    if shape.kind == "decode":
+        s_sh = policy.decode_state_shardings(cfg, mesh, rules, cache_dtype)
+        t_sh = b_sh["tokens"]
+
+        def step(params, tokens, state):
+            return fns.decode(cfg, params, tokens, state,
+                              chunk=ov.get("decode_chunk", 2048))
+        return (step,
+                dict(in_shardings=(p_sh, t_sh, s_sh),
+                     out_shardings=(None, s_sh),
+                     donate_argnums=(2,)),
+                (p_sds, batch_specs["tokens"], state_specs))
+
+    raise ValueError(shape.kind)
+
+
+def exact_param_counts(cfg) -> tuple[int, int]:
+    """(total, active) parameter counts from the real abstract param tree
+    (the closed-form estimate in `sharding` is transformer-specific)."""
+    import numpy as np
+    leaves = jax.tree_util.tree_leaves(abstract_params(cfg))
+    total = int(sum(np.prod(l.shape) for l in leaves))
+    active = total
+    if cfg.moe is not None:
+        m = cfg.moe
+        moe_layers = cfg.num_layers - m.first_k_dense
+        routed = moe_layers * 3 * cfg.d_model * m.d_ff_expert
+        active = total - routed * (m.num_experts - m.top_k)
+    return total, active
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful FLOPs for the step: 6*N_active*D (train),
+    2*N_active*D (inference), D = tokens processed."""
+    _, n = exact_param_counts(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str | None = None, *, overrides=None,
+             verbose: bool = True) -> dict:
+    assignment = arch_registry.get(arch)
+    cfg = assignment.model
+    shape = SHAPES_BY_NAME[shape_name]
+    ov = overrides or {}
+    if ov.get("remat"):
+        cfg = cfg.replace(remat=ov["remat"])
+    if ov.get("capacity_factor") and cfg.moe is not None:
+        import dataclasses
+        cfg = cfg.replace(moe=dataclasses.replace(
+            cfg.moe, capacity_factor=ov["capacity_factor"]))
+    if ov.get("param_dtype"):
+        cfg = cfg.replace(param_dtype=ov["param_dtype"])
+    if shape_name in assignment.skipped:
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": "multi" if multi_pod else "single",
+               "status": "SKIP", "reason": assignment.skipped[shape_name]}
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            fname = f"{arch}__{shape_name}__{rec['mesh']}.json"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                json.dump(rec, f, indent=1)
+        if verbose:
+            print(f"[{rec['mesh']}] {arch} x {shape_name}: SKIP "
+                  f"({assignment.skipped[shape_name][:60]}...)")
+        return rec
+
+    if shape.kind != "train":
+        # Serving runs reduced precision (the paper's VPU-FP16 theme -> bf16
+        # on TPU): weights are cast once at load time.
+        cfg = cfg.replace(param_dtype="bfloat16")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for(cfg, shape, mesh, **{
+        k: v for k, v in (overrides or {}).items()
+        if k in ("fsdp", "seq_shard_kv")})
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "multi" if multi_pod else "single",
+           "devices": mesh.devices.size, "kind": shape.kind}
+    try:
+        fn, jit_kwargs, args = build_lowerable(cfg, shape, mesh, rules,
+                                               overrides=overrides)
+        with mesh, use_rules(rules, mesh):
+            t0 = time.time()
+            lowered = jax.jit(fn, **jit_kwargs).lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = analyze_hlo(compiled.as_text())
+        n_dev = mesh.devices.size
+        mf = model_flops(cfg, shape)
+        # analytic per-device state bytes (exact; CPU legalization-free)
+        analytic = {}
+        try:
+            p_sh = policy.param_shardings(cfg, mesh, rules)
+            p_sds = abstract_params(cfg)
+            analytic["param_bytes_per_device"] = \
+                policy.sharded_bytes_per_device(p_sds, p_sh, mesh)
+            if shape.kind == "train":
+                optimizer = make_optimizer(cfg)
+                o_sds = jax.eval_shape(optimizer.init, p_sds)
+                o_sh = policy.opt_state_shardings(cfg, optimizer, mesh, rules)
+                analytic["opt_bytes_per_device"] = \
+                    policy.sharded_bytes_per_device(o_sds, o_sh, mesh)
+            if shape.kind == "decode":
+                _, st = input_specs(cfg, shape)
+                s_sh = policy.decode_state_shardings(cfg, mesh, rules)
+                analytic["state_bytes_per_device"] = \
+                    policy.sharded_bytes_per_device(st, s_sh, mesh)
+        except Exception as e:   # noqa: BLE001
+            analytic["error"] = str(e)
+        rec.update({
+            "status": "OK",
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_bytes_per_device": (ma.argument_size_in_bytes
+                                          + ma.output_size_in_bytes
+                                          + ma.temp_size_in_bytes
+                                          - ma.alias_size_in_bytes),
+                # NOTE: the CPU backend legalizes bf16 ops via f32 converts
+                # (FloatNormalization), so temp_bytes over-reports the TPU
+                # target by up to 2x on bf16-heavy programs; `analytic` holds
+                # legalization-free state byte counts.
+                "analytic": analytic,
+            },
+            "xla_cost": {"flops_per_iter": ca.get("flops", 0.0),
+                         "bytes_per_iter": ca.get("bytes accessed", 0.0)},
+            "hlo": {
+                "flops_per_device": hlo.flops,
+                "dot_flops_per_device": hlo.dot_flops,
+                "bytes_per_device": hlo.bytes_fused,
+                "bytes_per_device_cpu_bound": hlo.bytes_accessed,
+                "collective_operand_bytes": hlo.collective_operand_bytes,
+                "collective_out_bytes": hlo.collective_out_bytes,
+                "collective_ring_bytes": hlo.collective_ring_bytes,
+                "collectives": hlo.collective_summary(),
+                "while_trips": hlo.while_trips,
+            },
+            "model": {
+                "params": exact_param_counts(cfg)[0],
+                "active_params": exact_param_counts(cfg)[1],
+                "model_flops_global": mf,
+                "useful_flops_ratio": (
+                    mf / (hlo.flops * n_dev) if hlo.flops else None),
+            },
+        })
+        if verbose:
+            print(f"[{rec['mesh']}] {arch} x {shape_name}: OK "
+                  f"compile={rec['compile_s']}s "
+                  f"peak/device={rec['memory']['peak_bytes_per_device']/2**30:.2f}GiB "
+                  f"hlo_flops/dev={hlo.flops:.3g} "
+                  f"coll_ring={hlo.collective_ring_bytes/2**20:.1f}MiB")
+            print("  memory_analysis:", ma)
+            print("  cost_analysis: flops/iter=%.4g bytes/iter=%.4g"
+                  % (ca.get("flops", 0.0), ca.get("bytes accessed", 0.0)))
+    except Exception as e:   # noqa: BLE001 — record and continue
+        rec.update({"status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+        if verbose:
+            print(f"[{rec['mesh']}] {arch} x {shape_name}: FAIL {e}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{arch}__{shape_name}__{rec['mesh']}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--accum", type=int, default=None,
+                    help="override grad-accum microbatches (train cells)")
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="override attention KV-chunk size")
+    ap.add_argument("--cache-dtype", default=None,
+                    choices=("bfloat16", "int8"),
+                    help="KV-cache dtype for decode cells")
+    ap.add_argument("--remat", default=None, choices=("none", "full", "dots"))
+    args = ap.parse_args()
+    overrides = {k: v for k, v in (("accum", args.accum),
+                                   ("chunk", args.chunk),
+                                   ("cache_dtype", args.cache_dtype),
+                                   ("remat", args.remat)) if v is not None}
+
+    archs = list(arch_registry.ARCH_IDS) if (args.all or not args.arch) \
+        else [args.arch]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    n_fail = 0
+    for arch in archs:
+        assignment = arch_registry.get(arch)
+        shapes = [args.shape] if args.shape else list(assignment.shapes)
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, args.out, overrides=overrides)
+                n_fail += rec["status"] == "FAIL"
+    print("FAILURES:", n_fail)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,104 @@
+"""GoogLeNet (Inception-v1) — the paper's evaluation network (BVLC
+GoogLeNet, Szegedy et al. CVPR'15), in JAX/NHWC.
+
+Auxiliary classifier heads are training-time only in the original; the
+paper only runs inference, so they are omitted (noted in DESIGN.md).  The
+3x3 conv hot-spot has a Pallas im2col kernel in `repro.kernels.conv2d`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import dtype_of
+from repro.models.layers.conv import (avg_pool, conv_table, global_avg_pool,
+                                      lrn, max_pool, relu_conv)
+from repro.models.layers.module import bias, init_table, weight
+
+# (1x1, 3x3reduce, 3x3, 5x5reduce, 5x5, pool-proj) per inception module
+INCEPTION_SPECS = {
+    "3a": (64, 96, 128, 16, 32, 32),
+    "3b": (128, 128, 192, 32, 96, 64),
+    "4a": (192, 96, 208, 16, 48, 64),
+    "4b": (160, 112, 224, 24, 64, 64),
+    "4c": (128, 128, 256, 24, 64, 64),
+    "4d": (112, 144, 288, 32, 64, 64),
+    "4e": (256, 160, 320, 32, 128, 128),
+    "5a": (256, 160, 320, 32, 128, 128),
+    "5b": (384, 192, 384, 48, 128, 128),
+}
+_STAGE_INPUT = {
+    "3a": 192, "3b": 256, "4a": 480, "4b": 512, "4c": 512, "4d": 512,
+    "4e": 528, "5a": 832, "5b": 832,
+}
+
+
+def inception_table(cin: int, spec):
+    c1, c3r, c3, c5r, c5, pp = spec
+    return {
+        "b1": conv_table(1, 1, cin, c1),
+        "b2r": conv_table(1, 1, cin, c3r),
+        "b2": conv_table(3, 3, c3r, c3),
+        "b3r": conv_table(1, 1, cin, c5r),
+        "b3": conv_table(5, 5, c5r, c5),
+        "b4": conv_table(1, 1, cin, pp),
+    }
+
+
+def inception(params, x: jax.Array) -> jax.Array:
+    b1 = relu_conv(params["b1"], x)
+    b2 = relu_conv(params["b2"], relu_conv(params["b2r"], x))
+    b3 = relu_conv(params["b3"], relu_conv(params["b3r"], x))
+    b4 = relu_conv(params["b4"], max_pool(x, 3, 1, "SAME"))
+    return jnp.concatenate([b1, b2, b3, b4], axis=-1)
+
+
+def model_table(cfg):
+    num_classes = cfg.vocab_size   # 1000 for ILSVRC
+    t = {
+        "stem1": conv_table(7, 7, 3, 64),
+        "stem2r": conv_table(1, 1, 64, 64),
+        "stem2": conv_table(3, 3, 64, 192),
+        "fc_w": weight((1024, num_classes), (None, "vocab"), stddev=0.01),
+        "fc_b": bias((num_classes,), ("vocab",)),
+    }
+    for name, spec in INCEPTION_SPECS.items():
+        t[f"inc{name}"] = inception_table(_STAGE_INPUT[name], spec)
+    return t
+
+
+def init(cfg, key: jax.Array):
+    return init_table(key, model_table(cfg), cfg.param_dtype)
+
+
+def forward(cfg, params, images: jax.Array) -> jax.Array:
+    """images: (B, 224, 224, 3) -> logits (B, num_classes) fp32."""
+    x = images.astype(dtype_of(cfg.compute_dtype))
+    x = relu_conv(params["stem1"], x, stride=2)          # 112x112x64
+    x = max_pool(x, 3, 2)                                # 56x56
+    x = lrn(x)
+    x = relu_conv(params["stem2r"], x)
+    x = relu_conv(params["stem2"], x)                    # 56x56x192
+    x = lrn(x)
+    x = max_pool(x, 3, 2)                                # 28x28
+    x = inception(params["inc3a"], x)
+    x = inception(params["inc3b"], x)
+    x = max_pool(x, 3, 2)                                # 14x14
+    for name in ("4a", "4b", "4c", "4d", "4e"):
+        x = inception(params[f"inc{name}"], x)
+    x = max_pool(x, 3, 2)                                # 7x7
+    x = inception(params["inc5a"], x)
+    x = inception(params["inc5b"], x)                    # 7x7x1024
+    x = global_avg_pool(x)                               # (B, 1024)
+    logits = (x.astype(jnp.float32) @ params["fc_w"].astype(jnp.float32)
+              + params["fc_b"].astype(jnp.float32))
+    return logits
+
+
+def predict(cfg, params, images: jax.Array):
+    """Paper-style inference output: (top1 label, confidence) per image."""
+    lg = forward(cfg, params, images)
+    probs = jax.nn.softmax(lg, axis=-1)
+    conf = jnp.max(probs, axis=-1)
+    label = jnp.argmax(probs, axis=-1)
+    return label, conf, probs

@@ -1,0 +1,276 @@
+"""Zamba2-style hybrid: Mamba-2 backbone with a weight-SHARED attention
+block applied every ``shared_attn_every`` layers.
+
+Structure (L layers, e = shared_attn_every):
+  [e mamba layers -> shared attn+MLP block] x (L // e)  +  (L % e) mamba tail
+
+The shared block's weights exist ONCE; each application gets its own KV
+cache.  Its input is proj(concat(hidden, embedding)) as in Zamba2 (per-
+application LoRA adapters are omitted — noted in DESIGN.md).
+
+Because the SSM state is O(1) in sequence length, this arch runs the
+``long_500k`` cell: decode state = per-layer Mamba states + one KV cache per
+shared-block application.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import dtype_of
+from repro.distributed.sharding import constrain
+from repro.models.layers import attention as A
+from repro.models.layers.embedding import embed, embedding_table, logits as lm_logits
+from repro.models.layers.mlp import swiglu, swiglu_table
+from repro.models.layers.module import init_table, stack_table, weight
+from repro.models.layers.norms import apply_norm, norm_table, rmsnorm
+from repro.models.layers import ssm as S
+
+
+class HybridState(NamedTuple):
+    """Decode state: stacked Mamba states + per-application KV caches."""
+    conv_seg: jax.Array    # (n_seg, e, B, K-1, ch)
+    ssm_seg: jax.Array     # (n_seg, e, B, H, N, P)
+    conv_tail: jax.Array   # (tail, B, K-1, ch)
+    ssm_tail: jax.Array    # (tail, B, H, N, P)
+    kv_k: jax.Array        # (n_seg, B, S, Kh, D)
+    kv_v: jax.Array
+    length: jax.Array      # (B,)
+
+
+def _segments(cfg) -> tuple[int, int, int]:
+    e = cfg.shared_attn_every
+    n_seg = cfg.num_layers // e
+    tail = cfg.num_layers - n_seg * e
+    return n_seg, e, tail
+
+
+def mamba_layer_table(cfg):
+    return {"norm": norm_table(cfg), "mamba": S.mamba_table(cfg)}
+
+
+def shared_block_table(cfg):
+    return {
+        "in_proj": weight((2 * cfg.d_model, cfg.d_model), ("embed", None)),
+        "ln1": norm_table(cfg),
+        "attn": A.attention_table(cfg),
+        "ln2": norm_table(cfg),
+        "mlp": swiglu_table(cfg.d_model, cfg.d_ff),
+    }
+
+
+def lm_table(cfg):
+    n_seg, e, tail = _segments(cfg)
+    t = {
+        "embed": embedding_table(cfg.vocab_size, cfg.d_model, cfg.tie_embeddings),
+        "seg_blocks": stack_table(stack_table(mamba_layer_table(cfg), e), n_seg),
+        "shared": shared_block_table(cfg),
+        "ln_f": norm_table(cfg),
+    }
+    if tail:
+        t["tail_blocks"] = stack_table(mamba_layer_table(cfg), tail)
+    return t
+
+
+def init(cfg, key: jax.Array):
+    return init_table(key, lm_table(cfg), cfg.param_dtype)
+
+
+def _mamba_residual(cfg, p, x, state=None, step=False, want_state=False):
+    h = apply_norm(cfg, p["norm"], x)
+    h = constrain(h, "batch", "seq", "embed_act")   # gather for the conv/SSD
+    if step:
+        out, new_state = S.mamba_step(cfg, p["mamba"], h, state)
+        return x + out, new_state
+    if want_state:
+        out, new_state = S.mamba_forward(cfg, p["mamba"], h, state,
+                                         return_state=True)
+        return constrain(x + out, "batch", "seq_sp", "embed_act"), new_state
+    out = S.mamba_forward(cfg, p["mamba"], h)
+    return constrain(x + out, "batch", "seq_sp", "embed_act"), None
+
+
+def _shared_attn(cfg, p, x, e0, positions, *, cache_k=None, cache_v=None,
+                 kv_len=None, chunk=1024):
+    """Apply the shared attention+MLP block. Returns (x, new_k, new_v)."""
+    z = jnp.concatenate([x, e0], axis=-1)
+    z = jnp.einsum("...c,cd->...d", z, p["in_proj"].astype(x.dtype))
+    h = apply_norm(cfg, p["ln1"], z)
+    if cache_k is None:
+        q, k, v = A.qkv_project(cfg, p["attn"], h, positions)
+        attn = A.chunked_attention(q, k, v, causal=True,
+                                   q_positions=positions,
+                                   kv_positions=positions, chunk=chunk)
+        nk, nv = k, v
+    else:
+        from repro.distributed.collectives import seq_sharded_decode_attention
+        q, k, v = A.qkv_project(cfg, p["attn"], h, positions)
+        attn, nk, nv = seq_sharded_decode_attention(
+            q, cache_k, cache_v, k, v, kv_len, chunk=chunk)
+    x = x + A.attn_output(cfg, p["attn"], attn)
+    h2 = apply_norm(cfg, p["ln2"], x)
+    x = x + swiglu(p["mlp"], h2)
+    return constrain(x, "batch", "seq_sp", "embed_act"), nk, nv
+
+
+def _forward_core(cfg, params, tokens, positions, *, remat,
+                  state: HybridState | None = None, collect=False,
+                  chunk=1024):
+    """Shared by train forward / prefill / decode(S==1 via step=False? no —
+    decode uses `decode_step`).  Returns (x, new_state_or_None)."""
+    compute_dt = dtype_of(cfg.compute_dtype)
+    n_seg, e, tail = _segments(cfg)
+    x = embed(params["embed"], tokens, compute_dt)
+    e0 = x
+    shared_p = params["shared"]
+
+    def seg_body(carry, seg):
+        h = carry
+        p_seg = seg
+
+        def layer_body(hh, p_layer):
+            hh, st = _mamba_residual(cfg, p_layer, hh,
+                                     want_state=collect)
+            return hh, st
+
+        h, states = jax.lax.scan(layer_body, h, p_seg)
+        h, nk, nv = _shared_attn(cfg, shared_p, h, e0, positions, chunk=chunk)
+        ys = (states, nk, nv) if collect else None
+        return h, ys
+
+    if remat and cfg.remat != "none":
+        seg_body = jax.checkpoint(
+            seg_body, policy=jax.checkpoint_policies.nothing_saveable,
+            prevent_cse=False)
+
+    x, seg_ys = jax.lax.scan(seg_body, x, params["seg_blocks"])
+
+    tail_states = None
+    if tail:
+        def tail_body(hh, p_layer):
+            hh, st = _mamba_residual(cfg, p_layer, hh, want_state=collect)
+            return hh, st
+        x, tail_states = jax.lax.scan(tail_body, x, params["tail_blocks"])
+
+    x = apply_norm(cfg, params["ln_f"], x)
+
+    new_state = None
+    if collect:
+        states, ks, vs = seg_ys
+        B = tokens.shape[0]
+        new_state = HybridState(
+            conv_seg=states.conv, ssm_seg=states.ssm,
+            conv_tail=(tail_states.conv if tail else
+                       jnp.zeros((0,) + states.conv.shape[2:], states.conv.dtype)),
+            ssm_tail=(tail_states.ssm if tail else
+                      jnp.zeros((0,) + states.ssm.shape[2:], states.ssm.dtype)),
+            kv_k=ks, kv_v=vs,
+            length=jnp.full((B,), tokens.shape[1], jnp.int32))
+    return x, new_state
+
+
+def forward(cfg, params, tokens, positions=None, *, remat=True, chunk=1024):
+    if positions is None:
+        B, Sq = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    x, _ = _forward_core(cfg, params, tokens, positions, remat=remat,
+                         chunk=chunk)
+    lg = lm_logits(params["embed"], x, cfg.tie_embeddings,
+                   cfg.final_logit_softcap)
+    return lg, jnp.zeros((), jnp.float32)
+
+
+def prefill(cfg, params, tokens, positions=None, *, cache_dtype="bfloat16",
+            max_len: int | None = None, chunk=1024):
+    """Prefill; KV caches sized to ``max_len`` (defaults to S)."""
+    B, Sq = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    x, st = _forward_core(cfg, params, tokens, positions, remat=False,
+                          collect=True, chunk=chunk)
+    cdt = dtype_of(cache_dtype)
+    max_len = max_len or Sq
+    def grow(c):
+        if max_len == Sq:
+            return c.astype(cdt)
+        padded = jnp.zeros(c.shape[:2] + (max_len,) + c.shape[3:], cdt)
+        return padded.at[:, :, :Sq].set(c.astype(cdt))
+    st = st._replace(kv_k=grow(st.kv_k), kv_v=grow(st.kv_v))
+    lg = lm_logits(params["embed"], x[:, -1:], cfg.tie_embeddings,
+                   cfg.final_logit_softcap)
+    return lg[:, 0], st
+
+
+def decode_step(cfg, params, tokens, state: HybridState, *, chunk=2048):
+    """tokens: (B, 1). One step through the whole stack."""
+    compute_dt = dtype_of(cfg.compute_dtype)
+    n_seg, e, tail = _segments(cfg)
+    x = embed(params["embed"], tokens, compute_dt)
+    e0 = x
+    positions = state.length[:, None]
+    shared_p = params["shared"]
+
+    def seg_body(carry, seg):
+        h = carry
+        p_seg, conv, ssm, ck, cv = seg
+
+        def layer_body(hh, layer):
+            p_layer, cst, sst = layer
+            hh, nst = _mamba_residual(cfg, p_layer, hh,
+                                      state=S.MambaState(cst, sst), step=True)
+            return hh, nst
+
+        h, nstates = jax.lax.scan(layer_body, h, (p_seg, conv, ssm))
+        h, nk, nv = _shared_attn(cfg, shared_p, h, e0, positions,
+                                 cache_k=ck, cache_v=cv,
+                                 kv_len=state.length, chunk=chunk)
+        return h, (nstates, nk, nv)
+
+    x, (nstates, ks, vs) = jax.lax.scan(
+        seg_body, x,
+        (params["seg_blocks"], state.conv_seg, state.ssm_seg,
+         state.kv_k, state.kv_v))
+
+    nconv_t, nssm_t = state.conv_tail, state.ssm_tail
+    if tail:
+        def tail_body(hh, layer):
+            p_layer, cst, sst = layer
+            hh, nst = _mamba_residual(cfg, p_layer, hh,
+                                      state=S.MambaState(cst, sst), step=True)
+            return hh, nst
+        x, tstates = jax.lax.scan(tail_body, x,
+                                  (params["tail_blocks"], state.conv_tail,
+                                   state.ssm_tail))
+        nconv_t, nssm_t = tstates.conv, tstates.ssm
+
+    x = apply_norm(cfg, params["ln_f"], x)
+    lg = lm_logits(params["embed"], x, cfg.tie_embeddings,
+                   cfg.final_logit_softcap)
+    new_state = HybridState(
+        conv_seg=nstates.conv, ssm_seg=nstates.ssm,
+        conv_tail=nconv_t, ssm_tail=nssm_t,
+        kv_k=ks, kv_v=vs, length=state.length + 1)
+    return lg[:, 0], new_state
+
+
+def init_decode_state(cfg, batch: int, max_len: int,
+                      cache_dtype="bfloat16") -> HybridState:
+    n_seg, e, tail = _segments(cfg)
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    h = s.num_heads(cfg.d_model)
+    ch = d_in + 2 * s.d_state
+    cdt = dtype_of(cache_dtype)
+    hd = cfg.resolved_head_dim
+    return HybridState(
+        conv_seg=jnp.zeros((n_seg, e, batch, s.d_conv - 1, ch), cdt),
+        ssm_seg=jnp.zeros((n_seg, e, batch, h, s.d_state, s.head_dim),
+                          jnp.float32),
+        conv_tail=jnp.zeros((tail, batch, s.d_conv - 1, ch), cdt),
+        ssm_tail=jnp.zeros((tail, batch, h, s.d_state, s.head_dim),
+                           jnp.float32),
+        kv_k=jnp.zeros((n_seg, batch, max_len, cfg.num_kv_heads, hd), cdt),
+        kv_v=jnp.zeros((n_seg, batch, max_len, cfg.num_kv_heads, hd), cdt),
+        length=jnp.zeros((batch,), jnp.int32))

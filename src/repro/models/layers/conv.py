@@ -1,0 +1,67 @@
+"""2-D conv layers for the paper's own model (GoogLeNet / Inception-v1).
+
+NHWC layout, HWIO kernels, `lax.conv_general_dilated`.  The perf-critical
+conv hot-spot has a Pallas im2col-GEMM kernel in `repro.kernels.conv2d`; this
+module is the oracle and the default (XLA) path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.module import ParamDef, bias
+from repro.common import truncated_normal_init
+
+
+def conv_table(kh: int, kw: int, cin: int, cout: int):
+    def init(key, shape, dtype):
+        fan_in = kh * kw * cin
+        return truncated_normal_init(key, shape, dtype,
+                                     stddev=(2.0 / fan_in) ** 0.5)
+    return {
+        "w": ParamDef((kh, kw, cin, cout), ("conv", "conv", None, "ff"), init),
+        "b": bias((cout,), ("ff",)),
+    }
+
+
+def conv2d(params, x: jax.Array, *, stride: int = 1,
+           padding: str = "SAME") -> jax.Array:
+    """x: (B, H, W, Cin) -> (B, H', W', Cout)."""
+    out = jax.lax.conv_general_dilated(
+        x, params["w"].astype(x.dtype),
+        window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + params["b"].astype(x.dtype)
+
+
+def relu_conv(params, x, *, stride=1, padding="SAME"):
+    return jax.nn.relu(conv2d(params, x, stride=stride, padding=padding))
+
+
+def max_pool(x: jax.Array, window: int, stride: int,
+             padding: str = "SAME") -> jax.Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max,
+        (1, window, window, 1), (1, stride, stride, 1), padding)
+
+
+def avg_pool(x: jax.Array, window: int, stride: int,
+             padding: str = "VALID") -> jax.Array:
+    s = jax.lax.reduce_window(
+        x, 0.0, jax.lax.add,
+        (1, window, window, 1), (1, stride, stride, 1), padding)
+    return s / float(window * window)
+
+
+def global_avg_pool(x: jax.Array) -> jax.Array:
+    return jnp.mean(x, axis=(1, 2))
+
+
+def lrn(x: jax.Array, *, radius: int = 2, alpha: float = 1e-4,
+        beta: float = 0.75, k: float = 1.0) -> jax.Array:
+    """Local response normalization across channels (AlexNet/GoogLeNet)."""
+    sq = jnp.square(x.astype(jnp.float32))
+    # sum over a window of 2*radius+1 channels
+    pad = jnp.pad(sq, ((0, 0), (0, 0), (0, 0), (radius, radius)))
+    n = sum(pad[..., i:i + x.shape[-1]] for i in range(2 * radius + 1))
+    return (x.astype(jnp.float32) / jnp.power(k + alpha * n, beta)).astype(x.dtype)

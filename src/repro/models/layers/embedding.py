@@ -1,0 +1,34 @@
+"""Token embeddings and LM heads (vocab sharded on the model axis)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers.module import weight
+
+
+def embedding_table(vocab_size: int, d_model: int, tie: bool):
+    t = {"tok": weight((vocab_size, d_model), ("vocab", "embed"), stddev=1.0)}
+    if not tie:
+        t["lm_head"] = weight((d_model, vocab_size), ("embed", "vocab"))
+    return t
+
+
+def embed(params, tokens: jax.Array, compute_dtype) -> jax.Array:
+    """tokens: (B, S) int32 -> (B, S, D)."""
+    out = jnp.take(params["tok"].astype(compute_dtype), tokens, axis=0)
+    return constrain(out, "batch", "seq", "embed_act")
+
+
+def logits(params, x: jax.Array, tie: bool,
+           softcap: float = 0.0) -> jax.Array:
+    """x: (..., D) -> (..., V). Computed in fp32 for numerics."""
+    if tie:
+        w = params["tok"].astype(jnp.float32).T
+    else:
+        w = params["lm_head"].astype(jnp.float32)
+    out = jnp.einsum("...d,dv->...v", x.astype(jnp.float32), w)
+    if softcap:
+        out = softcap * jnp.tanh(out / softcap)
+    return constrain(out, "batch", "seq", "vocab")

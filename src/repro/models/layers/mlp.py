@@ -1,0 +1,43 @@
+"""Feed-forward layers: SwiGLU (LLaMA/Qwen family) and GELU (Whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers.module import bias, weight
+
+
+def swiglu_table(d_model: int, d_ff: int):
+    return {
+        "w_gate": weight((d_model, d_ff), ("embed", "ff")),
+        "w_up": weight((d_model, d_ff), ("embed", "ff")),
+        "w_down": weight((d_ff, d_model), ("ff", "embed")),
+    }
+
+
+def swiglu(params, x: jax.Array) -> jax.Array:
+    """x: (..., d_model) -> (..., d_model)."""
+    gate = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(x.dtype))
+    up = jnp.einsum("...d,df->...f", x, params["w_up"].astype(x.dtype))
+    h = jax.nn.silu(gate) * up
+    h = constrain(h, "batch", "seq", "ff")
+    return jnp.einsum("...f,fd->...d", h, params["w_down"].astype(x.dtype))
+
+
+def gelu_mlp_table(d_model: int, d_ff: int):
+    return {
+        "w_in": weight((d_model, d_ff), ("embed", "ff")),
+        "b_in": bias((d_ff,), ("ff",)),
+        "w_out": weight((d_ff, d_model), ("ff", "embed")),
+        "b_out": bias((d_model,), ("embed",)),
+    }
+
+
+def gelu_mlp(params, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, params["w_in"].astype(x.dtype))
+    h = h + params["b_in"].astype(x.dtype)
+    h = jax.nn.gelu(h, approximate=True)
+    h = constrain(h, "batch", "seq", "ff")
+    out = jnp.einsum("...f,fd->...d", h, params["w_out"].astype(x.dtype))
+    return out + params["b_out"].astype(x.dtype)

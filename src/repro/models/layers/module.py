@@ -1,0 +1,80 @@
+"""Single-source-of-truth parameter tables.
+
+A *table* is a nested dict whose leaves are :class:`ParamDef` — (shape,
+logical axes, init).  From one table we derive both the initialized parameter
+pytree and the logical-axis pytree used for sharding, so the two can never
+drift apart.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import dtype_of, ones_init, truncated_normal_init, zeros_init
+
+InitFn = Callable[[jax.Array, tuple[int, ...], Any], jax.Array]
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: InitFn = truncated_normal_init
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def weight(shape: tuple[int, ...], axes: tuple[str | None, ...],
+           stddev: float | None = None) -> ParamDef:
+    if stddev is None:
+        return ParamDef(tuple(shape), tuple(axes), truncated_normal_init)
+    def init(key, shp, dtype, _s=stddev):
+        return truncated_normal_init(key, shp, dtype, stddev=_s)
+    return ParamDef(tuple(shape), tuple(axes), init)
+
+
+def bias(shape: tuple[int, ...], axes: tuple[str | None, ...]) -> ParamDef:
+    return ParamDef(tuple(shape), tuple(axes), zeros_init)
+
+
+def scale(shape: tuple[int, ...], axes: tuple[str | None, ...]) -> ParamDef:
+    return ParamDef(tuple(shape), tuple(axes), ones_init)
+
+
+Table = Mapping[str, Any]  # nested dict of ParamDef
+
+
+def is_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def stack_table(table: Table, num: int) -> Table:
+    """Prepend a stacked 'layers' dim to every leaf (for lax.scan)."""
+    def _stack(d: ParamDef) -> ParamDef:
+        def init(key, shape, dtype, _d=d):
+            keys = jax.random.split(key, num)
+            return jax.vmap(lambda k: _d.init(k, _d.shape, dtype))(keys)
+        return ParamDef((num, *d.shape), ("layers", *d.axes), init)
+    return jax.tree_util.tree_map(_stack, table, is_leaf=is_def)
+
+
+def init_table(key: jax.Array, table: Table, dtype) -> Any:
+    dt = dtype_of(dtype)
+    leaves, treedef = jax.tree_util.tree_flatten(table, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    params = [d.init(k, d.shape, dt) for d, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, params)
+
+
+def axes_of(table: Table) -> Any:
+    return jax.tree_util.tree_map(lambda d: d.axes, table, is_leaf=is_def)
+
+
+def shapes_of(table: Table, dtype) -> Any:
+    dt = dtype_of(dtype)
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dt), table, is_leaf=is_def)

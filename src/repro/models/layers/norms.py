@@ -1,0 +1,53 @@
+"""Normalization layers (functional)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.module import bias, scale
+
+
+def rmsnorm_table(dim: int, axes=("embed",)):
+    return {"scale": scale((dim,), axes)}
+
+
+def layernorm_table(dim: int, axes=("embed",)):
+    return {"scale": scale((dim,), axes), "bias": bias((dim,), axes)}
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def norm_table(cfg, dim: int | None = None, axes=("embed",)):
+    dim = dim or cfg.d_model
+    return layernorm_table(dim, axes) if cfg.use_layernorm else rmsnorm_table(dim, axes)
+
+
+def apply_norm(cfg, params, x: jax.Array) -> jax.Array:
+    if cfg.use_layernorm:
+        return layernorm(params, x, cfg.norm_eps)
+    return rmsnorm(params, x, cfg.norm_eps)
+
+
+def head_rmsnorm(scale_param, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """QK-norm: RMS-normalize the last (head) dim with a learned scale."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale_param.astype(jnp.float32)).astype(dtype)

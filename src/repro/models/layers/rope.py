@@ -1,0 +1,63 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL multimodal M-RoPE."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim // 2,)."""
+    exponents = np.arange(0, head_dim, 2, dtype=np.float32) / head_dim
+    return jnp.asarray(1.0 / (theta ** exponents), dtype=jnp.float32)
+
+
+def _rotate(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    # x: (..., head_dim); cos/sin broadcastable (..., head_dim//2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply RoPE.
+
+    Args:
+      x: (B, S, H, D) queries or keys.
+      positions: (B, S) int32 absolute positions.
+      theta: rope base.
+    """
+    freqs = rope_freqs(x.shape[-1], theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs    # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]                         # (B, S, 1, D/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    return _rotate(x, cos, sin)
+
+
+def apply_m_rope(x: jax.Array, positions: jax.Array, theta: float,
+                 sections: tuple[int, ...]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    The head_dim//2 frequency slots are partitioned into `sections`
+    (temporal, height, width); each section uses its own position stream.
+
+    Args:
+      x: (B, S, H, D).
+      positions: (3, B, S) int32 — temporal/height/width position ids
+        (identical streams for pure-text tokens).
+      sections: frequency-slot counts per stream, sum == D // 2.
+    """
+    d_half = x.shape[-1] // 2
+    assert sum(sections) == d_half, (sections, d_half)
+    freqs = rope_freqs(x.shape[-1], theta)                       # (D/2,)
+    # angles per stream: (3, B, S, D/2)
+    angles_all = positions[..., None].astype(jnp.float32) * freqs
+    # select stream per frequency slot
+    stream_id = jnp.asarray(
+        np.repeat(np.arange(len(sections)), sections), dtype=jnp.int32)  # (D/2,)
+    angles = jnp.take_along_axis(
+        jnp.moveaxis(angles_all, 0, -1),                         # (B, S, D/2, 3)
+        stream_id[None, None, :, None], axis=-1)[..., 0]         # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    return _rotate(x, cos, sin)

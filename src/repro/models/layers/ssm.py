@@ -1,0 +1,271 @@
+"""Mamba-2 (SSD) and the shared chunked linear-recurrence core.
+
+The state-space duality view: both SSD and mLSTM compute
+
+    H_t = exp(dA_t) * H_{t-1} + g_t * (k_t outer v_t)        (per head)
+    y_t = q_t . H_t
+
+which admits a chunkwise-parallel algorithm: quadratic attention within a
+chunk + an associative scan over per-chunk states.  `chunked_linear_attn`
+implements that once; Mamba-2 and mLSTM supply (q, k, v, log-decay, gate).
+
+All recurrence math is fp32.  The matching Pallas kernel lives in
+`repro.kernels.ssm_scan` with this module as its oracle.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import truncated_normal_init
+from repro.distributed.sharding import constrain
+from repro.models.layers.module import ParamDef, bias, scale, weight
+from repro.models.layers.norms import rmsnorm
+
+
+def chunked_linear_attn(q: jax.Array, k: jax.Array, v: jax.Array,
+                        log_decay: jax.Array, log_gate: jax.Array | None = None,
+                        *, chunk: int = 128,
+                        initial_state: jax.Array | None = None,
+                        return_final_state: bool = False):
+    """Chunkwise decayed linear attention (causal, inclusive of t).
+
+    Args:
+      q, k: (B, S, H, N); v: (B, S, H, P).
+      log_decay: (B, S, H) log of per-step decay (<= 0 for stability).
+      log_gate:  (B, S, H) log input gate applied to (k_t, v_t); None -> 0.
+      initial_state: (B, H, N, P) recurrent state carried in.
+    Returns:
+      y (B, S, H, P) fp32 [, final_state (B, H, N, P) fp32].
+    """
+    B, S, H, N = k.shape
+    P = v.shape[-1]
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    log_decay = log_decay.astype(jnp.float32)
+    g = jnp.zeros_like(log_decay) if log_gate is None else log_gate.astype(jnp.float32)
+
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        q, k, v, g = map(zpad, (q, k, v, g))
+        # Padded steps must be identity: decay 0 in log space, gate -inf.
+        log_decay = jnp.pad(log_decay, ((0, 0), (0, pad), (0, 0)))
+        g = g.at[:, S:].set(-1e30)
+    C = (S + pad) // chunk
+
+    def cs(a):  # (B, S', H, ...) -> (B, C, Q, H, ...)
+        return a.reshape(B, C, chunk, *a.shape[2:])
+
+    qc, kc, vc, dc, gc = map(cs, (q, k, v, log_decay, g))
+    cum = jnp.cumsum(dc, axis=2)                   # inclusive cumsum (B,C,Q,H)
+    total = cum[:, :, -1]                          # (B,C,H) log chunk decay
+
+    # ---- intra-chunk (quadratic) ----
+    # w[i,j] = exp(cum_i - cum_j + g_j) for i >= j  (decay from j+1..i)
+    scores = jnp.einsum("bcihn,bcjhn->bchij", qc, kc)            # (B,C,H,Q,Q)
+    logw = cum.transpose(0, 1, 3, 2)[..., :, None] \
+        - cum.transpose(0, 1, 3, 2)[..., None, :] \
+        + gc.transpose(0, 1, 3, 2)[..., None, :]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    w = jnp.where(causal, jnp.exp(jnp.minimum(logw, 30.0)), 0.0)
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", scores * w, vc)
+
+    # ---- per-chunk summary state: S_c = sum_j exp(total - cum_j + g_j) k v^T
+    wk = jnp.exp(jnp.minimum(total[:, :, None] - cum + gc, 30.0))  # (B,C,Q,H)
+    s_c = jnp.einsum("bcjhn,bcjhp->bchnp", kc * wk[..., None], vc)
+
+    # ---- inter-chunk associative scan: H_c = exp(total_c) H_{c-1} + S_c ----
+    def combine(e1, e2):
+        a1, s1 = e1
+        a2, s2 = e2
+        return a1 + a2, s1 * jnp.exp(a2)[..., None, None] + s2
+
+    a_el = total.transpose(0, 2, 1)                               # (B,H,C)
+    s_el = s_c.transpose(0, 2, 1, 3, 4)                           # (B,H,C,N,P)
+    if initial_state is not None:
+        a_el = jnp.concatenate([jnp.zeros_like(a_el[:, :, :1]), a_el], axis=2)
+        s_el = jnp.concatenate(
+            [initial_state.astype(jnp.float32)[:, :, None], s_el], axis=2)
+    a_sc, h_sc = jax.lax.associative_scan(combine, (a_el, s_el), axis=2)
+    if initial_state is not None:
+        a_sc, h_sc = a_sc[:, :, 1:], h_sc[:, :, 1:]
+    final_state = h_sc[:, :, -1]                                  # (B,H,N,P)
+    # state entering chunk c is H_{c-1}
+    h_prev = jnp.concatenate(
+        [initial_state.astype(jnp.float32)[:, :, None] if initial_state is not None
+         else jnp.zeros_like(h_sc[:, :, :1]), h_sc[:, :, :-1]], axis=2)
+
+    # ---- inter-chunk contribution: y_off_i = exp(cum_i) q_i . H_prev ----
+    wq = jnp.exp(jnp.minimum(cum, 30.0))                          # (B,C,Q,H)
+    y_off = jnp.einsum("bcihn,bhcnp->bcihp", qc * wq[..., None],
+                       h_prev.transpose(0, 1, 2, 3, 4))
+    y = (y_diag + y_off).reshape(B, C * chunk, H, P)[:, :S]
+    if return_final_state:
+        return y, final_state
+    return y, None
+
+
+def linear_attn_step(q, k, v, log_decay, log_gate, state):
+    """Single-token recurrence (decode). Shapes: q/k (B,H,N), v (B,H,P),
+    log_decay/log_gate (B,H), state (B,H,N,P). Returns (y, new_state)."""
+    a = jnp.exp(log_decay.astype(jnp.float32))[..., None, None]
+    gate = jnp.exp(jnp.minimum(log_gate.astype(jnp.float32), 30.0))[..., None, None]
+    kv = jnp.einsum("bhn,bhp->bhnp", k.astype(jnp.float32), v.astype(jnp.float32))
+    new_state = a * state.astype(jnp.float32) + gate * kv
+    y = jnp.einsum("bhn,bhnp->bhp", q.astype(jnp.float32), new_state)
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block
+# ---------------------------------------------------------------------------
+
+class MambaState(NamedTuple):
+    conv: jax.Array   # (B, d_conv-1, conv_channels)
+    ssm: jax.Array    # (B, H, N, P) fp32
+
+
+def _a_log_init(key, shape, dtype):
+    del key
+    # A in [1, 16) log-spaced (Mamba-2 default init)
+    h = shape[0]
+    a = 1.0 + 15.0 * (jnp.arange(h, dtype=jnp.float32) + 0.5) / h
+    return jnp.log(a).astype(dtype)
+
+
+def _dt_bias_init(key, shape, dtype):
+    del key
+    # softplus^-1 of dt in [1e-3, 1e-1], log-spaced
+    h = shape[0]
+    dt = jnp.exp(jnp.linspace(math.log(1e-3), math.log(1e-1), h))
+    return jnp.log(jnp.expm1(dt)).astype(dtype)
+
+
+def mamba_table(cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.d_inner(d)
+    h = s.num_heads(d)
+    n = s.d_state
+    conv_ch = d_in + 2 * n
+    return {
+        # order: [z (d_in) | x (d_in) | B (n) | C (n) | dt (h)]
+        "in_proj": weight((d, 2 * d_in + 2 * n + h), ("embed", "ff")),
+        "conv_w": ParamDef((s.d_conv, conv_ch), ("conv", "ff"),
+                           lambda k, sh, dt: truncated_normal_init(k, sh, dt, stddev=0.2)),
+        "conv_b": bias((conv_ch,), ("ff",)),
+        "a_log": ParamDef((h,), (None,), _a_log_init),
+        "d_skip": scale((h,), (None,)),
+        "dt_bias": ParamDef((h,), (None,), _dt_bias_init),
+        "norm": scale((d_in,), ("ff",)),
+        "out_proj": weight((d_in, d), ("ff", "embed")),
+    }
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                   history: jax.Array | None = None):
+    """x: (B, S, Ch); w: (K, Ch) depthwise. Returns (y, new_history)."""
+    K = w.shape[0]
+    if history is None:
+        history = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xh = jnp.concatenate([history, x], axis=1)
+    # depthwise conv as sum of shifted slices (K is tiny, typically 4)
+    y = sum(xh[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    y = y + b[None, None, :]
+    new_hist = xh[:, -(K - 1):, :] if K > 1 else history
+    return y, new_hist
+
+
+def _mamba_split(cfg, params, u: jax.Array):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    h = s.num_heads(cfg.d_model)
+    n = s.d_state
+    proj = jnp.einsum("...d,df->...f", u, params["in_proj"].astype(u.dtype))
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in:d_in + d_in + 2 * n]
+    dt_raw = proj[..., -h:]
+    return z, xbc, dt_raw, (d_in, h, n)
+
+
+def mamba_forward(cfg, params, u: jax.Array,
+                  state: MambaState | None = None,
+                  return_state: bool = False):
+    """Full-sequence Mamba-2 mixer. u: (B, S, D) -> (B, S, D)."""
+    s = cfg.ssm
+    B, S, D = u.shape
+    z, xbc, dt_raw, (d_in, h, n) = _mamba_split(cfg, params, u)
+    xbc, conv_hist = _causal_conv1d(
+        xbc, params["conv_w"].astype(u.dtype), params["conv_b"].astype(u.dtype),
+        None if state is None else state.conv)
+    xbc = jax.nn.silu(xbc)
+    x = xbc[..., :d_in].reshape(B, S, h, s.head_dim)
+    b_in = xbc[..., d_in:d_in + n]                      # (B,S,N) single group
+    c_in = xbc[..., d_in + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))   # (B,S,H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))                # (H,)
+    log_decay = dt * a[None, None, :]
+    x = constrain(x, "batch", "seq", "heads", None)
+    log_decay = constrain(log_decay, "batch", "seq", "heads")
+    # broadcast shared B/C over heads; input scaled by dt via log_gate
+    kq = lambda t: constrain(
+        jnp.broadcast_to(t[:, :, None, :], (B, S, h, n)),
+        "batch", "seq", "heads", None)
+    y, fin = chunked_linear_attn(
+        kq(c_in), kq(b_in), x, log_decay, jnp.log(dt),
+        chunk=s.chunk_size,
+        initial_state=None if state is None else state.ssm,
+        return_final_state=True)
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * x.astype(jnp.float32)
+    y = y.reshape(B, S, d_in).astype(u.dtype)
+    y = constrain(y, "batch", "seq", "ff")
+    y = y * jax.nn.silu(z)
+    y = rmsnorm({"scale": params["norm"]}, y, cfg.norm_eps)
+    out = jnp.einsum("...f,fd->...d", y, params["out_proj"].astype(u.dtype))
+    out = constrain(out, "batch", "seq", "embed_act")
+    if return_state:
+        return out, MambaState(conv=conv_hist, ssm=fin)
+    return out
+
+
+def mamba_step(cfg, params, u: jax.Array, state: MambaState):
+    """Single-token decode. u: (B, 1, D) -> (B, 1, D), new state."""
+    s = cfg.ssm
+    B = u.shape[0]
+    z, xbc, dt_raw, (d_in, h, n) = _mamba_split(cfg, params, u)
+    xbc, conv_hist = _causal_conv1d(
+        xbc, params["conv_w"].astype(u.dtype), params["conv_b"].astype(u.dtype),
+        state.conv)
+    xbc = jax.nn.silu(xbc)
+    x = xbc[:, 0, :d_in].reshape(B, h, s.head_dim)
+    b_in = jnp.broadcast_to(xbc[:, 0, None, d_in:d_in + n], (B, h, n))
+    c_in = jnp.broadcast_to(xbc[:, 0, None, d_in + n:], (B, h, n))
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))    # (B,H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    y, new_ssm = linear_attn_step(c_in, b_in, x, dt * a[None, :],
+                                  jnp.log(dt), state.ssm)
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] \
+        * x.astype(jnp.float32)
+    y = y.reshape(B, 1, d_in).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm({"scale": params["norm"]}, y, cfg.norm_eps)
+    out = jnp.einsum("...f,fd->...d", y, params["out_proj"].astype(u.dtype))
+    return out, MambaState(conv=conv_hist, ssm=new_ssm)
+
+
+def mamba_init_state(cfg, batch: int, dtype=jnp.float32) -> MambaState:
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    h = s.num_heads(cfg.d_model)
+    return MambaState(
+        conv=jnp.zeros((batch, s.d_conv - 1, d_in + 2 * s.d_state), dtype),
+        ssm=jnp.zeros((batch, h, s.d_state, s.head_dim), jnp.float32))

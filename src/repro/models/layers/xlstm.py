@@ -1,0 +1,233 @@
+"""xLSTM layers: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory with recurrent weights, inherently sequential).
+
+mLSTM is a decayed outer-product recurrence, so it reuses
+`ssm.chunked_linear_attn`; the max(|n.q|, 1) normalizer is obtained by
+appending a ones-column to V and scanning once (num and den share the state).
+sLSTM has hidden-to-gate recurrence (R h_{t-1}) and therefore runs as a
+`lax.scan` over time with the standard exp-gate stabilizer m_t.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers.module import bias, scale, weight
+from repro.models.layers.norms import rmsnorm
+from repro.models.layers.ssm import (chunked_linear_attn, linear_attn_step,
+                                     _causal_conv1d)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+class MLSTMState(NamedTuple):
+    conv: jax.Array    # (B, K-1, di)
+    mem: jax.Array     # (B, H, N, P+1) fp32 — last column is the normalizer
+
+
+def mlstm_table(cfg):
+    d = cfg.d_model
+    di = int(cfg.xlstm.mlstm_proj_factor * d)
+    h = cfg.num_heads
+    dh = di // h
+    k = cfg.xlstm.conv1d_kernel
+    return {
+        "up_proj": weight((d, 2 * di), ("embed", "ff")),
+        "conv_w": weight((k, di), ("conv", "ff"), stddev=0.2),
+        "conv_b": bias((di,), ("ff",)),
+        "wq": weight((di, h, dh), (None, "heads", None)),
+        "wk": weight((di, h, dh), (None, "heads", None)),
+        "wv": weight((di, h, dh), (None, "heads", None)),
+        "w_i": weight((di, h), (None, "heads"), stddev=0.02),
+        "b_i": bias((h,), ("heads",)),
+        "w_f": weight((di, h), (None, "heads"), stddev=0.02),
+        "b_f": ParamFBias((h,)),
+        "skip": scale((di,), ("ff",)),
+        "norm": scale((di,), ("ff",)),
+        "down_proj": weight((di, d), ("ff", "embed")),
+    }
+
+
+def ParamFBias(shape):
+    """Forget-gate bias init: positive (starts remembering), linspace [3, 6]."""
+    from repro.models.layers.module import ParamDef
+
+    def init(key, shp, dtype):
+        del key
+        return jnp.linspace(3.0, 6.0, shp[0]).astype(dtype)
+    return ParamDef(tuple(shape), ("heads",), init)
+
+
+def _mlstm_qkvg(cfg, params, x: jax.Array, conv_hist):
+    """Shared projection path. x: (B,S,D)."""
+    d = cfg.d_model
+    di = int(cfg.xlstm.mlstm_proj_factor * d)
+    h = cfg.num_heads
+    dh = di // h
+    up = jnp.einsum("...d,df->...f", x, params["up_proj"].astype(x.dtype))
+    xi, z = up[..., :di], up[..., di:]
+    xc, new_hist = _causal_conv1d(xi, params["conv_w"].astype(x.dtype),
+                                  params["conv_b"].astype(x.dtype), conv_hist)
+    xc = jax.nn.silu(xc)
+    q = jnp.einsum("...f,fhk->...hk", xc, params["wq"].astype(x.dtype))
+    k = jnp.einsum("...f,fhk->...hk", xc, params["wk"].astype(x.dtype)) / (dh ** 0.5)
+    v = jnp.einsum("...f,fhk->...hk", xi, params["wv"].astype(x.dtype))
+    log_f = jax.nn.log_sigmoid(
+        jnp.einsum("...f,fh->...h", xc, params["w_f"].astype(x.dtype))
+        .astype(jnp.float32) + params["b_f"].astype(jnp.float32))
+    log_i = (jnp.einsum("...f,fh->...h", xc, params["w_i"].astype(x.dtype))
+             .astype(jnp.float32) + params["b_i"].astype(jnp.float32))
+    log_i = jnp.clip(log_i, -30.0, 15.0)
+    return q, k, v, log_f, log_i, xi, xc, z, new_hist
+
+
+def _mlstm_out(cfg, params, num, den, xc, z, B, S):
+    d = cfg.d_model
+    di = int(cfg.xlstm.mlstm_proj_factor * d)
+    h = cfg.num_heads
+    dh = di // h
+    y = num / jnp.maximum(jnp.abs(den), 1.0)                # (B,S,H,dh)
+    y = y.reshape(B, S, di).astype(xc.dtype)
+    y = y + params["skip"].astype(xc.dtype) * xc
+    y = y.reshape(B, S, h, dh)
+    # head-wise RMS norm with a full-width scale (GroupNorm analogue)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps))
+    y = y.reshape(B, S, di) * params["norm"].astype(jnp.float32)
+    y = y.astype(xc.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("...f,fd->...d", y, params["down_proj"].astype(xc.dtype))
+    return constrain(out, "batch", "seq", "embed_act")
+
+
+def mlstm_forward(cfg, params, x: jax.Array,
+                  state: MLSTMState | None = None,
+                  return_state: bool = False):
+    B, S, _ = x.shape
+    q, k, v, log_f, log_i, xi, xc, z, hist = _mlstm_qkvg(
+        cfg, params, x, None if state is None else state.conv)
+    ones = jnp.ones((*v.shape[:-1], 1), v.dtype)
+    v1 = jnp.concatenate([v, ones], axis=-1)                # (B,S,H,P+1)
+    y, fin = chunked_linear_attn(
+        q, k, v1, log_f, log_i, chunk=128,
+        initial_state=None if state is None else state.mem,
+        return_final_state=True)
+    num, den = y[..., :-1], y[..., -1:]
+    out = _mlstm_out(cfg, params, num, den, xc, z, B, S)
+    if return_state:
+        return out, MLSTMState(conv=hist, mem=fin)
+    return out
+
+
+def mlstm_step(cfg, params, x: jax.Array, state: MLSTMState):
+    """x: (B, 1, D) single-token decode."""
+    B = x.shape[0]
+    q, k, v, log_f, log_i, xi, xc, z, hist = _mlstm_qkvg(
+        cfg, params, x, state.conv)
+    ones = jnp.ones((*v.shape[:-1], 1), v.dtype)
+    v1 = jnp.concatenate([v, ones], axis=-1)
+    y, mem = linear_attn_step(q[:, 0], k[:, 0], v1[:, 0],
+                              log_f[:, 0], log_i[:, 0], state.mem)
+    y = y[:, None]                                           # (B,1,H,P+1)
+    out = _mlstm_out(cfg, params, y[..., :-1], y[..., -1:], xc, z, B, 1)
+    return out, MLSTMState(conv=hist, mem=mem)
+
+
+def mlstm_init_state(cfg, batch: int, dtype=jnp.float32) -> MLSTMState:
+    d = cfg.d_model
+    di = int(cfg.xlstm.mlstm_proj_factor * d)
+    h = cfg.num_heads
+    dh = di // h
+    return MLSTMState(
+        conv=jnp.zeros((batch, cfg.xlstm.conv1d_kernel - 1, di), dtype),
+        mem=jnp.zeros((batch, h, dh, dh + 1), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+class SLSTMState(NamedTuple):
+    h: jax.Array   # (B, D) fp32
+    c: jax.Array   # (B, D) fp32
+    n: jax.Array   # (B, D) fp32
+    m: jax.Array   # (B, D) fp32 stabilizer
+
+
+def slstm_table(cfg):
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    dff = int(cfg.xlstm.slstm_proj_factor * d)
+    return {
+        # input projections for (i, f, z, o)
+        "w_in": weight((d, 4, d), ("embed", None, "ff"), stddev=0.02),
+        "b_in": bias((4, d), (None, "ff")),
+        # head-block-diagonal recurrent weights
+        "r": weight((h, dh, 4, dh), ("heads", None, None, None), stddev=0.02),
+        "norm": scale((d,), ("embed",)),
+        # post-cell gated MLP (proj factor 4/3)
+        "up_gate": weight((d, dff), ("embed", "ff")),
+        "up": weight((d, dff), ("embed", "ff")),
+        "down": weight((dff, d), ("ff", "embed")),
+    }
+
+
+def _slstm_cell(cfg, params, wx_t: jax.Array, st: SLSTMState) -> SLSTMState:
+    """One timestep. wx_t: (B, 4, D) precomputed input contribution (fp32)."""
+    h_heads = st.h.reshape(st.h.shape[0], cfg.num_heads, -1)
+    rh = jnp.einsum("bhk,hkgj->bghj", h_heads,
+                    params["r"].astype(jnp.float32))
+    pre = wx_t + rh.reshape(wx_t.shape)                      # (B,4,D)
+    it, ft, zt, ot = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + st.m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(log_f + st.m - m_new)
+    c_new = f_p * st.c + i_p * jnp.tanh(zt)
+    n_new = f_p * st.n + i_p
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+    return SLSTMState(h=h_new, c=c_new, n=n_new, m=m_new)
+
+
+def slstm_forward(cfg, params, x: jax.Array,
+                  state: SLSTMState | None = None,
+                  return_state: bool = False):
+    """x: (B, S, D). Sequential scan over S (true recurrence)."""
+    B, S, d = x.shape
+    if state is None:
+        state = slstm_init_state(cfg, B)
+    wx = jnp.einsum("bsd,dgf->bsgf", x, params["w_in"].astype(x.dtype))
+    wx = (wx + params["b_in"].astype(x.dtype)).astype(jnp.float32)
+
+    def step(st, wx_t):
+        st2 = _slstm_cell(cfg, params, wx_t, st)
+        return st2, st2.h
+
+    fin, hs = jax.lax.scan(step, state, wx.transpose(1, 0, 2, 3))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)                # (B,S,D)
+    y = rmsnorm({"scale": params["norm"]}, y, cfg.norm_eps)
+    g = jnp.einsum("...d,df->...f", y, params["up_gate"].astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", y, params["up"].astype(x.dtype))
+    h = jax.nn.gelu(g, approximate=True) * u
+    h = constrain(h, "batch", "seq", "ff")
+    out = jnp.einsum("...f,fd->...d", h, params["down"].astype(x.dtype))
+    out = constrain(out, "batch", "seq", "embed_act")
+    if return_state:
+        return out, fin
+    return out
+
+
+def slstm_step(cfg, params, x: jax.Array, state: SLSTMState):
+    out, fin = slstm_forward(cfg, params, x, state, return_state=True)
+    return out, fin
+
+
+def slstm_init_state(cfg, batch: int) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(h=z, c=z, n=z, m=jnp.full((batch, d), -1e30, jnp.float32))

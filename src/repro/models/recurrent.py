@@ -1,0 +1,103 @@
+"""xLSTM LM: interleaved mLSTM / sLSTM residual blocks (unrolled stack —
+the model family is small, so per-block HLO is cheap and the heterogeneous
+pattern needs no scan gymnastics).
+
+Decode state is O(1) in sequence length, so this arch runs ``long_500k``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import dtype_of, split_keys
+from repro.models.layers.embedding import embed, embedding_table, logits as lm_logits
+from repro.models.layers.module import init_table
+from repro.models.layers.norms import apply_norm, norm_table
+from repro.models.layers import xlstm as X
+
+
+def _is_slstm(cfg, i: int) -> bool:
+    return i % cfg.xlstm.slstm_every == 1
+
+
+def lm_table(cfg):
+    blocks = []
+    for i in range(cfg.num_layers):
+        core = X.slstm_table(cfg) if _is_slstm(cfg, i) else X.mlstm_table(cfg)
+        blocks.append({"norm": norm_table(cfg), "core": core})
+    return {
+        "embed": embedding_table(cfg.vocab_size, cfg.d_model, cfg.tie_embeddings),
+        "blocks": blocks,
+        "ln_f": norm_table(cfg),
+    }
+
+
+def init(cfg, key: jax.Array):
+    return init_table(key, lm_table(cfg), cfg.param_dtype)
+
+
+def _apply(cfg, params, tokens, *, states=None, step=False, collect=False):
+    x = embed(params["embed"], tokens, dtype_of(cfg.compute_dtype))
+    new_states = []
+    for i, bp in enumerate(params["blocks"]):
+        h = apply_norm(cfg, bp["norm"], x)
+        st = None if states is None else states[i]
+        if _is_slstm(cfg, i):
+            if step or collect:
+                out, nst = X.slstm_forward(cfg, bp["core"], h, st,
+                                           return_state=True)
+            else:
+                out, nst = X.slstm_forward(cfg, bp["core"], h, st), None
+        else:
+            if step:
+                out, nst = X.mlstm_step(cfg, bp["core"], h, st)
+            elif collect:
+                out, nst = X.mlstm_forward(cfg, bp["core"], h, st,
+                                           return_state=True)
+            else:
+                out, nst = X.mlstm_forward(cfg, bp["core"], h, st), None
+        x = x + out
+        new_states.append(nst)
+    x = apply_norm(cfg, params["ln_f"], x)
+    return x, new_states
+
+
+def forward(cfg, params, tokens, positions=None, *, remat=True, chunk=1024):
+    del positions, remat, chunk
+    x, _ = _apply(cfg, params, tokens)
+    lg = lm_logits(params["embed"], x, cfg.tie_embeddings,
+                   cfg.final_logit_softcap)
+    return lg, jnp.zeros((), jnp.float32)
+
+
+def prefill(cfg, params, tokens, positions=None, *, cache_dtype="bfloat16",
+            max_len=None, chunk=1024):
+    del positions, cache_dtype, max_len, chunk
+    B = tokens.shape[0]
+    x, states = _apply(cfg, params, tokens, collect=True)
+    lg = lm_logits(params["embed"], x[:, -1:], cfg.tie_embeddings,
+                   cfg.final_logit_softcap)
+    return lg[:, 0], {"states": states,
+                      "length": jnp.full((B,), tokens.shape[1], jnp.int32)}
+
+
+def decode_step(cfg, params, tokens, state, *, chunk=2048):
+    del chunk
+    x, states = _apply(cfg, params, tokens, states=state["states"], step=True)
+    lg = lm_logits(params["embed"], x, cfg.tie_embeddings,
+                   cfg.final_logit_softcap)
+    return lg[:, 0], {"states": states, "length": state["length"] + 1}
+
+
+def init_decode_state(cfg, batch: int, max_len: int, cache_dtype="bfloat16"):
+    del max_len, cache_dtype
+    states: list[Any] = []
+    for i in range(cfg.num_layers):
+        if _is_slstm(cfg, i):
+            states.append(X.slstm_init_state(cfg, batch))
+        else:
+            states.append(X.mlstm_init_state(cfg, batch))
+    return {"states": states,
+            "length": jnp.zeros((batch,), jnp.int32)}

@@ -1,0 +1,154 @@
+"""Uniform model API over all backbone families.
+
+Every family exposes the same five functions so the training loop, serving
+engine, and dry-run never branch on architecture:
+
+  init(cfg, key)                          -> params
+  forward(cfg, params, batch)             -> (logits, aux_loss)   # train
+  prefill(cfg, params, batch, max_len)    -> (last_logits, decode_state)
+  decode(cfg, params, tokens, state)      -> (logits, decode_state)
+  init_decode_state(cfg, batch, max_len)  -> decode_state pytree
+
+``batch`` is a dict: tokens/labels (+ positions for M-RoPE VLMs, + frames
+for the stubbed audio frontend).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, googlenet, hybrid, recurrent, transformer
+
+
+@dataclass(frozen=True)
+class ModelFns:
+    family: str
+    init: Callable[..., Any]
+    forward: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode: Callable[..., Any]
+    init_decode_state: Callable[..., Any]
+    table: Callable[..., Any] = None   # cfg -> ParamDef table (for sharding)
+
+
+# --- decoder-only transformers (dense / moe / vlm) -------------------------
+
+def _tf_forward(cfg, params, batch, *, remat=True, chunk=1024):
+    return transformer.forward(cfg, params, batch["tokens"],
+                               batch.get("positions"), remat=remat,
+                               chunk=chunk)
+
+
+def _tf_prefill(cfg, params, batch, max_len=None, chunk=1024):
+    return transformer.prefill(cfg, params, batch["tokens"],
+                               batch.get("positions"), max_len=max_len,
+                               chunk=chunk)
+
+
+def _tf_decode(cfg, params, tokens, state, chunk=2048):
+    return transformer.decode_step(cfg, params, tokens, state, chunk=chunk)
+
+
+def _tf_state(cfg, batch, max_len, cache_dtype="bfloat16"):
+    return transformer.make_cache(cfg, batch, max_len, cache_dtype,
+                                  length=jnp.full((batch,), max_len - 1,
+                                                  jnp.int32))
+
+
+TRANSFORMER_FNS = ModelFns("dense", transformer.init, _tf_forward,
+                           _tf_prefill, _tf_decode, _tf_state,
+                           table=transformer.lm_table)
+
+
+# --- hybrid (zamba2) --------------------------------------------------------
+
+def _hy_forward(cfg, params, batch, *, remat=True, chunk=1024):
+    return hybrid.forward(cfg, params, batch["tokens"], remat=remat,
+                          chunk=chunk)
+
+
+def _hy_prefill(cfg, params, batch, max_len=None, chunk=1024):
+    return hybrid.prefill(cfg, params, batch["tokens"], max_len=max_len,
+                          chunk=chunk)
+
+
+def _hy_state(cfg, batch, max_len, cache_dtype="bfloat16"):
+    st = hybrid.init_decode_state(cfg, batch, max_len, cache_dtype)
+    return st._replace(length=jnp.full((batch,), max_len - 1, jnp.int32))
+
+
+HYBRID_FNS = ModelFns("hybrid", hybrid.init, _hy_forward, _hy_prefill,
+                      hybrid.decode_step, _hy_state, table=hybrid.lm_table)
+
+
+# --- recurrent (xlstm) ------------------------------------------------------
+
+def _rc_forward(cfg, params, batch, *, remat=True, chunk=1024):
+    del remat, chunk
+    return recurrent.forward(cfg, params, batch["tokens"])
+
+
+def _rc_prefill(cfg, params, batch, max_len=None, chunk=1024):
+    return recurrent.prefill(cfg, params, batch["tokens"], max_len=max_len)
+
+
+def _rc_state(cfg, batch, max_len, cache_dtype="bfloat16"):
+    st = recurrent.init_decode_state(cfg, batch, max_len, cache_dtype)
+    st["length"] = jnp.full((batch,), max_len - 1, jnp.int32)
+    return st
+
+
+RECURRENT_FNS = ModelFns("ssm", recurrent.init, _rc_forward, _rc_prefill,
+                         recurrent.decode_step, _rc_state,
+                         table=recurrent.lm_table)
+
+
+# --- encoder-decoder (whisper) ----------------------------------------------
+
+def _ed_forward(cfg, params, batch, *, remat=True, chunk=1024):
+    return encdec.forward(cfg, params, batch["tokens"], batch["frames"],
+                          remat=remat, chunk=chunk)
+
+
+def _ed_prefill(cfg, params, batch, max_len=None, chunk=1024):
+    return encdec.prefill(cfg, params, batch["tokens"], batch["frames"],
+                          max_len=max_len, chunk=chunk)
+
+
+def _ed_state(cfg, batch, max_len, cache_dtype="bfloat16"):
+    st = encdec.init_decode_state(cfg, batch, max_len, cache_dtype)
+    return st._replace(length=jnp.full((batch,), max_len - 1, jnp.int32))
+
+
+ENCDEC_FNS = ModelFns("audio", encdec.init, _ed_forward, _ed_prefill,
+                      encdec.decode_step, _ed_state, table=encdec.lm_table)
+
+
+# --- cnn (googlenet, the paper's model) -------------------------------------
+
+def _gn_forward(cfg, params, batch, *, remat=True, chunk=1024):
+    del remat, chunk
+    return googlenet.forward(cfg, params, batch["images"]), \
+        jnp.zeros((), jnp.float32)
+
+
+GOOGLENET_FNS = ModelFns("cnn", googlenet.init, _gn_forward,
+                         None, None, None, table=googlenet.model_table)
+
+
+_BY_FAMILY: Mapping[str, ModelFns] = {
+    "dense": TRANSFORMER_FNS,
+    "moe": TRANSFORMER_FNS,
+    "vlm": TRANSFORMER_FNS,
+    "hybrid": HYBRID_FNS,
+    "ssm": RECURRENT_FNS,
+    "audio": ENCDEC_FNS,
+    "cnn": GOOGLENET_FNS,
+}
+
+
+def fns_for(cfg) -> ModelFns:
+    return _BY_FAMILY[cfg.family]

@@ -1,0 +1,353 @@
+"""Decoder-only transformer LM (dense, MoE, parallel-block, M-RoPE variants).
+
+Homogeneous layer stacks are `lax.scan`-ed over stacked parameters so HLO
+size is O(1) in depth (llama3-405b's 126 layers compile as one body).
+Heterogeneous prefixes (DeepSeekMoE's first-k dense layers) are unrolled.
+
+Entry points:
+  * ``forward``      — full-sequence logits (training).
+  * ``prefill``      — logits at the last position + filled KV cache.
+  * ``decode_step``  — one token against a KV cache (serving).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import dtype_of, split_keys
+from repro.distributed.sharding import constrain
+from repro.models.layers import attention as A
+from repro.models.layers import moe as MOE
+from repro.models.layers.embedding import embed, embedding_table, logits as lm_logits
+from repro.models.layers.mlp import swiglu, swiglu_table
+from repro.models.layers.module import init_table, stack_table
+from repro.models.layers.norms import apply_norm, norm_table
+
+
+class KVCache(NamedTuple):
+    """Stacked per-layer KV cache. k/v: (L, B, S, K, D); length: (B,)."""
+    k: jax.Array
+    v: jax.Array
+    length: jax.Array
+
+    @property
+    def max_len(self) -> int:
+        return self.k.shape[2]
+
+
+class QuantKVCache(NamedTuple):
+    """int8 KV cache [beyond-paper]: values quantized per (slot, kv-head)
+    with absmax scales — halves cache HBM footprint and read traffic vs
+    bf16 (the paper's FP16-is-safe finding pushed one step further).
+    k/v: (L, B, S, K, D) int8; k_scale/v_scale: (L, B, S, K) f32."""
+    k: jax.Array
+    v: jax.Array
+    k_scale: jax.Array
+    v_scale: jax.Array
+    length: jax.Array
+
+    @property
+    def max_len(self) -> int:
+        return self.k.shape[2]
+
+
+def quantize_kv(x: jax.Array):
+    """x: (..., D) -> (int8 (..., D), scale (...,) f32)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def make_cache(cfg, batch: int, max_len: int, dtype="bfloat16",
+               num_layers: int | None = None,
+               length: jax.Array | None = None):
+    L = num_layers if num_layers is not None else cfg.num_layers
+    hd = cfg.resolved_head_dim
+    shape = (L, batch, max_len, cfg.num_kv_heads, hd)
+    ln = jnp.zeros((batch,), jnp.int32) if length is None else length
+    if dtype == "int8":
+        return QuantKVCache(
+            k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
+            k_scale=jnp.zeros(shape[:-1], jnp.float32),
+            v_scale=jnp.zeros(shape[:-1], jnp.float32), length=ln)
+    dt = dtype_of(dtype)
+    return KVCache(k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt), length=ln)
+
+
+# ---------------------------------------------------------------------------
+# parameter tables
+# ---------------------------------------------------------------------------
+
+def _ffn_table(cfg):
+    """Dense FFN or MoE table for one block."""
+    if cfg.moe is None:
+        return {"mlp": swiglu_table(cfg.d_model, cfg.d_ff)}
+    m = cfg.moe
+    t = {"moe": MOE.moe_table(cfg.d_model, m.num_experts, m.d_ff_expert)}
+    if m.num_shared_experts:
+        t["shared"] = swiglu_table(cfg.d_model,
+                                   m.num_shared_experts * m.d_ff_shared)
+    return t
+
+
+def block_table(cfg, *, dense_ffn: bool = False):
+    t = {"ln1": norm_table(cfg), "attn": A.attention_table(cfg)}
+    if dense_ffn:
+        ffn = {"mlp": swiglu_table(cfg.d_model,
+                                   (cfg.moe.d_ff_dense or cfg.d_ff)
+                                   if cfg.moe else cfg.d_ff)}
+    else:
+        ffn = _ffn_table(cfg)
+    t.update(ffn)
+    if not cfg.parallel_block:
+        t["ln2"] = norm_table(cfg)
+    return t
+
+
+def lm_table(cfg):
+    m = cfg.moe
+    first_k = m.first_k_dense if m else 0
+    t = {
+        "embed": embedding_table(cfg.vocab_size, cfg.d_model, cfg.tie_embeddings),
+        "blocks": stack_table(block_table(cfg), cfg.num_layers - first_k),
+        "ln_f": norm_table(cfg),
+    }
+    if first_k:
+        t["dense_blocks"] = [block_table(cfg, dense_ffn=True)
+                             for _ in range(first_k)]
+    return t
+
+
+def init(cfg, key: jax.Array):
+    return init_table(key, lm_table(cfg), cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _ffn_apply(cfg, p, h):
+    """FFN half of a block. Returns (out, aux_loss)."""
+    if cfg.moe is None or "moe" not in p:
+        return swiglu(p["mlp"], h), jnp.zeros((), jnp.float32)
+    m = cfg.moe
+    idx, prob, aux = MOE.route(m, p["moe"], h)
+    out = MOE.moe_apply(m, p["moe"], h, idx, prob)
+    if m.num_shared_experts:
+        out = out + swiglu(p["shared"], h)
+    return out, aux
+
+
+def block_apply(cfg, p, x, positions, *,
+                cache_k=None, cache_v=None, cache_scales=None, kv_len=None,
+                chunk=1024):
+    """One transformer block. Returns (x, aux, new_kv) where new_kv is
+    (k, v) or (k, v, k_scale, v_scale) for the int8 cache.
+
+    Without cache: full self-attention over x (train / prefill).
+    With cache (decode): x is (B, 1, D); the new KV row is written at
+    ``kv_len`` and attention runs over the whole cache.
+    """
+    h = apply_norm(cfg, p["ln1"], x)
+    # SP boundary: norm runs on the seq-sharded carry; attention needs the
+    # full sequence, so the gather happens here (post-norm, bf16).
+    h = constrain(h, "batch", "seq", "embed_act")
+    pos1d = positions[0] if cfg.m_rope else positions
+    if cache_k is None:
+        q, k, v = A.qkv_project(cfg, p["attn"], h, positions)
+        attn = A.chunked_attention(
+            q, k, v, causal=True, q_positions=pos1d, kv_positions=pos1d,
+            softcap=cfg.attn_logit_softcap, window=cfg.sliding_window,
+            chunk=chunk)
+        new_kv = (k, v)
+    else:
+        from repro.distributed.collectives import seq_sharded_decode_attention
+        q, k, v = A.qkv_project(cfg, p["attn"], h, positions)
+        ks, vs = cache_scales if cache_scales is not None else (None, None)
+        attn, *new_kv = seq_sharded_decode_attention(
+            q, cache_k, cache_v, k, v, kv_len, k_scale=ks, v_scale=vs,
+            softcap=cfg.attn_logit_softcap, chunk=chunk)
+        new_kv = tuple(new_kv)
+    attn = A.attn_output(cfg, p["attn"], attn)
+    if cfg.parallel_block:
+        ffn, aux = _ffn_apply(cfg, p, h)
+        x = x + attn + ffn
+    else:
+        x = x + attn
+        h2 = apply_norm(cfg, p["ln2"], x)
+        ffn, aux = _ffn_apply(cfg, p, h2)
+        x = x + ffn
+    # carry leaves the block sequence-sharded (training SP; no-op otherwise)
+    x = constrain(x, "batch", "seq_sp", "embed_act")
+    return x, aux, new_kv
+
+
+_REMAT_POLICIES = {
+    "none": None,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+def _scan_blocks(cfg, stacked, x, positions, *, remat, cache=None,
+                 collect_kv=False, chunk=1024):
+    """Scan the homogeneous block stack. Returns (x, aux_sum, (ks, vs)).
+
+    ``collect_kv`` stacks each layer's fresh K/V as scan outputs (prefill);
+    training leaves it off so no (L, B, S, K, D) buffer is ever requested.
+    """
+
+    quant = isinstance(cache, QuantKVCache)
+
+    def body_nocache(carry, p):
+        h, aux = carry
+        h, a, kv = block_apply(cfg, p, h, positions, chunk=chunk)
+        ys = kv if collect_kv else None
+        return (h, aux + a), ys
+
+    def body_cache(carry, layer):
+        h, aux = carry
+        if quant:
+            p, ck, cv, ks, vs = layer
+            scales = (ks, vs)
+        else:
+            p, ck, cv = layer
+            scales = None
+        h, a, kv = block_apply(cfg, p, h, positions,
+                               cache_k=ck, cache_v=cv, cache_scales=scales,
+                               kv_len=cache.length, chunk=chunk)
+        return (h, aux + a), kv
+
+    body = body_cache if cache is not None else body_nocache
+    if remat and cfg.remat != "none":
+        policy = _REMAT_POLICIES.get(cfg.remat, _REMAT_POLICIES["full"])
+        body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+
+    carry0 = (x, jnp.zeros((), jnp.float32))
+    if cache is None:
+        (x, aux), ys = jax.lax.scan(body, carry0, stacked)
+        kv = ys if collect_kv else None
+    else:
+        xs = ((stacked, cache.k, cache.v, cache.k_scale, cache.v_scale)
+              if quant else (stacked, cache.k, cache.v))
+        (x, aux), kv = jax.lax.scan(body, carry0, xs)
+    return x, aux, kv
+
+
+def _apply_backbone(cfg, params, tokens, positions, *, remat,
+                    cache: KVCache | None = None, collect_kv=False,
+                    chunk=1024):
+    compute_dt = dtype_of(cfg.compute_dtype)
+    x = embed(params["embed"], tokens, compute_dt)
+    aux_total = jnp.zeros((), jnp.float32)
+    quant = isinstance(cache, QuantKVCache)
+    dense_caches = []
+    n_dense = len(params.get("dense_blocks", ()))
+    for i, bp in enumerate(params.get("dense_blocks", ())):
+        ck = cv = scales = None
+        kl = None
+        if cache is not None:
+            ck, cv, kl = cache.k[i], cache.v[i], cache.length
+            if quant:
+                scales = (cache.k_scale[i], cache.v_scale[i])
+        x, a, kv = block_apply(cfg, bp, x, positions,
+                               cache_k=ck, cache_v=cv, cache_scales=scales,
+                               kv_len=kl, chunk=chunk)
+        aux_total += a
+        if cache is not None or collect_kv:
+            dense_caches.append(kv)
+    sub = None
+    if cache is not None:
+        sub = jax.tree_util.tree_map(
+            lambda c: c[n_dense:] if c.ndim > 1 else c, cache)
+        sub = sub._replace(length=cache.length)
+    x, aux, kv = _scan_blocks(cfg, params["blocks"], x, positions,
+                              remat=remat, cache=sub,
+                              collect_kv=collect_kv, chunk=chunk)
+    aux_total += aux
+    x = apply_norm(cfg, params["ln_f"], x)
+    new_cache = None
+    if kv is not None:
+        if dense_caches:
+            kv = tuple(
+                jnp.concatenate([jnp.stack([c[j] for c in dense_caches]),
+                                 kv[j]])
+                for j in range(len(kv)))
+        length = (cache.length if cache is not None
+                  else jnp.full((tokens.shape[0],), tokens.shape[1],
+                                jnp.int32))
+        if len(kv) == 4:
+            new_cache = QuantKVCache(k=kv[0], v=kv[1], k_scale=kv[2],
+                                     v_scale=kv[3], length=length)
+        else:
+            new_cache = KVCache(k=kv[0], v=kv[1], length=length)
+    return x, aux_total, new_cache
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def default_positions(cfg, tokens: jax.Array) -> jax.Array:
+    B, S = tokens.shape[0], tokens.shape[1]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.m_rope:
+        pos = jnp.broadcast_to(pos[None], (3, B, S))
+    return pos
+
+
+def forward(cfg, params, tokens, positions=None, *, remat=True, chunk=1024):
+    """Training forward: full logits (B, S, V) fp32 + aux loss."""
+    if positions is None:
+        positions = default_positions(cfg, tokens)
+    x, aux, _ = _apply_backbone(cfg, params, tokens, positions, remat=remat,
+                                chunk=chunk)
+    lg = lm_logits(params["embed"], x, cfg.tie_embeddings,
+                   cfg.final_logit_softcap)
+    return lg, aux
+
+
+def prefill(cfg, params, tokens, positions=None, *, cache_dtype="bfloat16",
+            max_len: int | None = None, chunk=1024):
+    """Prefill: last-position logits (B, V) + KV cache sized to ``max_len``."""
+    if positions is None:
+        positions = default_positions(cfg, tokens)
+    x, _, cache = _apply_backbone(cfg, params, tokens, positions, remat=False,
+                                  collect_kv=True, chunk=chunk)
+    Sq = tokens.shape[1]
+    max_len = max_len or Sq
+    cdt = dtype_of(cache_dtype)
+
+    def grow(c):
+        if max_len == Sq:
+            return c.astype(cdt)
+        out = jnp.zeros(c.shape[:2] + (max_len,) + c.shape[3:], cdt)
+        return out.at[:, :, :Sq].set(c.astype(cdt))
+
+    cache = KVCache(k=grow(cache.k), v=grow(cache.v), length=cache.length)
+    last = x[:, -1:]
+    lg = lm_logits(params["embed"], last, cfg.tie_embeddings,
+                   cfg.final_logit_softcap)
+    return lg[:, 0], cache
+
+
+def decode_step(cfg, params, tokens, cache: KVCache, *, chunk=2048):
+    """One decode step. tokens: (B, 1) -> logits (B, V), updated cache."""
+    B = tokens.shape[0]
+    pos = cache.length[:, None]
+    if cfg.m_rope:
+        pos = jnp.broadcast_to(pos[None], (3, B, 1))
+    x, _, new_cache = _apply_backbone(cfg, params, tokens, pos, remat=False,
+                                      cache=cache, chunk=chunk)
+    lg = lm_logits(params["embed"], x, cfg.tie_embeddings,
+                   cfg.final_logit_softcap)
+    new_cache = new_cache._replace(length=cache.length + 1)
+    return lg[:, 0], new_cache

@@ -1,0 +1,199 @@
+"""Optimizers (hand-rolled, sharding-aware): AdamW and Adafactor.
+
+Each optimizer also derives the *logical axes* of its state from the
+parameter axes, so `distributed.sharding` can build NamedShardings for the
+optimizer state exactly like it does for parameters (Adafactor's factored
+vectors inherit the row/col axes of the parameter they factor).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Pytree], Pytree]
+    update: Callable[[Pytree, Pytree, Pytree], tuple[Pytree, Pytree]]
+    state_axes: Callable[[Pytree], Pytree]
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(schedule: Callable[[jax.Array], jax.Array], *,
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, max_grad_norm: float = 1.0) -> Optimizer:
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "mu": jax.tree_util.tree_map(zeros, params),
+            "nu": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        step = state["step"] + 1
+        lr = schedule(step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)   # per-leaf cast: no full fp32 copy
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m2 / c1
+            vhat = v2 / c2
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            p32 = p.astype(jnp.float32)
+            new_p = p32 - lr * (delta + weight_decay * p32)
+            return new_p.astype(p.dtype), m2, v2
+
+        flat = jax.tree_util.tree_map(upd, params, grads,
+                                      state["mu"], state["nu"])
+        new_params = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                            is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                        is_leaf=lambda t: isinstance(t, tuple))
+        new_nu = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                        is_leaf=lambda t: isinstance(t, tuple))
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_params, {"mu": new_mu, "nu": new_nu, "step": step}, metrics
+
+    def state_axes(param_axes):
+        return {
+            "mu": param_axes,
+            "nu": param_axes,
+            "step": (),
+        }
+
+    return Optimizer(init=init, update=update, state_axes=state_axes)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment over the last two dims; no momentum)
+# ---------------------------------------------------------------------------
+
+def _factored(p_shape) -> bool:
+    return len(p_shape) >= 2 and p_shape[-1] > 1 and p_shape[-2] > 1
+
+
+def adafactor(schedule: Callable[[jax.Array], jax.Array], *,
+              decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              weight_decay: float = 0.0,
+              max_grad_norm: float = 1.0) -> Optimizer:
+
+    def init(params):
+        def mk(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {
+            "v": jax.tree_util.tree_map(mk, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        step = state["step"] + 1
+        lr = schedule(step)
+        # time-dependent decay (Adafactor beta2 schedule)
+        beta2 = 1.0 - step.astype(jnp.float32) ** (-decay)
+
+        def upd(p, g, v):
+            g = g.astype(jnp.float32)   # per-leaf cast: no full fp32 copy
+            g2 = jnp.square(g) + eps
+            if _factored(p.shape):
+                vr = beta2 * v["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * v["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                    + eps)
+                cfac = jax.lax.rsqrt(vc + eps)
+                delta = g * rfac[..., None] * cfac[..., None, :]
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                vv = beta2 * v["v"] + (1 - beta2) * g2
+                delta = g * jax.lax.rsqrt(vv + eps)
+                new_v = {"v": vv}
+            # update clipping by RMS
+            rms = jnp.sqrt(jnp.mean(jnp.square(delta)) + 1e-30)
+            delta = delta / jnp.maximum(1.0, rms / clip_threshold)
+            p32 = p.astype(jnp.float32)
+            new_p = p32 - lr * (delta + weight_decay * p32)
+            return new_p.astype(p.dtype), new_v
+
+        is_v = lambda t: isinstance(t, dict) and ("vr" in t or "v" in t)
+        flat = jax.tree_util.tree_map(upd, params, grads, state["v"],
+                                      is_leaf=lambda t: False)
+        # tree_map over params zips structures; flat leaves are tuples
+        new_params = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                            is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_params, {"v": new_v, "step": step}, metrics
+
+    def state_axes(param_axes):
+        def mk(ax):
+            ax = tuple(ax)
+            if len(ax) >= 2:
+                return {"vr": ax[:-1], "vc": ax[:-2] + ax[-1:]}
+            return {"v": ax}
+        return {
+            "v": jax.tree_util.tree_map(mk, param_axes,
+                                        is_leaf=lambda t: isinstance(t, tuple)),
+            "step": (),
+        }
+
+    return Optimizer(init=init, update=update, state_axes=state_axes)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    def schedule(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup, 1)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return peak_lr * jnp.where(s < warmup, warm, cos)
+    return schedule
+
+
+def constant(lr: float):
+    return lambda step: jnp.full((), lr, jnp.float32)
+
+
+def make_optimizer(cfg, *, peak_lr: float = 3e-4, warmup: int = 200,
+                   total: int = 10_000) -> Optimizer:
+    sched = warmup_cosine(peak_lr, warmup, total)
+    if cfg.optimizer == "adafactor":
+        return adafactor(sched)
+    return adamw(sched)

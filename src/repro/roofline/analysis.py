@@ -1,0 +1,125 @@
+"""Three-term roofline from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, from the compiled artifact:
+
+  compute_s    = HLO_FLOPs_per_device / peak_FLOP/s          (per chip)
+  memory_s     = HLO_bytes_per_device / HBM_bw
+  collective_s = collective_bytes_per_device / (links x link_bw)
+
+The assignment's canonical formulation divides *global* quantities by
+(chips x per-chip rate); our artifacts store per-device quantities from the
+SPMD program, which is the same number (global = per-device x chips).  Two
+collective accountings are kept: the assignment's operand-bytes sum and a
+ring-traffic model (2(n-1)/n for all-reduce etc.) — the ring number is what
+the step time actually sees and is what §Perf iterates on.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+
+from repro.roofline.hw import TPU_V5E, ChipSpec
+
+
+@dataclass(frozen=True)
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    devices: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    collective_operand_s: float
+    model_flops: float
+    hlo_flops_global: float
+    peak_bytes: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        return (self.model_flops / self.hlo_flops_global
+                if self.hlo_flops_global else 0.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU bound: useful FLOPs / (chips x peak x bound time).
+
+        The perfectly-overlapped model: the step cannot finish faster than
+        its slowest roofline term; the fraction is how much useful compute
+        that bound leaves on the table."""
+        cap = self.devices * TPU_V5E.peak_flops_bf16 * self.bound_s
+        return self.model_flops / cap if cap else 0.0
+
+
+def from_record(rec: dict, chip: ChipSpec = TPU_V5E) -> Roofline:
+    h = rec["hlo"]
+    links_bw = chip.ici_link_bandwidth * chip.ici_links
+    return Roofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        devices=rec["devices"],
+        compute_s=h["flops_per_device"] / chip.peak_flops_bf16,
+        memory_s=h["bytes_per_device"] / chip.hbm_bandwidth,
+        collective_s=h["collective_ring_bytes"] / links_bw,
+        collective_operand_s=h["collective_operand_bytes"] / links_bw,
+        model_flops=rec["model"]["model_flops_global"],
+        hlo_flops_global=h["flops_per_device"] * rec["devices"],
+        peak_bytes=rec["memory"]["peak_bytes_per_device"],
+    )
+
+
+def load_records(art_dir: str) -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def improvement_hint(r: Roofline) -> str:
+    """One sentence on what would move the dominant term down."""
+    if r.dominant == "collective":
+        return ("cut TP activation all-reduces (sequence-parallel regions / "
+                "bf16 payloads) or shard further so per-device collective "
+                "bytes drop")
+    if r.dominant == "memory":
+        return ("fuse reads (flash-style blocks), shrink cache dtype "
+                "(bf16->int8 KV), or raise arithmetic intensity with bigger "
+                "per-device tiles")
+    return ("reduce recompute (remat policy), skip masked work (causal "
+            "block skipping), or trade batch for fewer accumulation steps")
+
+
+def table(recs: list[dict], *, mesh: str = "single") -> str:
+    """Markdown roofline table for EXPERIMENTS.md."""
+    rows = []
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | dominant "
+           "| MODEL/HLO flops | roofline frac | peak GiB/dev |")
+    sep = "|" + "---|" * 9
+    rows.append(hdr)
+    rows.append(sep)
+    for rec in recs:
+        if rec.get("status") == "SKIP":
+            if rec["mesh"] == mesh:
+                rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — "
+                            f"| SKIP | — | — | — |")
+            continue
+        if rec.get("status") != "OK" or rec["mesh"] != mesh:
+            continue
+        r = from_record(rec)
+        rows.append(
+            f"| {r.arch} | {r.shape} | {r.compute_s:.4f} | {r.memory_s:.4f} "
+            f"| {r.collective_s:.4f} | **{r.dominant}** "
+            f"| {r.useful_ratio:.2f} | {r.roofline_fraction:.3f} "
+            f"| {r.peak_bytes/2**30:.1f} |")
+    return "\n".join(rows)

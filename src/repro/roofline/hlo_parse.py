@@ -1,0 +1,505 @@
+"""Post-SPMD HLO text analysis with loop trip-count accounting.
+
+`compiled.cost_analysis()` on the CPU backend visits each `while` body ONCE
+(no trip-count multiplication), which under-counts scanned layer stacks by
+~L x.  This parser walks the computation graph from ENTRY, multiplies while
+bodies by their trip counts (recovered from the canonical `constant(N)` in
+the loop condition), resolves fusion/call subcomputations for FLOP counting,
+and models bytes at fusion boundaries (operands + outputs of top-level ops
+= HBM traffic).
+
+Collectives are recorded with operand/output bytes, op kind, shard-group
+size, and execution count, giving both the assignment's operand-bytes sum
+and a ring-traffic model.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_SHAPE_RE = re.compile(
+    r"(pred|bf16|f16|f32|f64|f8e4m3fn|f8e5m2|s4|u4|s8|u8|s16|u16|s32|u32|"
+    r"s64|u64|c64|c128)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"^(?:\([^()]*\)|\S+)\s+([a-z][\w\-]*)\(")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*)?\{\s*$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "tanh", "log", "rsqrt", "sqrt", "power",
+    "and", "or", "xor", "not", "compare", "select", "clamp", "floor",
+    "ceil", "sign", "cosine", "sine", "logistic", "expm1", "log1p",
+    "remainder", "atan2", "cbrt", "round-nearest-afz", "erf",
+    "round-nearest-even", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "convert", "exponential-minus-one",
+}
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast",
+               "all-gather-start", "all-reduce-start")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    out_type: str
+    rest: str
+    operands: list[str] = field(default_factory=list)
+
+
+@dataclass
+class CollectiveRecord:
+    kind: str
+    out_bytes: int
+    operand_bytes: int
+    group_size: int
+    count: int          # execution count (trip-multiplied)
+
+    @property
+    def ring_bytes(self) -> float:
+        """Per-chip link traffic under ring algorithms."""
+        n = max(self.group_size, 1)
+        if n == 1:
+            return 0.0
+        if self.kind.startswith("all-reduce"):
+            return 2 * (n - 1) / n * self.out_bytes
+        if self.kind.startswith("all-gather"):
+            return (n - 1) / n * self.out_bytes
+        if self.kind == "reduce-scatter":
+            return (n - 1) / n * self.operand_bytes
+        if self.kind == "all-to-all":
+            return (n - 1) / n * self.out_bytes
+        if self.kind == "collective-permute":
+            return float(self.out_bytes)
+        return float(self.out_bytes)
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0               # per-device, trip-multiplied
+    dot_flops: float = 0.0
+    bytes_accessed: float = 0.0      # CPU-fusion-boundary model (upper bound)
+    # TPU model: standalone elementwise/shape ops fuse into their producers
+    # (the CPU backend leaves them unfused + f32-legalized), so only dots,
+    # fusions, slicing/update traffic, reduces, and collectives touch HBM.
+    bytes_fused: float = 0.0
+    collectives: list[CollectiveRecord] = field(default_factory=list)
+    while_trips: dict = field(default_factory=dict)
+
+    @property
+    def collective_operand_bytes(self) -> float:
+        return sum(c.operand_bytes * c.count for c in self.collectives)
+
+    @property
+    def collective_out_bytes(self) -> float:
+        return sum(c.out_bytes * c.count for c in self.collectives)
+
+    @property
+    def collective_ring_bytes(self) -> float:
+        return sum(c.ring_bytes * c.count for c in self.collectives)
+
+    def collective_summary(self) -> dict:
+        agg: dict[str, dict] = defaultdict(lambda: {"count": 0, "bytes": 0.0,
+                                                    "ring_bytes": 0.0})
+        for c in self.collectives:
+            a = agg[c.kind]
+            a["count"] += c.count
+            a["bytes"] += c.out_bytes * c.count
+            a["ring_bytes"] += c.ring_bytes * c.count
+        return dict(agg)
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: dict[str, list[Instr]] = {}
+        self.entry: str | None = None
+        self._parse(text)
+        self._shape_cache: dict[tuple[str, str], str] = {}
+
+    def _parse(self, text: str) -> None:
+        cur: list[Instr] | None = None
+        cur_name = None
+        for line in text.splitlines():
+            if line.startswith("}"):
+                cur = None
+                continue
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr and not _INSTR_RE.match(line):
+                cur_name = hdr.group(2)
+                cur = []
+                self.computations[cur_name] = cur
+                if hdr.group(1):
+                    self.entry = cur_name
+                continue
+            if cur is None:
+                continue
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            rest = m.group(3)
+            opm = _OPCODE_RE.match(rest)
+            if not opm:
+                continue
+            opcode = opm.group(1)
+            out_type = rest[:opm.start(1)].strip()
+            paren = rest[opm.end(1):]
+            depth = 0
+            args = ""
+            for ch in paren:
+                if ch == "(":
+                    depth += 1
+                    if depth == 1:
+                        continue
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                if depth >= 1:
+                    args += ch
+            operands = _OPERAND_RE.findall(args)
+            cur.append(Instr(name=m.group(2), opcode=opcode,
+                             out_type=out_type, rest=rest,
+                             operands=operands))
+
+    # -- shape lookup ---------------------------------------------------------
+
+    def _operand_type(self, comp: str, name: str) -> str:
+        key = (comp, name)
+        if key in self._shape_cache:
+            return self._shape_cache[key]
+        for ins in self.computations.get(comp, ()):
+            if ins.name == name:
+                self._shape_cache[key] = ins.out_type
+                return ins.out_type
+        self._shape_cache[key] = ""
+        return ""
+
+    # -- trip counts ------------------------------------------------------------
+
+    def _trip_count(self, cond_comp: str) -> int:
+        consts = []
+        for ins in self.computations.get(cond_comp, ()):
+            consts += [int(c) for c in _CONST_RE.findall(ins.rest)]
+        return max(consts) if consts else 1
+
+    # -- cost walk ----------------------------------------------------------------
+
+    def cost(self) -> HloCost:
+        out = HloCost()
+        assert self.entry, "no ENTRY computation"
+        self._walk(self.entry, 1, out, top_level=True)
+        return out
+
+    def _dot_flops(self, comp: str, ins: Instr) -> float:
+        out_elems = 1
+        for d in _shape_dims(ins.out_type):
+            out_elems *= d
+        lhs_t = self._operand_type(comp, ins.operands[0]) if ins.operands else ""
+        lhs_dims = _shape_dims(lhs_t)
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rest)
+        contract = 1
+        if m and lhs_dims:
+            for idx in m.group(1).split(","):
+                if idx:
+                    contract *= lhs_dims[int(idx)]
+        return 2.0 * out_elems * contract
+
+    def _conv_flops(self, comp: str, ins: Instr) -> float:
+        out_elems = 1
+        for d in _shape_dims(ins.out_type):
+            out_elems *= d
+        # kernel operand: spatial window x input features x 2
+        rhs_t = self._operand_type(comp, ins.operands[1]) \
+            if len(ins.operands) > 1 else ""
+        rdims = _shape_dims(rhs_t)
+        k = 1
+        for d in rdims[:-1]:   # HWIO: all but output features
+            k *= d
+        return 2.0 * out_elems * k
+
+    def _flops_of(self, comp: str, counted: set) -> tuple[float, float]:
+        """(total flops, dot flops) of one computation, recursing into
+        fusions/calls (NOT whiles — handled by _walk)."""
+        if comp in counted:
+            pass  # computations may be shared; cost per invocation is correct
+        total = 0.0
+        dots = 0.0
+        for ins in self.computations.get(comp, ()):
+            if ins.opcode == "dot":
+                f = self._dot_flops(comp, ins)
+                total += f
+                dots += f
+            elif ins.opcode == "convolution":
+                f = self._conv_flops(comp, ins)
+                total += f
+                dots += f
+            elif ins.opcode in ("fusion", "call", "custom-call"):
+                m = _CALLS_RE.search(ins.rest)
+                if m:
+                    t, d = self._flops_of(m.group(1), counted)
+                    total += t
+                    dots += d
+            elif ins.opcode in ("reduce", "reduce-window"):
+                elems = 1
+                t = self._operand_type(comp, ins.operands[0]) \
+                    if ins.operands else ins.out_type
+                for d in _shape_dims(t):
+                    elems *= d
+                total += elems
+            elif ins.opcode in _ELEMENTWISE:
+                elems = 1
+                for d in _shape_dims(ins.out_type):
+                    elems *= d
+                total += elems
+        return total, dots
+
+    def _fusion_param_bytes(self, called: str):
+        """(per-param charges, output-charge override | None) for a fused
+        computation.  Two in-place patterns matter for scanned stacks:
+        parameters consumed only through slicing ops are charged the slice,
+        and a root dynamic-update-slice aliases its buffer param — traffic
+        is 2x the updated slice, not the whole buffer."""
+        key = ("__fparams__", called)
+        if key in self._shape_cache:
+            return self._shape_cache[key]
+        instrs = self.computations.get(called, ())
+        params: dict[int, tuple[str, str]] = {}
+        for ins in instrs:
+            if ins.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", ins.rest)
+                if m:
+                    params[int(m.group(1))] = (ins.name, ins.out_type)
+        # in-place DUS root: find a DUS whose output is fusion-output-sized
+        dus = [i for i in instrs if i.opcode == "dynamic-update-slice"]
+        out_override = None
+        dus_buffers: set[str] = set()
+        if dus:
+            upd_bytes = 0.0
+            for d in dus:
+                if len(d.operands) > 1:
+                    upd_bytes += float(_shape_bytes(
+                        self._operand_type(called, d.operands[1])))
+                if d.operands:
+                    dus_buffers.add(d.operands[0])
+            out_override = 2.0 * upd_bytes
+        charges: dict[int, float] = {}
+        for idx, (pname, ptype) in params.items():
+            full = float(_shape_bytes(ptype))
+            users = [i for i in instrs if pname in i.operands]
+            if pname in dus_buffers and all(
+                    u.opcode in ("dynamic-update-slice", "bitcast")
+                    for u in users):
+                charges[idx] = 0.0   # aliased in-place buffer
+            elif users and all(u.opcode in ("dynamic-slice", "slice",
+                                            "gather", "bitcast", "reshape")
+                               for u in users):
+                charged = sum(float(_shape_bytes(u.out_type)) for u in users
+                              if u.opcode in ("dynamic-slice", "slice",
+                                              "gather"))
+                charges[idx] = min(full, charged if charged else full)
+            else:
+                charges[idx] = full
+        self._shape_cache[key] = (charges, out_override)
+        return charges, out_override
+
+    def _fusion_dot_bytes(self, called: str) -> float:
+        """Operand+output bytes of dot/convolution ops inside a fusion."""
+        key = ("__fdots__", called)
+        if key in self._shape_cache:
+            return self._shape_cache[key]
+        total = 0.0
+        for ins in self.computations.get(called, ()):
+            if ins.opcode in ("dot", "convolution"):
+                total += float(_shape_bytes(ins.out_type))
+                for op in ins.operands:
+                    total += float(_shape_bytes(
+                        self._operand_type(called, op)))
+            elif ins.opcode in ("fusion", "call"):
+                m = _CALLS_RE.search(ins.rest)
+                if m:
+                    total += self._fusion_dot_bytes(m.group(1))
+        self._shape_cache[key] = total
+        return total
+
+    def _bytes_of_instr(self, comp: str, ins: Instr) -> float:
+        # dtype converts are CPU float-normalization artifacts (bf16 ops get
+        # wrapped in f32 converts); on the TPU target they fuse into their
+        # producer/consumer, so they carry no HBM traffic of their own.
+        if ins.opcode == "convert":
+            return 0.0
+        if ins.opcode == "copy":
+            return float(_shape_bytes(ins.out_type))
+        # Slicing ops touch only the slice, not the buffer they index into
+        # (counting the full operand would charge scanned stacks L times).
+        if ins.opcode in ("dynamic-slice", "slice", "gather"):
+            return 2.0 * _shape_bytes(ins.out_type)
+        if ins.opcode == "dynamic-update-slice":
+            upd = (_shape_bytes(self._operand_type(comp, ins.operands[1]))
+                   if len(ins.operands) > 1 else 0)
+            return 2.0 * upd
+        if ins.opcode == "scatter":
+            upd = (_shape_bytes(self._operand_type(comp, ins.operands[2]))
+                   if len(ins.operands) > 2 else _shape_bytes(ins.out_type))
+            return 2.0 * upd
+        if ins.opcode in ("fusion", "call"):
+            m = _CALLS_RE.search(ins.rest)
+            if m:
+                charges, out_override = self._fusion_param_bytes(m.group(1))
+                b = (out_override if out_override is not None
+                     else float(_shape_bytes(ins.out_type)))
+                for i, op in enumerate(ins.operands):
+                    b += charges.get(
+                        i, float(_shape_bytes(self._operand_type(comp, op))))
+                return b
+        b = _shape_bytes(ins.out_type)
+        for op in ins.operands:
+            b += _shape_bytes(self._operand_type(comp, op))
+        return float(b)
+
+    def _walk(self, comp: str, mult: int, out: HloCost,
+              top_level: bool) -> None:
+        for ins in self.computations.get(comp, ()):
+            op = ins.opcode
+            if op == "while":
+                body_m = _CALLS_RE.search(ins.rest)
+                cond_m = _COND_RE.search(ins.rest)
+                trips = self._trip_count(cond_m.group(1)) if cond_m else 1
+                out.while_trips[ins.name] = trips
+                if body_m:
+                    self._walk(body_m.group(1), mult * trips, out,
+                               top_level=True)
+                continue
+            if op == "conditional":
+                for m in re.finditer(
+                        r"(?:true_computation|false_computation|"
+                        r"branch_computations=\{)([^,}]+)", ins.rest):
+                    self._walk(m.group(1).strip("%"), mult, out,
+                               top_level=True)
+                continue
+            if op.endswith("-done"):
+                continue   # async completion of an already-counted *-start
+            if op.startswith(COLLECTIVES) or op in COLLECTIVES:
+                grp = 1
+                g = _GROUPS_RE.search(ins.rest)
+                if g:
+                    grp = int(g.group(2))
+                else:
+                    gl = _GROUPS_LIST_RE.search(ins.rest)
+                    if gl:
+                        grp = len(gl.group(1).split(","))
+                operand_b = sum(
+                    _shape_bytes(self._operand_type(comp, o))
+                    for o in ins.operands)
+                out.collectives.append(CollectiveRecord(
+                    kind=op.replace("-start", ""),
+                    out_bytes=_shape_bytes(ins.out_type),
+                    operand_bytes=operand_b, group_size=grp, count=mult))
+                b = self._bytes_of_instr(comp, ins) * mult
+                out.bytes_accessed += b
+                out.bytes_fused += b
+                continue
+            if op in ("fusion", "call", "custom-call"):
+                t, d = 0.0, 0.0
+                m = _CALLS_RE.search(ins.rest)
+                if m:   # flops from the called computation
+                    t, d = self._flops_of(m.group(1), set())
+                out.flops += t * mult
+                out.dot_flops += d * mult
+                out.bytes_accessed += self._bytes_of_instr(comp, ins) * mult
+                # fused model: interior elementwise fuses into neighboring
+                # dots (whose operands are charged in full); only in-place
+                # scan-carry updates (root DUS) represent irreducible traffic
+                if m:
+                    _, ovr = self._fusion_param_bytes(m.group(1))
+                    if ovr is not None:
+                        out.bytes_fused += ovr * mult
+                    # dot/conv INSIDE the fusion: charge their shapes
+                    if d:
+                        out.bytes_fused += self._fusion_dot_bytes(
+                            m.group(1)) * mult
+                continue
+            if op == "dot":
+                f = self._dot_flops(comp, ins)
+                out.flops += f * mult
+                out.dot_flops += f * mult
+                b = self._bytes_of_instr(comp, ins) * mult
+                out.bytes_accessed += b
+                out.bytes_fused += b
+                continue
+            if op == "convolution":
+                f = self._conv_flops(comp, ins)
+                out.flops += f * mult
+                out.dot_flops += f * mult
+                b = self._bytes_of_instr(comp, ins) * mult
+                out.bytes_accessed += b
+                out.bytes_fused += b
+                continue
+            if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "after-all", "partition-id", "replica-id"):
+                continue
+            if op in _ELEMENTWISE or op in (
+                    "reduce", "reduce-window", "broadcast", "reshape",
+                    "transpose", "copy", "iota", "concatenate", "slice",
+                    "dynamic-slice", "dynamic-update-slice", "pad", "gather",
+                    "scatter", "select-and-scatter", "sort", "rng",
+                    "rng-bit-generator", "cholesky", "triangular-solve"):
+                b = self._bytes_of_instr(comp, ins) * mult
+                out.bytes_accessed += b
+                if op in _ELEMENTWISE:
+                    elems = 1
+                    for dd in _shape_dims(ins.out_type):
+                        elems *= dd
+                    out.flops += elems * mult
+                    # elementwise fuses into its producer on TPU: 0 bytes
+                elif op in ("reduce", "reduce-window", "sort"):
+                    t = self._operand_type(comp, ins.operands[0]) \
+                        if ins.operands else ins.out_type
+                    elems = 1
+                    for dd in _shape_dims(t):
+                        elems *= dd
+                    out.flops += elems * mult
+                    out.bytes_fused += b
+                elif op in ("broadcast", "reshape", "iota", "pad"):
+                    pass   # fuse / bitcast on TPU
+                else:
+                    out.bytes_fused += b
+                continue
+            # unknown op: count bytes conservatively
+            b = self._bytes_of_instr(comp, ins) * mult
+            out.bytes_accessed += b
+            out.bytes_fused += b
+
+
+def analyze_hlo(text: str) -> HloCost:
+    return HloModule(text).cost()

@@ -1,0 +1,29 @@
+"""Token samplers (host-side, numpy — decode logits are tiny)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+Sampler = Callable[[np.ndarray], int]
+
+
+def greedy() -> Sampler:
+    def fn(logits: np.ndarray) -> int:
+        return int(np.argmax(logits))
+    return fn
+
+
+def temperature(t: float = 1.0, *, top_k: int = 0, seed: int = 0) -> Sampler:
+    rng = np.random.default_rng(seed)
+
+    def fn(logits: np.ndarray) -> int:
+        x = logits.astype(np.float64) / max(t, 1e-6)
+        if top_k:
+            kth = np.partition(x, -top_k)[-top_k]
+            x = np.where(x < kth, -np.inf, x)
+        x = x - x.max()
+        p = np.exp(x)
+        p /= p.sum()
+        return int(rng.choice(len(p), p=p))
+    return fn

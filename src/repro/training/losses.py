@@ -1,0 +1,42 @@
+"""Loss functions.
+
+Cross-entropy avoids materializing one-hot targets: the label logit is
+picked with an iota-compare-and-reduce that XLA fuses, so peak memory is the
+(vocab-sharded) logits themselves.  A small z-loss regularizer keeps the
+softmax normalizer bounded (standard at production scale).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lm_cross_entropy(logits: jax.Array, labels: jax.Array,
+                     mask: jax.Array | None = None, *,
+                     z_loss: float = 1e-4):
+    """logits: (B, S, V) fp32; labels: (B, S) int32. Returns (loss, metrics)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)                      # (B, S)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                    logits.ndim - 1)
+    picked = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0),
+                     axis=-1)                                    # (B, S)
+    nll = lse - picked
+    zl = z_loss * jnp.square(lse)
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum((nll + zl) * mask) / denom
+    acc = jnp.sum((jnp.argmax(logits, axis=-1) == labels) * mask) / denom
+    return loss, {"nll": jnp.sum(nll * mask) / denom, "accuracy": acc}
+
+
+def classification_cross_entropy(logits: jax.Array, labels: jax.Array):
+    """logits: (B, C) fp32; labels: (B,) int32 (GoogLeNet training)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(lse - picked)
+    acc = jnp.mean(jnp.argmax(logits, axis=-1) == labels)
+    return loss, {"accuracy": acc}

@@ -1,0 +1,102 @@
+"""Train-step factory: remat'd forward/backward, gradient accumulation via
+`lax.scan` over microbatches, optional cross-pod gradient compression, then
+the optimizer update.
+
+Gradient accumulation is the compute/communication-overlap lever: with the
+parameters FSDP-sharded, XLA's latency-hiding scheduler overlaps microbatch
+k's reduce-scatter with microbatch k+1's compute — and it bounds live
+activation / MoE-dispatch memory for the biggest cells.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import fns_for
+from repro.training.losses import classification_cross_entropy, lm_cross_entropy
+
+_METRIC_KEYS = ("loss", "nll", "accuracy", "aux_loss")
+
+
+def make_loss_fn(cfg, *, chunk: int = 4096) -> Callable:
+    fns = fns_for(cfg)
+
+    def loss_fn(params, batch):
+        if cfg.family == "cnn":
+            logits, aux = fns.forward(cfg, params, batch)
+            loss, m = classification_cross_entropy(logits, batch["labels"])
+            metrics = {"loss": loss, "nll": loss, "accuracy": m["accuracy"],
+                       "aux_loss": aux}
+        else:
+            logits, aux = fns.forward(cfg, params, batch, chunk=chunk)
+            loss, m = lm_cross_entropy(logits, batch["labels"])
+            metrics = {"loss": loss, "nll": m["nll"],
+                       "accuracy": m["accuracy"], "aux_loss": aux}
+        return loss + aux, metrics
+
+    return loss_fn
+
+
+def _split_microbatches(batch: dict, accum: int) -> dict:
+    """(B, ...) -> (A, B/A, ...) along the batch axis of every input."""
+    def split(x):
+        if x.ndim >= 3 and x.shape[0] == 3:   # M-RoPE positions (3, B, S)
+            return x.reshape(3, accum, x.shape[1] // accum,
+                             *x.shape[2:]).swapaxes(0, 1)
+        return x.reshape(accum, x.shape[0] // accum, *x.shape[1:])
+    return {k: split(v) for k, v in batch.items()}
+
+
+def make_train_step(cfg, optimizer, *, accum: int | None = None,
+                    chunk: int = 4096,
+                    grad_transform: Callable | None = None) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``grad_transform`` hooks post-accumulation gradients (e.g. int8
+    compression on the cross-pod axis — see repro.optim.compression).
+    """
+    loss_fn = make_loss_fn(cfg, chunk=chunk)
+    accum = accum if accum is not None else cfg.accum_steps
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    # bf16-param models (e.g. llama3-405b pure-bf16 training) accumulate in
+    # bf16 to halve gradient-buffer memory; fp32 otherwise.
+    acc_dt = (jnp.bfloat16 if cfg.param_dtype == "bfloat16"
+              else jnp.float32)
+
+    def _finish(grads, metrics, params, opt_state):
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        new_params, new_opt, opt_metrics = optimizer.update(grads, opt_state,
+                                                            params)
+        return new_params, new_opt, {**metrics, **opt_metrics}
+
+    if accum <= 1:
+        def train_step(params, opt_state, batch):
+            (_, metrics), grads = grad_fn(params, batch)
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(acc_dt), grads)
+            return _finish(grads, metrics, params, opt_state)
+        return train_step
+
+    def train_step(params, opt_state, batch):
+        micro = _split_microbatches(batch, accum)
+
+        def body(carry, mb):
+            g_acc, m_acc = carry
+            (_, metrics), grads = grad_fn(params, mb)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(acc_dt), g_acc, grads)
+            m_acc = {k: m_acc[k] + metrics[k] for k in _METRIC_KEYS}
+            return (g_acc, m_acc), None
+
+        g0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, acc_dt), params)
+        m0 = {k: jnp.zeros((), jnp.float32) for k in _METRIC_KEYS}
+        (grads, msum), _ = jax.lax.scan(body, (g0, m0), micro)
+        grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+        metrics = {k: v / accum for k, v in msum.items()}
+        return _finish(grads, metrics, params, opt_state)
+
+    return train_step

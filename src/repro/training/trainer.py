@@ -1,0 +1,122 @@
+"""Training loop with checkpoint/auto-resume, fault recovery, and elastic
+re-meshing hooks.
+
+The loop is deliberately boring: jitted step, periodic async checkpoint,
+fault schedule checked every step.  On a 'crash' fault it restores the last
+committed checkpoint (losing at most `ckpt_every-1` steps); on
+'device_loss' it additionally asks `distributed.elastic` for a shrunken
+mesh and re-shards state before continuing.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpoint import Checkpointer
+from repro.distributed.fault import FaultSchedule, Heartbeat, SimulatedFault
+from repro.models.registry import fns_for
+from repro.optim.optimizers import Optimizer, make_optimizer
+from repro.training.train_step import make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    num_steps: int = 100
+    ckpt_every: int = 20
+    log_every: int = 10
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    async_save: bool = True
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg, data_iter: Iterator[dict], tc: TrainerConfig,
+                 *, optimizer: Optimizer | None = None,
+                 fault_schedule: FaultSchedule | None = None,
+                 accum: int | None = None,
+                 on_device_loss: Callable[[], None] | None = None):
+        self.cfg = cfg
+        self.tc = tc
+        self.data_iter = data_iter
+        self.fns = fns_for(cfg)
+        self.optimizer = optimizer or make_optimizer(cfg)
+        self.faults = fault_schedule or FaultSchedule()
+        self.heartbeat = Heartbeat()
+        self.ckpt = Checkpointer(tc.ckpt_dir, keep=tc.keep,
+                                 async_save=tc.async_save)
+        self.on_device_loss = on_device_loss
+        self._step_fn = jax.jit(
+            make_train_step(cfg, self.optimizer, accum=accum))
+        self.step = 0
+        self.params = None
+        self.opt_state = None
+        self.history: list[dict] = []
+
+    # -- state ------------------------------------------------------------------
+
+    def init_state(self) -> None:
+        key = jax.random.PRNGKey(self.tc.seed)
+        self.params = self.fns.init(self.cfg, key)
+        self.opt_state = self.optimizer.init(self.params)
+        self.step = 0
+
+    def try_resume(self) -> bool:
+        if self.params is None:
+            self.init_state()
+        like = {"params": self.params, "opt": self.opt_state,
+                "step": jnp.zeros((), jnp.int32)}
+        res = self.ckpt.restore_latest(like)
+        if res is None:
+            return False
+        step, tree = res
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        self.step = int(tree["step"])
+        return True
+
+    def save(self) -> None:
+        self.ckpt.save(self.step, {
+            "params": self.params, "opt": self.opt_state,
+            "step": jnp.asarray(self.step, jnp.int32)})
+
+    # -- loop -------------------------------------------------------------------
+
+    def train(self) -> list[dict]:
+        if self.params is None and not self.try_resume():
+            self.init_state()
+        while self.step < self.tc.num_steps:
+            try:
+                self._one_step()
+            except SimulatedFault as f:
+                self._recover(f)
+        self.ckpt.wait()
+        return self.history
+
+    def _one_step(self) -> None:
+        self.faults.check(self.step)
+        batch = next(self.data_iter)
+        t0 = time.monotonic()
+        self.params, self.opt_state, metrics = self._step_fn(
+            self.params, self.opt_state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        metrics["step"] = self.step
+        metrics["step_time_s"] = time.monotonic() - t0
+        self.heartbeat.beat()
+        self.history.append(metrics)
+        self.step += 1
+        if self.step % self.tc.ckpt_every == 0:
+            self.save()
+
+    def _recover(self, fault: SimulatedFault) -> None:
+        """Restore last checkpoint; on device loss also re-mesh."""
+        if fault.kind == "device_loss" and self.on_device_loss is not None:
+            self.on_device_loss()
+        resumed = self.try_resume()
+        if not resumed:
+            self.init_state()
+        self.history.append({"step": self.step, "event": fault.kind,
+                             "resumed_from": self.step if resumed else 0})

@@ -1,0 +1,13 @@
+"""Test config: single-device CPU (the 512-device flag is dry-run-only)."""
+import numpy as np
+import pytest
+
+from hypothesis import settings
+
+settings.register_profile("repro", max_examples=12, deadline=None)
+settings.load_profile("repro")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,123 @@
+"""Attention core: chunked online-softmax vs naive, GQA, masks, LSE merge."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.models.layers.attention import (AttnResiduals, chunked_attention,
+                                           merge_lse)
+from repro.models.layers.rope import apply_m_rope, apply_rope
+
+
+def naive_attention(q, k, v, *, causal=True, kv_len=None):
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    kk = jnp.repeat(k, G, axis=2)
+    vv = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk) / math.sqrt(D)
+    Skv = k.shape[1]
+    mask = jnp.ones((B, S, Skv), bool)
+    if causal:
+        mask &= jnp.tril(jnp.ones((S, Skv), bool))[None]
+    if kv_len is not None:
+        mask &= (jnp.arange(Skv)[None, None] < kv_len[:, None, None])
+    s = jnp.where(mask[:, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+
+
+@pytest.mark.parametrize("chunk", [7, 16, 64])
+@pytest.mark.parametrize("H,K", [(8, 8), (8, 2), (4, 1)])
+def test_chunked_matches_naive(chunk, H, K):
+    B, S, D = 2, 33, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, K, D))
+    v = jax.random.normal(ks[2], (B, S, K, D))
+    out = chunked_attention(q, k, v, causal=True, chunk=chunk)
+    ref = naive_attention(q, k, v)
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+def test_kv_len_masking():
+    B, S, H, D = 3, 24, 4, 8
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    lengths = jnp.array([5, 24, 1], jnp.int32)
+    out = chunked_attention(q, k, v, causal=False,
+                            q_positions=jnp.zeros((B, 1), jnp.int32),
+                            kv_positions=jnp.arange(S, dtype=jnp.int32),
+                            kv_len=lengths, chunk=8)
+    ref = naive_attention(q, k, v, causal=False, kv_len=lengths)[:, :1]
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+def test_softcap_and_window():
+    B, S, H, D = 1, 32, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    out = chunked_attention(q, k, v, causal=True, softcap=10.0, window=8,
+                            chunk=16)
+    assert out.shape == (B, S, H, D)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    # window=1: each position attends only to itself -> out == v
+    out1 = chunked_attention(q, k, v, causal=True, window=1, chunk=16)
+    np.testing.assert_allclose(out1, v, atol=1e-5)
+
+
+@given(split=st.integers(min_value=1, max_value=31))
+def test_lse_merge_split_invariance(split):
+    """Attention over KV split at ANY point + LSE merge == full attention."""
+    B, S, H, D = 1, 32, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    full = chunked_attention(q, k, v, causal=False,
+                             q_positions=jnp.zeros((B, 1), jnp.int32),
+                             chunk=64)
+    parts = []
+    for lo, hi in ((0, split), (split, S)):
+        _, res = chunked_attention(
+            q, k[:, lo:hi], v[:, lo:hi], causal=False,
+            q_positions=jnp.zeros((B, 1), jnp.int32),
+            kv_positions=jnp.arange(lo, hi, dtype=jnp.int32),
+            chunk=64, return_residuals=True)
+        parts.append(res)
+    merged = merge_lse(parts)
+    np.testing.assert_allclose(merged, full, atol=2e-5)
+
+
+def test_rope_relative_shift_invariance():
+    """RoPE: scores depend only on relative positions."""
+    D = 16
+    q = jax.random.normal(jax.random.PRNGKey(4), (1, 1, 1, D))
+    k = jax.random.normal(jax.random.PRNGKey(5), (1, 1, 1, D))
+
+    def score(offset):
+        pq = jnp.array([[3 + offset]], jnp.int32)
+        pk = jnp.array([[1 + offset]], jnp.int32)
+        qr = apply_rope(q, pq, 10_000.0)
+        kr = apply_rope(k, pk, 10_000.0)
+        return float(jnp.sum(qr * kr))
+
+    assert abs(score(0) - score(100)) < 1e-3
+
+
+def test_m_rope_text_equals_rope():
+    """Identical position streams (pure text) must reduce to standard RoPE."""
+    B, S, H, D = 1, 6, 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(6), (B, S, H, D))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    mpos = jnp.broadcast_to(pos[None], (3, B, S))
+    a = apply_rope(x, pos, 10_000.0)
+    b = apply_m_rope(x, mpos, 10_000.0, (4, 2, 2))
+    np.testing.assert_allclose(a, b, atol=1e-5)

@@ -1,0 +1,77 @@
+"""Data pipeline determinism + config registry integrity."""
+import numpy as np
+import pytest
+
+from repro.configs import registry as R
+from repro.configs.base import SHAPES_BY_NAME
+from repro.configs.specs import input_specs
+from repro.data.pipeline import Prefetcher, SyntheticImages, SyntheticTokens
+
+
+def test_all_archs_present_with_exact_dims():
+    expect = {
+        "qwen2.5-3b": (36, 2048, 16, 2, 11008, 151936),
+        "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+        "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+        "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+    }
+    assert set(R.ARCH_IDS) == set(expect)
+    for arch, (L, d, H, K, ff, V) in expect.items():
+        c = R.config(arch)
+        assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+                c.d_ff, c.vocab_size) == (L, d, H, K, ff, V), arch
+
+
+def test_long500k_skips_match_design():
+    runs_long = {a for a in R.ARCH_IDS
+                 if "long_500k" not in R.get(a).skipped}
+    assert runs_long == {"zamba2-1.2b", "xlstm-125m"}
+
+
+def test_input_specs_cover_all_cells():
+    for arch in R.ARCH_IDS:
+        a = R.get(arch)
+        for sname in a.shapes:
+            if sname in a.skipped:
+                continue
+            shape = SHAPES_BY_NAME[sname]
+            batch, state = input_specs(a.model, shape)
+            assert batch["tokens"].shape[0] == shape.global_batch
+            if shape.kind == "decode":
+                assert state is not None
+                assert batch["tokens"].shape == (shape.global_batch, 1)
+
+
+def test_synthetic_tokens_deterministic():
+    cfg = R.smoke("qwen2.5-3b")
+    a = next(iter(SyntheticTokens(cfg, 2, 8, seed=3)))
+    b = next(iter(SyntheticTokens(cfg, 2, 8, seed=3)))
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].max() < cfg.vocab_size
+
+
+def test_images_deterministic_and_class_dependent():
+    s1 = SyntheticImages(batch=4, size=16, seed=1).sample(64)
+    s2 = SyntheticImages(batch=4, size=16, seed=1).sample(64)
+    np.testing.assert_array_equal(s1["images"], s2["images"])
+    # class signal present: per-class means differ
+    m0 = s1["images"][s1["labels"] < 500].mean()
+    m1 = s1["images"][s1["labels"] >= 500].mean()
+    assert abs(m0 - m1) > 0.01
+
+
+def test_prefetcher_preserves_order():
+    cfg = R.smoke("qwen2.5-3b")
+
+    def gen():
+        for i in range(5):
+            yield {"i": np.array([i])}
+
+    out = [b["i"][0] for b in Prefetcher(gen())]
+    assert out == [0, 1, 2, 3, 4]

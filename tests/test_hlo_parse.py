@@ -1,0 +1,69 @@
+"""HLO parser: trip-count multiplication, collective accounting, dot flops."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.hlo_parse import analyze_hlo, _shape_bytes
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[4,8]{1,0}") == 128
+    assert _shape_bytes("bf16[10]") == 20
+    assert _shape_bytes("(s32[], f32[2,2]{1,0}, pred[8])") == 4 + 16 + 8
+    assert _shape_bytes("f32[]") == 4
+
+
+def test_scan_trip_count_and_dot_flops():
+    def f(x, w):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), None
+        return jax.lax.scan(body, x, w)[0]
+
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((5, 64, 64), jnp.float32)
+    compiled = jax.jit(f).lower(x, w).compile()
+    cost = analyze_hlo(compiled.as_text())
+    expect = 5 * 2 * 32 * 64 * 64
+    assert abs(cost.dot_flops - expect) / expect < 0.01
+    assert 5 in cost.while_trips.values()
+
+
+def test_nested_scan_multiplies():
+    def f(x, w):
+        def outer(h, wo):
+            def inner(hh, wi):
+                return hh @ wi, None
+            h2, _ = jax.lax.scan(inner, h, wo)
+            return h2, None
+        return jax.lax.scan(outer, x, w)[0]
+
+    x = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    w = jax.ShapeDtypeStruct((3, 4, 16, 16), jnp.float32)
+    compiled = jax.jit(f).lower(x, w).compile()
+    cost = analyze_hlo(compiled.as_text())
+    expect = 12 * 2 * 16 * 16 * 16
+    assert abs(cost.dot_flops - expect) / expect < 0.01
+
+
+def test_elementwise_and_reduce_counted():
+    def f(x):
+        return jnp.sum(jnp.tanh(x) * 2.0)
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    compiled = jax.jit(f).lower(x).compile()
+    cost = analyze_hlo(compiled.as_text())
+    assert cost.flops >= 128 * 128 * 2        # tanh + multiply (+ reduce)
+    assert cost.dot_flops == 0
+
+
+def test_collective_ring_model():
+    from repro.roofline.hlo_parse import CollectiveRecord
+    ar = CollectiveRecord("all-reduce", out_bytes=1000, operand_bytes=1000,
+                          group_size=4, count=2)
+    assert ar.ring_bytes == 2 * 3 / 4 * 1000
+    ag = CollectiveRecord("all-gather", out_bytes=4000, operand_bytes=1000,
+                          group_size=4, count=1)
+    assert ag.ring_bytes == 3 / 4 * 4000
+    rs = CollectiveRecord("reduce-scatter", out_bytes=1000,
+                          operand_bytes=4000, group_size=4, count=1)
+    assert rs.ring_bytes == 3 / 4 * 4000

@@ -1,0 +1,125 @@
+"""Losses + optimizers: oracles and invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.optim.compression import (dequantize_int8, ef_quantize,
+                                     quantize_int8)
+from repro.optim.optimizers import (adafactor, adamw, clip_by_global_norm,
+                                    constant, global_norm, warmup_cosine)
+from repro.training.losses import classification_cross_entropy, lm_cross_entropy
+
+
+def test_ce_matches_onehot_oracle():
+    B, S, V = 2, 5, 11
+    logits = jax.random.normal(jax.random.PRNGKey(0), (B, S, V))
+    labels = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, V)
+    loss, m = lm_cross_entropy(logits, labels, z_loss=0.0)
+    onehot = jax.nn.one_hot(labels, V)
+    ref = -jnp.mean(jnp.sum(onehot * jax.nn.log_softmax(logits), -1))
+    np.testing.assert_allclose(loss, ref, rtol=1e-5)
+
+
+@given(shift=st.floats(-5, 5))
+def test_ce_shift_invariance(shift):
+    """CE (without z-loss) is invariant to adding a constant to all logits."""
+    logits = jax.random.normal(jax.random.PRNGKey(2), (1, 4, 7))
+    labels = jnp.array([[1, 2, 3, 4]])
+    l1, _ = lm_cross_entropy(logits, labels, z_loss=0.0)
+    l2, _ = lm_cross_entropy(logits + shift, labels, z_loss=0.0)
+    np.testing.assert_allclose(l1, l2, atol=1e-4)
+
+
+def test_zloss_penalizes_large_normalizer():
+    logits = jax.random.normal(jax.random.PRNGKey(3), (1, 4, 7))
+    labels = jnp.zeros((1, 4), jnp.int32)
+    l0, _ = lm_cross_entropy(logits, labels, z_loss=0.0)
+    l1, _ = lm_cross_entropy(logits + 10.0, labels, z_loss=1e-2)
+    assert float(l1) > float(l0)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones(4) * 3.0, "b": jnp.ones(9) * 4.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - np.sqrt(36 + 144)) < 1e-4
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+
+
+def test_adamw_matches_manual_step():
+    opt = adamw(constant(0.1), b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0,
+                max_grad_norm=1e9)
+    p = {"w": jnp.array([1.0, 2.0])}
+    g = {"w": jnp.array([0.5, -0.5])}
+    st_ = opt.init(p)
+    new_p, st2, _ = opt.update(g, st_, p)
+    mhat = 0.1 * 0.5 / (1 - 0.9)
+    vhat = 0.01 * 0.25 / (1 - 0.99)
+    expect = 1.0 - 0.1 * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(new_p["w"][0], expect, rtol=1e-5)
+    assert int(st2["step"]) == 1
+
+
+def test_adafactor_factored_state_shapes():
+    opt = adafactor(constant(0.01))
+    p = {"w": jnp.zeros((8, 16)), "b": jnp.zeros((16,)),
+         "s": jnp.zeros((4, 8, 16))}
+    st_ = opt.init(p)
+    assert st_["v"]["w"]["vr"].shape == (8,)
+    assert st_["v"]["w"]["vc"].shape == (16,)
+    assert st_["v"]["b"]["v"].shape == (16,)
+    assert st_["v"]["s"]["vr"].shape == (4, 8)
+    assert st_["v"]["s"]["vc"].shape == (4, 16)
+    g = jax.tree_util.tree_map(jnp.ones_like, p)
+    new_p, _, _ = opt.update(g, st_, p)
+    assert all(np.isfinite(l).all() for l in jax.tree_util.tree_leaves(new_p))
+
+
+def test_optimizer_state_axes_match_structure():
+    from repro.configs import registry as R
+    from repro.distributed.policy import param_axes
+    from repro.optim.optimizers import make_optimizer
+    cfg = R.smoke("qwen3-moe-235b-a22b")
+    axes = param_axes(cfg)
+    opt = make_optimizer(cfg)
+    import jax
+    from repro.models.registry import fns_for
+    p = jax.eval_shape(lambda: fns_for(cfg).init(cfg, jax.random.PRNGKey(0)))
+    st_shapes = jax.eval_shape(opt.init, p)
+    st_axes = opt.state_axes(axes)
+    # identical tree structure (axes leaves are tuples/dicts aligned)
+    l1 = jax.tree_util.tree_structure(st_shapes)
+    l2 = jax.tree_util.tree_structure(
+        jax.tree_util.tree_map(lambda t: 0, st_axes,
+                               is_leaf=lambda t: isinstance(t, tuple)))
+    assert l1 == l2
+
+
+@given(scale=st.floats(0.01, 100.0))
+def test_quantize_roundtrip_bound(scale):
+    x = jax.random.normal(jax.random.PRNGKey(4), (64,)) * scale
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x)
+    assert float(err.max()) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_telescopes():
+    """Sum of EF-quantized values over steps tracks the true sum."""
+    x = jax.random.normal(jax.random.PRNGKey(5), (32,))
+    err = jnp.zeros(32)
+    acc = jnp.zeros(32)
+    for _ in range(16):
+        q, s, err = ef_quantize(x, err)
+        acc = acc + dequantize_int8(q, s)
+    drift = float(jnp.abs(acc / 16 - x).max())
+    q1, s1 = quantize_int8(x)
+    one_shot = float(jnp.abs(dequantize_int8(q1, s1) - x).max())
+    assert drift < one_shot  # EF beats plain quantization over time
+
+
+def test_warmup_cosine_shape():
+    sched = warmup_cosine(1.0, warmup=10, total=100, floor=0.1)
+    assert float(sched(jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(sched(jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(sched(jnp.asarray(100))) == pytest.approx(0.1, abs=1e-3)

@@ -1,0 +1,100 @@
+"""SSM / xLSTM recurrence cores: chunked-parallel vs sequential oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.configs import registry as R
+from repro.models.layers.ssm import (chunked_linear_attn, linear_attn_step,
+                                     mamba_forward, mamba_init_state,
+                                     mamba_step, mamba_table)
+from repro.models.layers.module import init_table
+from repro.models.layers import xlstm as X
+
+
+def _sequential(q, k, v, ld, lg, h0):
+    S = q.shape[1]
+    h = h0
+    ys = []
+    for t in range(S):
+        y, h = linear_attn_step(q[:, t], k[:, t], v[:, t], ld[:, t],
+                                lg[:, t], h)
+        ys.append(y)
+    return jnp.stack(ys, axis=1), h
+
+
+@given(chunk=st.sampled_from([4, 8, 16, 40]))
+def test_chunk_size_independence(chunk):
+    B, S, H, N, P = 1, 40, 2, 4, 4
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    q = jax.random.normal(ks[0], (B, S, H, N))
+    k = jax.random.normal(ks[1], (B, S, H, N))
+    v = jax.random.normal(ks[2], (B, S, H, P))
+    ld = -jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+    lg = 0.2 * jax.random.normal(ks[4], (B, S, H))
+    y, hf = chunked_linear_attn(q, k, v, ld, lg, chunk=chunk,
+                                return_final_state=True)
+    y_ref, h_ref = _sequential(q, k, v, ld, lg, jnp.zeros((B, H, N, P)))
+    np.testing.assert_allclose(y, y_ref, atol=2e-4)
+    np.testing.assert_allclose(hf, h_ref, atol=2e-4)
+
+
+def test_mamba_forward_vs_step():
+    cfg = R.smoke("zamba2-1.2b")
+    params = init_table(jax.random.PRNGKey(0), mamba_table(cfg), "float32")
+    B, S = 2, 12
+    u = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 0.3
+    out_full, fin = mamba_forward(cfg, params, u, return_state=True)
+    st = mamba_init_state(cfg, B)
+    outs = []
+    for t in range(S):
+        o, st = mamba_step(cfg, params, u[:, t:t + 1], st)
+        outs.append(o)
+    out_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(out_full, out_seq, atol=3e-4)
+    np.testing.assert_allclose(fin.ssm, st.ssm, atol=3e-4)
+
+
+def test_mlstm_forward_vs_step():
+    cfg = R.smoke("xlstm-125m")
+    params = init_table(jax.random.PRNGKey(0), X.mlstm_table(cfg), "float32")
+    B, S = 2, 10
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 0.3
+    out_full, fin = X.mlstm_forward(cfg, params, x, return_state=True)
+    st = X.mlstm_init_state(cfg, B)
+    outs = []
+    for t in range(S):
+        o, st = X.mlstm_step(cfg, params, x[:, t:t + 1], st)
+        outs.append(o)
+    out_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(out_full, out_seq, atol=3e-4)
+    np.testing.assert_allclose(fin.mem, st.mem, atol=3e-4)
+
+
+def test_slstm_state_continuation():
+    """Running sLSTM over [0:S] == running [0:k] then [k:S] with the state."""
+    cfg = R.smoke("xlstm-125m")
+    params = init_table(jax.random.PRNGKey(0), X.slstm_table(cfg), "float32")
+    B, S, k = 2, 12, 5
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 0.3
+    out_full, fin = X.slstm_forward(cfg, params, x, return_state=True)
+    o1, st = X.slstm_forward(cfg, params, x[:, :k], return_state=True)
+    o2, st2 = X.slstm_forward(cfg, params, x[:, k:], st, return_state=True)
+    np.testing.assert_allclose(out_full, jnp.concatenate([o1, o2], 1),
+                               atol=3e-5)
+    np.testing.assert_allclose(fin.c, st2.c, atol=3e-5)
+
+
+def test_decay_monotonicity():
+    """With log_gate=-inf after t0, outputs must decay toward 0 (state decays)."""
+    B, S, H, N, P = 1, 30, 1, 2, 2
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jnp.ones((B, S, H, N))
+    k = jax.random.normal(ks[1], (B, S, H, N))
+    v = jax.random.normal(ks[2], (B, S, H, P))
+    ld = jnp.full((B, S, H), -0.5)
+    lg = jnp.where(jnp.arange(S)[None, :, None] < 5, 0.0, -1e30)
+    y, _ = chunked_linear_attn(q, k, v, ld, lg, chunk=8)
+    norms = jnp.linalg.norm(y[0, :, 0], axis=-1)
+    assert float(norms[29]) < float(norms[5]) * 0.01
