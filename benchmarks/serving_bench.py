@@ -1,11 +1,27 @@
-"""LM serving through the offload engine: the paper's multi-device protocol
-applied to its TPU-era analogue (replica groups serving token streams).
+"""LM serving benchmark: continuous batching vs the legacy wave decode.
 
-Reports tokens/s and tokens/s/W for 1 and 2 replica groups on the smoke
-config (real compute on this host), demonstrating the same near-linear
-replica scaling the paper shows for NCS devices.
+Three scenarios, all real compute on this host, emitted as one JSON
+artifact (`artifacts/bench/serving_bench.json`) with stable keys so runs
+are comparable across PRs:
+
+  1. `replicas_{1,2}` — replica scaling with least-loaded request pull
+     (the paper's multi-NCS protocol at LM scale).
+  2. `mixed_wave` / `mixed_continuous` — mixed-length requests
+     (max_new_tokens drawn from {4, 64}) on one replica with 4 decode
+     slots.  The wave path lock-steps every wave to its slowest member;
+     continuous batching refills a slot the moment its request finishes.
+     `continuous_speedup` is the headline number.
+  3. `arrival` — a seeded arrival process submitted against a running
+     engine (service mode): requests admitted mid-stream, the scenario a
+     batch-offline API cannot express.
+
+Each scenario reports tokens/s, TTFT p50/p99 (ms), mean TPOT (ms), and
+slot occupancy.
 """
 from __future__ import annotations
+
+import threading
+import time
 
 import jax
 import numpy as np
@@ -13,18 +29,50 @@ import numpy as np
 from repro.configs import registry as arch_registry
 from repro.core.power import tpu_serving_report
 from repro.models.registry import fns_for
-from repro.serving.engine import MultiReplicaEngine, Request, ServingEngine
+from repro.serving.engine import (MultiReplicaEngine, Request, ServeStats,
+                                  ServingEngine)
 from repro.serving.sampler import greedy
 
 from benchmarks.common import save_artifact
 
 
-def _requests(cfg, n, prompt_len=12, new_tokens=6):
-    rng = np.random.default_rng(0)
+def _requests(cfg, n, prompt_len=12, new_tokens=6, seed=0):
+    rng = np.random.default_rng(seed)
     return [Request(i, rng.integers(0, cfg.vocab_size,
                                     size=prompt_len).astype(np.int32),
                     max_new_tokens=new_tokens, sampler=greedy())
             for i in range(n)]
+
+
+def _mixed_requests(cfg, n=16, prompt_len=12, seed=0):
+    """Alternating short/long decodes: the continuous-batching stressor."""
+    rng = np.random.default_rng(seed)
+    return [Request(i, rng.integers(0, cfg.vocab_size,
+                                    size=prompt_len).astype(np.int32),
+                    max_new_tokens=4 if i % 2 else 64, sampler=greedy())
+            for i in range(n)]
+
+
+def _summary(stats: ServeStats) -> dict:
+    ms = lambda v: round(v * 1e3, 2) if v is not None else None  # noqa: E731
+    return {
+        "requests": stats.requests, "tokens": stats.tokens,
+        "wall_s": round(stats.wall_s, 3),
+        "tokens_per_s": round(stats.tokens_per_s, 2),
+        "ttft_p50_ms": ms(stats.ttft_p50_s),
+        "ttft_p99_ms": ms(stats.ttft_p99_s),
+        "tpot_ms": ms(stats.mean_tpot_s),
+        "slot_occupancy": round(stats.slot_occupancy, 3),
+        "prefills": stats.prefills, "decode_steps": stats.decode_steps,
+    }
+
+
+def _warmup(eng: ServingEngine, cfg) -> None:
+    """Compile prefill/decode outside the timed region.  Uses a full wave
+    (= batch_slots requests) so both paths hit the same jitted (slots, 1)
+    decode signature before timing starts."""
+    eng.serve(_requests(cfg, eng.slots, new_tokens=2, seed=99))
+    eng.serve_wave(_requests(cfg, eng.slots, new_tokens=2, seed=99))
 
 
 def run(verbose: bool = True) -> dict:
@@ -32,33 +80,83 @@ def run(verbose: bool = True) -> dict:
     fns = fns_for(cfg)
     params = fns.init(cfg, jax.random.PRNGKey(0))
     out = {}
+
+    # -- scenario 1: replica scaling --------------------------------------
     for n_rep in (1, 2):
         replicas = [ServingEngine(cfg, params, max_len=24, batch_slots=4)
                     for _ in range(n_rep)]
         if n_rep == 1:
             stats = replicas[0].serve(_requests(cfg, 16))
         else:
-            stats = MultiReplicaEngine(replicas).serve(_requests(cfg, 16),
-                                                       group_size=4)
+            stats = MultiReplicaEngine(replicas).serve(_requests(cfg, 16))
         rep = tpu_serving_report(stats.tokens_per_s, chips=n_rep)
-        out[f"replicas_{n_rep}"] = {
-            "tokens": stats.tokens, "wall_s": stats.wall_s,
-            "tokens_per_s": stats.tokens_per_s,
-            "tokens_per_s_per_w": rep.items_per_watt,
-        }
+        out[f"replicas_{n_rep}"] = dict(
+            _summary(stats), tokens_per_s_per_w=rep.items_per_watt)
         if verbose:
             print(f"serving x{n_rep}: {stats.tokens_per_s:.1f} tok/s  "
-                  f"{rep.items_per_watt:.4f} tok/s/W")
-    speedup = (out["replicas_2"]["tokens_per_s"]
-               / out["replicas_1"]["tokens_per_s"])
-    out["replica_scaling_2x"] = speedup
+                  f"{rep.items_per_watt:.4f} tok/s/W  "
+                  f"occ={stats.slot_occupancy:.2f}")
+    out["replica_scaling_2x"] = (out["replicas_2"]["tokens_per_s"]
+                                 / out["replicas_1"]["tokens_per_s"])
     out["note"] = ("this host has ONE CPU core, so two real replicas "
                    "contend for it; protocol-level replica scaling is "
                    "demonstrated with calibrated targets in fig6b (7.7x/8)")
+
+    # -- scenario 2: mixed-length, wave vs continuous ----------------------
+    max_len = 12 + 64 + 1
+    eng = ServingEngine(cfg, params, max_len=max_len, batch_slots=4)
+    _warmup(eng, cfg)
+    out["mixed_wave"] = _summary(eng.serve_wave(_mixed_requests(cfg)))
+    out["mixed_continuous"] = _summary(eng.serve(_mixed_requests(cfg)))
+    out["continuous_speedup"] = round(
+        out["mixed_continuous"]["tokens_per_s"]
+        / out["mixed_wave"]["tokens_per_s"], 3)
     if verbose:
-        print(f"serving replica scaling 1->2: {speedup:.2f}x "
-              f"(single-core host: contention expected; see fig6b for the "
-              f"protocol scaling)")
+        for k in ("mixed_wave", "mixed_continuous"):
+            s = out[k]
+            print(f"{k}: {s['tokens_per_s']:.1f} tok/s  "
+                  f"ttft p50={s['ttft_p50_ms']}ms p99={s['ttft_p99_ms']}ms  "
+                  f"occ={s['slot_occupancy']}")
+        print(f"continuous vs wave speedup: {out['continuous_speedup']:.2f}x")
+
+    # -- scenario 3: arrival process against a running engine --------------
+    eng2 = ServingEngine(cfg, params, max_len=12 + 16, batch_slots=4)
+    _warmup(eng2, cfg)
+    reqs = _requests(cfg, 12, new_tokens=6, seed=1)
+    for i, r in enumerate(reqs):
+        r.max_new_tokens = 4 if i % 2 else 16
+    rng = np.random.default_rng(2)
+    gaps = rng.exponential(0.01, size=len(reqs))
+    done = threading.Event()
+    remaining = [len(reqs)]
+
+    def fin(_):
+        remaining[0] -= 1
+        if remaining[0] == 0:
+            done.set()
+
+    base = (eng2.totals.decode_steps, eng2.totals.occupancy_sum)
+    eng2.start()
+    t0 = time.monotonic()
+    for r, gap in zip(reqs, gaps):
+        time.sleep(gap)
+        r.submitted_at = time.monotonic()
+        eng2.submit(r, on_finish=fin)
+    done.wait(timeout=120)
+    wall = time.monotonic() - t0
+    eng2.stop()
+    stats = ServeStats(requests=len(reqs), wall_s=wall,
+                       tokens=sum(len(r.output) for r in reqs))
+    stats.decode_steps = eng2.totals.decode_steps - base[0]
+    stats.occupancy_sum = eng2.totals.occupancy_sum - base[1]
+    stats.fill_request_metrics(reqs)
+    out["arrival"] = _summary(stats)
+    if verbose:
+        s = out["arrival"]
+        print(f"arrival: {s['tokens_per_s']:.1f} tok/s  "
+              f"ttft p50={s['ttft_p50_ms']}ms p99={s['ttft_p99_ms']}ms  "
+              f"occ={s['slot_occupancy']}")
+
     save_artifact("serving_bench", out)
     return out
 

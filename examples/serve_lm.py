@@ -1,5 +1,13 @@
-"""Batched LM serving with replica-group round-robin (the paper's multi-NCS
-pattern at LM scale) + tokens/s/W reporting.
+"""Continuous-batching LM serving across replica groups (the paper's
+multi-NCS pattern at LM scale) + tokens/s/W reporting.
+
+Each replica keeps a fixed-slot decode batch saturated: a finished slot is
+refilled by a chunked prefill of the next queued request (QUEUED -> PREFILL
+-> DECODE -> DONE lifecycle in `repro.serving.scheduler`).  With more than
+one replica, requests are dispatched individually to the least-loaded
+replica through `repro.core.offload`'s split-phase protocol and collected
+out of order, so one slow request never blocks the rest.  Stats include
+TTFT p50/p99, TPOT, and slot occupancy.
 
   PYTHONPATH=src python examples/serve_lm.py [--replicas 2]
 """
@@ -25,9 +33,11 @@ def main():
     cfg = arch_registry.smoke(args.arch)
     params = fns_for(cfg).init(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
+    # mixed lengths on purpose: short requests finish early and their slots
+    # are refilled immediately (no lock-step waves)
     reqs = [Request(i,
                     rng.integers(0, cfg.vocab_size, size=12).astype(np.int32),
-                    max_new_tokens=6,
+                    max_new_tokens=3 if i % 3 else 9,
                     sampler=greedy() if i % 2 else temperature(0.7, top_k=20,
                                                                seed=i))
             for i in range(args.requests)]
@@ -37,12 +47,14 @@ def main():
     if args.replicas == 1:
         stats = replicas[0].serve(reqs)
     else:
-        stats = MultiReplicaEngine(replicas).serve(reqs, group_size=4)
+        stats = MultiReplicaEngine(replicas).serve(reqs)
     print(f"{stats.requests} requests -> {stats.tokens} tokens in "
-          f"{stats.wall_s:.2f}s  ({stats.tokens_per_s:.1f} tok/s)")
+          f"{stats.wall_s:.2f}s  ({stats.tokens_per_s:.1f} tok/s, "
+          f"slot occupancy {stats.slot_occupancy:.2f})")
     print(tpu_serving_report(stats.tokens_per_s, chips=args.replicas).row())
     for r in reqs[:3]:
-        print(f"  req {r.rid}: {r.output}  ttft={r.ttft_s:.2f}s")
+        print(f"  req {r.rid} [{r.state.value}]: {r.output}  "
+              f"ttft={r.ttft_s:.2f}s")
 
 
 if __name__ == "__main__":

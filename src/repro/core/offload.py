@@ -17,6 +17,18 @@ result wins), dynamic least-loaded scheduling as an alternative to static
 round-robin, and target groups so one engine can drive heterogeneous pools
 (the paper's "subset on a GPU, subsets on VPU groups").
 
+Two collection disciplines coexist:
+
+  * :meth:`OffloadEngine.run` — ordered collection (``inflight.pop(0)``),
+    exactly the paper's Fig 4 queueing-order semantics; used by the
+    figure-reproduction benchmarks.
+  * :meth:`OffloadEngine.submit_async` + :meth:`next_done` /
+    :meth:`drain` / :meth:`run_unordered` — out-of-order completion via a
+    per-engine done-queue, so one slow item never blocks draining of
+    finished ones.  This is what the continuous-batching serving scheduler
+    rides on: the replica pull-loop collects whichever request finishes
+    first, with no head-of-line blocking.
+
 Targets:
   * :class:`JaxTarget` — executes a jitted fn on a JAX device (real compute).
   * :class:`SimTarget` — calibrated latency model of a paper device (Myriad 2
@@ -45,6 +57,23 @@ class WorkItem:
     target_name: str = ""
     reissued: bool = False
     done: threading.Event = field(default_factory=threading.Event)
+    # async completion hook (set by OffloadEngine.submit); fired exactly once,
+    # by whichever target completes the item first (reissue-safe).
+    on_done: Callable[["WorkItem"], None] | None = None
+    _lock: threading.Lock = field(default_factory=threading.Lock)
+
+    def complete(self, result: Any, target_name: str) -> bool:
+        """First-completion-wins commit; returns False if already done."""
+        with self._lock:
+            if self.done.is_set():
+                return False
+            self.result = result
+            self.target_name = target_name
+            self.finished_at = time.monotonic()
+            self.done.set()
+        if self.on_done is not None:
+            self.on_done(self)
+        return True
 
 
 class Target:
@@ -98,11 +127,7 @@ class Target:
                 staged = self.transfer(item.payload)
                 item.started_at = time.monotonic()
                 out = self.execute(staged)
-                if not item.done.is_set():
-                    item.result = out
-                    item.target_name = self.name
-                    item.finished_at = time.monotonic()
-                    item.done.set()
+                item.complete(out, self.name)
             finally:
                 self.busy = False
 
@@ -191,6 +216,8 @@ class OffloadEngine:
         self._rr = 0
         self._seq = 0
         self._open = False
+        self._done_q: queue.Queue = queue.Queue()
+        self._async_pending: dict[int, WorkItem] = {}
 
     def __enter__(self):
         for t in self.targets:
@@ -210,12 +237,59 @@ class OffloadEngine:
             return t
         return min(self.targets, key=lambda t: t.queue_depth)
 
-    def submit(self, payload: Any) -> WorkItem:
-        """Split-phase load (returns immediately; result via get_result)."""
-        item = WorkItem(seq=self._seq, payload=payload)
+    def submit(self, payload: Any, *,
+               on_done: Callable[[WorkItem], None] | None = None) -> WorkItem:
+        """Split-phase load (returns immediately; result via get_result).
+
+        ``on_done`` fires exactly once, from the completing target's worker
+        thread, the moment the item finishes — the async-notify alternative
+        to blocking in :meth:`get_result`.
+        """
+        item = WorkItem(seq=self._seq, payload=payload, on_done=on_done)
         self._seq += 1
         self._pick().load_tensor(item)
         return item
+
+    def submit_async(self, payload: Any) -> WorkItem:
+        """Submit with completion routed to the engine's done-queue, so a
+        consumer loop can collect items out of order via :meth:`next_done`
+        / :meth:`drain` without head-of-line blocking."""
+        item = self.submit(payload, on_done=self._done_q.put)
+        self._async_pending[item.seq] = item
+        return item
+
+    def next_done(self, timeout: float | None = None) -> WorkItem | None:
+        """Pop the next completed async item (any order); None on timeout."""
+        try:
+            return self._done_q.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    def drain(self, n: int, *, deadline_s: float | None = None):
+        """Yield ``n`` completed async items as they finish (out of order).
+
+        With ``deadline_s`` (falls back to the engine's), a quiet period
+        longer than the deadline triggers straggler reissue of every
+        outstanding async item on the least-loaded target; first completion
+        wins (``WorkItem.complete`` guards double-commit).
+        """
+        deadline = deadline_s if deadline_s is not None else self.deadline_s
+        got = 0
+        while got < n:
+            item = self.next_done(timeout=deadline)
+            if item is None:          # quiet past deadline -> reissue stragglers
+                alt = min(self.targets, key=lambda t: t.queue_depth)
+                for it in list(self._async_pending.values()):
+                    # at most one reissue per item (same as get_result):
+                    # repeating it would admit duplicate clones every quiet
+                    # period on replica-style targets
+                    if not it.done.is_set() and not it.reissued:
+                        it.reissued = True
+                        alt.load_tensor(it)
+                item = self._done_q.get()
+            self._async_pending.pop(item.seq, None)
+            got += 1
+            yield item
 
     def get_result(self, item: WorkItem) -> Any:
         if self.deadline_s is None:
@@ -252,5 +326,33 @@ class OffloadEngine:
             stats.reissues += int(item.reissued)
             stats.per_target[item.target_name] = \
                 stats.per_target.get(item.target_name, 0) + 1
+        stats.wall_s = time.monotonic() - t0
+        return results, stats
+
+    def run_unordered(self, payloads, *,
+                      window: int | None = None) -> tuple[list, OffloadStats]:
+        """Pipeline a stream with out-of-order collection: results are
+        ``(seq, result)`` pairs in *completion* order.  Keeps ``window``
+        items in flight; a straggler (engine ``deadline_s``) is reissued on
+        the least-loaded target and never blocks draining of later items."""
+        assert self._open, "use `with OffloadEngine(...) as eng:`"
+        window = window or 2 * len(self.targets)
+        payloads = list(payloads)
+        stats = OffloadStats()
+        results: list[tuple[int, Any]] = []
+        t0 = time.monotonic()
+        nxt = 0
+        while nxt < len(payloads) and nxt < window:
+            self.submit_async(payloads[nxt])
+            nxt += 1
+        for item in self.drain(len(payloads)):
+            results.append((item.seq, item.result))
+            stats.items += 1
+            stats.reissues += int(item.reissued)
+            stats.per_target[item.target_name] = \
+                stats.per_target.get(item.target_name, 0) + 1
+            if nxt < len(payloads):
+                self.submit_async(payloads[nxt])
+                nxt += 1
         stats.wall_s = time.monotonic() - t0
         return results, stats

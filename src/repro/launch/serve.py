@@ -1,9 +1,13 @@
-"""Serving launcher: batched requests through the engine, with the paper's
-throughput / throughput-per-watt reporting.
+"""Serving launcher: continuous-batching engine with the paper's
+throughput / throughput-per-watt reporting plus serving-quality metrics
+(TTFT p50/p99, TPOT, slot occupancy).
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
       --requests 16 --new-tokens 8 --replicas 2
+  # A/B against the legacy lock-step wave decode:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
+      --mode wave
 """
 from __future__ import annotations
 
@@ -19,6 +23,10 @@ from repro.serving.engine import MultiReplicaEngine, Request, ServingEngine
 from repro.serving.sampler import greedy, temperature
 
 
+def _fmt_ms(v: float | None) -> str:
+    return f"{v * 1e3:.1f}ms" if v is not None else "n/a"
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -29,7 +37,14 @@ def main() -> int:
     ap.add_argument("--replicas", type=int, default=1)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--mode", choices=("continuous", "wave"),
+                    default="continuous",
+                    help="wave = legacy lock-step decode (single replica "
+                         "only), for A/B comparison")
     args = ap.parse_args()
+    if args.mode == "wave" and args.replicas > 1:
+        ap.error("--mode wave is the single-replica legacy baseline; "
+                 "drop --replicas or use --mode continuous")
 
     cfg = (arch_registry.smoke(args.arch) if args.smoke
            else arch_registry.config(args.arch))
@@ -48,13 +63,18 @@ def main() -> int:
         replicas = [ServingEngine(cfg, params, max_len=max_len,
                                   batch_slots=args.slots)
                     for _ in range(args.replicas)]
-        stats = MultiReplicaEngine(replicas).serve(reqs,
-                                                   group_size=args.slots)
+        stats = MultiReplicaEngine(replicas).serve(reqs)
     else:
-        stats = ServingEngine(cfg, params, max_len=max_len,
-                              batch_slots=args.slots).serve(reqs)
+        eng = ServingEngine(cfg, params, max_len=max_len,
+                            batch_slots=args.slots)
+        stats = (eng.serve_wave(reqs) if args.mode == "wave"
+                 else eng.serve(reqs))
     print(f"requests={stats.requests} tokens={stats.tokens} "
           f"wall={stats.wall_s:.2f}s tok/s={stats.tokens_per_s:.2f}")
+    print(f"ttft p50={_fmt_ms(stats.ttft_p50_s)} "
+          f"p99={_fmt_ms(stats.ttft_p99_s)}  "
+          f"tpot={_fmt_ms(stats.mean_tpot_s)}  "
+          f"slot_occupancy={stats.slot_occupancy:.2f}")
     report = tpu_serving_report(stats.tokens_per_s, chips=args.replicas)
     print(report.row())
     return 0

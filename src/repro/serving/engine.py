@@ -1,47 +1,39 @@
-"""Batched LM serving engine.
+"""Continuous-batching LM serving engine (scheduler/executor split).
 
 The paper's multi-NCS pattern at LM scale: a *replica group* (one model
 replica, possibly TP/EP-sharded over a submesh) plays the role of one NCS
-device; the engine keeps a fixed-slot decode batch per replica
-(continuous batching), prefills arrivals into free slots, and round-robins
-request streams across replica groups via `repro.core.offload`.
+device.  Within a replica, :class:`ServingEngine` is the executor for a
+:class:`~repro.serving.scheduler.ContinuousScheduler`: it keeps a fixed-slot
+decode batch alive and refills a slot with a chunked prefill the moment its
+request finishes — no lock-step waves, no length bucketing.  Across
+replicas, :class:`MultiReplicaEngine` has each replica pull individual
+requests from a shared queue through `repro.core.offload`'s split-phase
+protocol (least-loaded dispatch, out-of-order collection), so a slow
+request on one replica never blocks completions elsewhere.
 
-Single-replica path (`ServingEngine`) is fully functional on CPU; the
-multi-replica path wraps each replica in a `JaxTarget` so the paper's
-split-phase load/collect protocol carries over unchanged.
+Request lifecycle: QUEUED -> PREFILL -> DECODE -> DONE (see scheduler.py).
+Per-slot KV state lives in one batched decode-state pytree; a finished
+slot's cache lines are overwritten in place by the next request's prefill
+(`_merge_slot` writes along the batch axis of every state leaf).
+
+`serve_wave` preserves the seed's lock-step wave decode for A/B comparison
+in `benchmarks/serving_bench.py`.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.offload import JaxTarget, OffloadEngine
+from repro.core.offload import OffloadEngine, Target, WorkItem
 from repro.models.registry import fns_for
-from repro.serving.sampler import Sampler, greedy
-
-
-@dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray              # (S,) int32
-    max_new_tokens: int = 16
-    sampler: Sampler = field(default_factory=greedy)
-    # filled by the engine:
-    output: list = field(default_factory=list)
-    submitted_at: float = field(default_factory=time.monotonic)
-    first_token_at: float | None = None
-    finished_at: float | None = None
-
-    @property
-    def ttft_s(self) -> float | None:
-        if self.first_token_at is None:
-            return None
-        return self.first_token_at - self.submitted_at
+from repro.serving.scheduler import ContinuousScheduler, Request, RequestState
+from repro.serving.sampler import Sampler  # noqa: F401 (re-export)
 
 
 @dataclass
@@ -51,14 +43,66 @@ class ServeStats:
     wall_s: float = 0.0
     prefills: int = 0
     decode_steps: int = 0
+    occupancy_sum: float = 0.0          # sum over decode steps of active/slots
+    ttft: list = field(default_factory=list)    # per-request seconds
+    tpot: list = field(default_factory=list)    # per-request seconds/token
 
     @property
     def tokens_per_s(self) -> float:
         return self.tokens / self.wall_s if self.wall_s else 0.0
 
+    @property
+    def slot_occupancy(self) -> float:
+        """Mean fraction of decode slots doing useful work per decode step."""
+        return self.occupancy_sum / self.decode_steps if self.decode_steps \
+            else 0.0
+
+    @property
+    def ttft_p50_s(self) -> float | None:
+        return float(np.percentile(self.ttft, 50)) if self.ttft else None
+
+    @property
+    def ttft_p99_s(self) -> float | None:
+        return float(np.percentile(self.ttft, 99)) if self.ttft else None
+
+    @property
+    def mean_tpot_s(self) -> float | None:
+        return float(np.mean(self.tpot)) if self.tpot else None
+
+    def fill_request_metrics(self, requests: list[Request]) -> None:
+        for r in requests:
+            if r.ttft_s is not None:
+                self.ttft.append(r.ttft_s)
+            if r.tpot_s is not None:
+                self.tpot.append(r.tpot_s)
+
+
+def _merge_slot(state, slot_state, slot: jax.Array):
+    """Write a single-request decode state into slot ``slot`` of the batched
+    state.  Both pytrees come from the same model fns with the same
+    ``max_len`` and differ only in batch size, so for every leaf the batch
+    axis is the unique axis where the shapes differ."""
+    def leaf(big, small):
+        if big.shape == small.shape:        # num_slots == 1
+            return small.astype(big.dtype)
+        axis = next(a for a in range(big.ndim)
+                    if big.shape[a] != small.shape[a])
+        return jax.lax.dynamic_update_slice_in_dim(
+            big, small.astype(big.dtype), slot, axis)
+    return jax.tree_util.tree_map(leaf, state, slot_state)
+
 
 class ServingEngine:
-    """One replica: prefill-then-batched-decode with fixed slots."""
+    """One replica: continuous batching over a fixed-slot decode batch.
+
+    Two driving modes share the same executor step:
+
+      * :meth:`serve` — blocking: admit a list of requests, run until all
+        are DONE (the benchmark / offline path).
+      * :meth:`start` / :meth:`submit` / :meth:`stop` — service mode: a
+        background executor thread drains the admission queue as requests
+        stream in (the multi-replica pull-loop and live-traffic path).
+    """
 
     def __init__(self, cfg, params, *, max_len: int = 256,
                  batch_slots: int = 4, chunk: int = 512):
@@ -68,11 +112,37 @@ class ServingEngine:
         self.max_len = max_len
         self.slots = batch_slots
         self.chunk = chunk
+        self.scheduler = ContinuousScheduler(batch_slots)
         self._decode = jax.jit(
             lambda p, t, s: self.fns.decode(cfg, p, t, s, chunk=chunk))
+        # jitted prefill, shape-keyed: one compile per (batch, prompt-len)
+        # signature — the continuous path always prefills batch 1, so slot
+        # refills never pay an eager-dispatch tax.
+        self._prefill = jax.jit(
+            lambda p, b: self.fns.prefill(cfg, p, b, max_len=max_len,
+                                          chunk=chunk))
+        self._merge = jax.jit(_merge_slot)
+        self._state = None                   # batched decode-state pytree
+        self._last: np.ndarray | None = None  # (slots, V) last logits
+        self.totals = ServeStats()           # lifetime counters (monotonic)
+        self._thread: threading.Thread | None = None
+        self._stop = threading.Event()
 
-    def _prefill_wave(self, prompts: np.ndarray):
-        """prompts: (W, S) equal-length bucket -> (last logits, state)."""
+    # -- model plumbing --------------------------------------------------------
+
+    def _check_fits(self, req: Request) -> None:
+        """Reject requests that would overrun the per-slot KV capacity —
+        out-of-range cache writes clamp/drop silently under jit, corrupting
+        generation instead of failing."""
+        need = len(req.prompt) + req.max_new_tokens
+        if need > self.max_len + 1:
+            raise ValueError(
+                f"request {req.rid}: prompt {len(req.prompt)} + "
+                f"max_new_tokens {req.max_new_tokens} exceeds KV capacity "
+                f"max_len={self.max_len}")
+
+    def _batch_for(self, prompts: np.ndarray) -> dict:
+        """prompts: (W, S) -> model batch dict (positions/frames as needed)."""
         W, S = prompts.shape
         batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
         if self.cfg.m_rope:
@@ -82,13 +152,152 @@ class ServingEngine:
             batch["frames"] = jnp.zeros(
                 (W, self.cfg.encdec.num_encoder_frames, self.cfg.d_model),
                 jnp.float32)
-        return self.fns.prefill(self.cfg, self.params, batch,
-                                max_len=self.max_len, chunk=self.chunk)
+        return batch
+
+    def _prefill_one(self, req: Request):
+        """Chunked prefill of one prompt -> ((V,) logits, batch-1 state)."""
+        batch = self._batch_for(req.prompt[None])
+        last, state = self._prefill(self.params, batch)
+        return np.asarray(last[0]), state
+
+    def _init_state(self):
+        """Batched decode-state template covering all slots."""
+        return self.fns.init_decode_state(self.cfg, self.slots, self.max_len)
+
+    # -- executor step ---------------------------------------------------------
+
+    def _sample_active(self, active: list[tuple[int, Request]]) -> dict[int, int]:
+        """Vectorized sampling: group slots by sampler batch_key, one
+        `sample` call per group (one argmax for the whole batch when all
+        slots are greedy)."""
+        groups: dict = {}
+        for slot, req in active:
+            groups.setdefault(req.sampler.batch_key, []).append((slot, req))
+        toks: dict[int, int] = {}
+        for members in groups.values():
+            rows = np.array([s for s, _ in members])
+            out = members[0][1].sampler.sample(self._last[rows])
+            for (slot, _), tok in zip(members, out):
+                toks[slot] = int(tok)
+        return toks
+
+    def _step(self) -> bool:
+        """One executor iteration: refill free slots (chunked prefill),
+        sample one token per active slot (vectorized), advance the batched
+        decode step.  Returns False when there was no work."""
+        for slot, req in self.scheduler.admit():
+            last1, state1 = self._prefill_one(req)
+            self.totals.prefills += 1
+            if self._state is None:
+                self._state = self._init_state()
+                self._last = np.zeros((self.slots, last1.shape[-1]),
+                                      last1.dtype)
+            self._state = self._merge(self._state, state1,
+                                      jnp.int32(slot))
+            if not self._last.flags.writeable:  # np view of a jax buffer
+                self._last = self._last.copy()
+            self._last[slot] = last1
+            req.state = RequestState.DECODE
+
+        active = self.scheduler.active()
+        if not active:
+            return False
+
+        toks = self._sample_active(active)
+        now = time.monotonic()
+        feed = np.zeros((self.slots,), np.int32)
+        for slot, req in active:
+            tok = toks[slot]
+            feed[slot] = tok
+            if req.first_token_at is None:
+                req.first_token_at = now
+            req.output.append(tok)
+            self.totals.tokens += 1
+            if len(req.output) >= req.max_new_tokens:
+                req.state = RequestState.DONE
+                req.finished_at = time.monotonic()
+                self.scheduler.release(slot)
+                if req.on_finish is not None:
+                    req.on_finish(req)
+
+        still = self.scheduler.active()
+        if still:        # someone needs next-token logits
+            last, self._state = self._decode(
+                self.params, jnp.asarray(feed)[:, None], self._state)
+            self._last = np.asarray(last)
+            self.totals.decode_steps += 1
+            self.totals.occupancy_sum += len(still) / self.slots
+        return True
+
+    # -- blocking mode ---------------------------------------------------------
 
     def serve(self, requests: list[Request]) -> ServeStats:
-        """Bucket by prompt length, prefill each wave batched, decode in
-        lock-step until every wave member finishes.  Continuous batching
-        across replicas is handled by `MultiReplicaEngine`."""
+        """Continuous batching: admit everything, run the executor until
+        every request is DONE."""
+        assert self._thread is None, "engine already running in service mode"
+        for r in requests:
+            self._check_fits(r)
+        base = (self.totals.tokens, self.totals.prefills,
+                self.totals.decode_steps, self.totals.occupancy_sum)
+        t0 = time.monotonic()
+        for r in requests:
+            self.scheduler.submit(r)
+        while self.scheduler.has_work():
+            self._step()
+        stats = ServeStats(requests=len(requests),
+                           wall_s=time.monotonic() - t0)
+        stats.tokens = self.totals.tokens - base[0]
+        stats.prefills = self.totals.prefills - base[1]
+        stats.decode_steps = self.totals.decode_steps - base[2]
+        stats.occupancy_sum = self.totals.occupancy_sum - base[3]
+        stats.fill_request_metrics(requests)
+        return stats
+
+    # -- service mode (used by MultiReplicaEngine and live traffic) ------------
+
+    def start(self) -> None:
+        if self._thread is not None:
+            return
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._service_loop, daemon=True)
+        self._thread.start()
+
+    def _service_loop(self) -> None:
+        while not self._stop.is_set():
+            if not self.scheduler.wait_for_work(timeout=0.02):
+                continue
+            self._step()
+
+    def submit(self, req: Request,
+               on_finish: Callable[[Request], None] | None = None) -> None:
+        """Thread-safe admission; ``on_finish`` fires from the executor
+        thread the moment the request's last token is emitted."""
+        self._check_fits(req)
+        if on_finish is not None:
+            req.on_finish = on_finish
+        self.scheduler.submit(req)
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join(timeout=10)
+        self._thread = None
+
+    @property
+    def load(self) -> int:
+        return self.scheduler.load
+
+    # -- legacy wave decode (seed behaviour, kept for A/B benchmarking) --------
+
+    def serve_wave(self, requests: list[Request]) -> ServeStats:
+        """The seed's lock-step path: bucket by prompt length, prefill each
+        wave batched, decode until every wave member finishes.  A finished
+        slot idles until the slowest request in its wave completes — kept
+        only as the baseline `benchmarks/serving_bench.py` compares
+        continuous batching against."""
+        for r in requests:
+            self._check_fits(r)
         stats = ServeStats(requests=len(requests))
         t0 = time.monotonic()
         buckets: dict[int, list[Request]] = {}
@@ -98,7 +307,8 @@ class ServingEngine:
             for w0 in range(0, len(bucket), self.slots):
                 wave = bucket[w0:w0 + self.slots]
                 prompts = np.stack([r.prompt for r in wave])
-                last, state = self._prefill_wave(prompts)
+                last, state = self._prefill(self.params,
+                                            self._batch_for(prompts))
                 stats.prefills += 1
                 active = np.ones(len(wave), bool)
                 n_steps = max(r.max_new_tokens for r in wave)
@@ -113,6 +323,7 @@ class ServingEngine:
                             stats.tokens += 1
                             if len(r.output) >= r.max_new_tokens:
                                 active[i] = False
+                                r.state = RequestState.DONE
                                 r.finished_at = time.monotonic()
                         toks.append(tok)
                     if not active.any():
@@ -121,41 +332,90 @@ class ServingEngine:
                         self.params, jnp.asarray(toks, jnp.int32)[:, None],
                         state)
                     stats.decode_steps += 1
+                    stats.occupancy_sum += active.sum() / self.slots
         stats.wall_s = time.monotonic() - t0
+        stats.fill_request_metrics(requests)
         return stats
 
 
-class MultiReplicaEngine:
-    """Round-robin request dispatch across replica groups (paper's multi-NCS).
+class ReplicaTarget(Target):
+    """Adapter: one continuous-batching replica as an offload Target.
 
-    Each replica is a `ServingEngine` wrapped in a `JaxTarget`; the offload
-    engine provides the split-phase submit/collect and straggler reissue.
+    `load_tensor` (the paper's mvncLoadTensor) admits a request clone into
+    the replica's scheduler and returns immediately; the replica's executor
+    thread plays the role of the per-NCS worker, and `WorkItem.complete`
+    fires when the request's last token is emitted.  `queue_depth` exposes
+    scheduler load (queued + occupied slots) so the offload engine's
+    least-loaded dispatch balances individual requests across replicas.
+    """
+
+    def __init__(self, engine: ServingEngine, name: str,
+                 tdp_watts: float = 1.0):
+        self.engine = engine
+        self.name = name
+        self.tdp_watts = tdp_watts
+
+    def open(self) -> None:
+        self.busy = False
+        self.engine.start()
+
+    def close(self) -> None:
+        self.engine.stop()
+
+    def load_tensor(self, item: WorkItem) -> WorkItem:
+        req = item.payload.clone()      # reissue-safe: first clone wins
+        self.engine.submit(req, on_finish=lambda r: item.complete(r, self.name))
+        return item
+
+    @property
+    def queue_depth(self) -> int:
+        return self.engine.load
+
+
+class MultiReplicaEngine:
+    """Replicas pull individual requests from a shared queue (paper's
+    multi-NCS, continuous-batching edition).
+
+    Each replica is a :class:`ServingEngine` wrapped in a
+    :class:`ReplicaTarget`; `repro.core.offload` provides the split-phase
+    submit, least-loaded dispatch, out-of-order completion drain, and
+    deadline-based straggler reissue (a request stuck on one replica is
+    re-admitted on the least-loaded one; first finish wins).
     """
 
     def __init__(self, replicas: list[ServingEngine], *,
                  deadline_s: float | None = None):
         self.replicas = replicas
-
-        def make_fn(eng: ServingEngine) -> Callable:
-            def fn(reqs: list[Request]):
-                st = eng.serve(reqs)
-                return {"outputs": [r.output for r in reqs],
-                        "tokens": st.tokens, "wall_s": st.wall_s}
-            return fn
-
-        self.targets = [JaxTarget(make_fn(e), name=f"replica{i}")
-                        for i, e in enumerate(self.replicas)]
+        self.targets = [ReplicaTarget(e, name=f"replica{i}")
+                        for i, e in enumerate(replicas)]
         self.deadline_s = deadline_s
 
     def serve(self, requests: list[Request], *,
-              group_size: int = 4) -> ServeStats:
-        groups = [requests[i:i + group_size]
-                  for i in range(0, len(requests), group_size)]
+              group_size: int | None = None) -> ServeStats:
+        """Least-loaded dispatch of *individual* requests with out-of-order
+        collection.  ``group_size`` is deprecated (pre-chunked groups are
+        gone); when given it only scales the dispatch window."""
+        total_slots = sum(e.slots for e in self.replicas)
+        window = (group_size * len(self.replicas) if group_size
+                  else 2 * total_slots)
+        base = [(e.totals.prefills, e.totals.decode_steps,
+                 e.totals.occupancy_sum) for e in self.replicas]
         t0 = time.monotonic()
-        with OffloadEngine(self.targets,
+        with OffloadEngine(self.targets, scheduler="least_loaded",
                            deadline_s=self.deadline_s) as eng:
-            results, _ = eng.run(groups)
-        stats = ServeStats(requests=len(requests))
-        stats.tokens = sum(r["tokens"] for r in results)
-        stats.wall_s = time.monotonic() - t0
+            results, ostats = eng.run_unordered(requests, window=window)
+        stats = ServeStats(requests=len(requests),
+                           wall_s=time.monotonic() - t0)
+        for seq, done in results:      # copy the winning clone's results back
+            orig = requests[seq]
+            orig.output = done.output
+            orig.state = done.state
+            orig.first_token_at = done.first_token_at
+            orig.finished_at = done.finished_at
+            stats.tokens += len(done.output)
+        for e, (p0, d0, o0) in zip(self.replicas, base):
+            stats.prefills += e.totals.prefills - p0
+            stats.decode_steps += e.totals.decode_steps - d0
+            stats.occupancy_sum += e.totals.occupancy_sum - o0
+        stats.fill_request_metrics(requests)
         return stats

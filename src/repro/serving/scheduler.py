@@ -1,0 +1,156 @@
+"""Continuous-batching scheduler: admission queue + fixed decode slots.
+
+The paper keeps every NCS stick saturated by split-phase load/collect; the
+LM-serving analogue is keeping every *decode slot* saturated.  This module
+owns the request lifecycle
+
+    QUEUED -> PREFILL -> DECODE -> DONE
+
+and the slot bookkeeping: a fixed number of decode slots per replica, an
+admission deque feeding them, and thread-safe submit so a replica pull-loop
+(or a live traffic source) can admit requests mid-stream.  The moment a
+slot's request finishes, the next queued request is admitted into that slot
+— no lock-step waves, no length bucketing.
+
+The scheduler is pure bookkeeping: the :class:`~repro.serving.engine.
+ServingEngine` executor owns params, KV state, and the jitted decode step.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Callable
+
+import numpy as np
+
+from repro.serving.sampler import Sampler, greedy
+
+
+class RequestState(Enum):
+    QUEUED = "queued"      # in the admission queue
+    PREFILL = "prefill"    # assigned a slot; prompt being prefilled
+    DECODE = "decode"      # occupying a decode slot
+    DONE = "done"          # all tokens emitted
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int = 16
+    sampler: Sampler = field(default_factory=greedy)
+    # filled by the scheduler/engine:
+    state: RequestState = RequestState.QUEUED
+    output: list = field(default_factory=list)
+    submitted_at: float = field(default_factory=time.monotonic)
+    first_token_at: float | None = None
+    finished_at: float | None = None
+    on_finish: Callable[["Request"], None] | None = None
+
+    @property
+    def ttft_s(self) -> float | None:
+        if self.first_token_at is None:
+            return None
+        return self.first_token_at - self.submitted_at
+
+    @property
+    def tpot_s(self) -> float | None:
+        """Time per output token after the first (decode cadence)."""
+        if self.finished_at is None or self.first_token_at is None \
+                or len(self.output) < 2:
+            return None
+        return ((self.finished_at - self.first_token_at)
+                / (len(self.output) - 1))
+
+    def clone(self) -> "Request":
+        """Fresh-output copy for straggler reissue across replicas: two
+        replicas may decode the same request concurrently; each works on
+        its own clone and the first completion wins."""
+        return Request(rid=self.rid, prompt=self.prompt,
+                       max_new_tokens=self.max_new_tokens,
+                       sampler=self.sampler, submitted_at=self.submitted_at)
+
+
+class ContinuousScheduler:
+    """Admission queue feeding a fixed set of decode slots.
+
+    Thread-safe: `submit` may be called from any thread (a live traffic
+    source, a replica pull-loop) while the executor thread runs
+    `admit`/`active`/`release`.
+    """
+
+    def __init__(self, num_slots: int):
+        assert num_slots >= 1
+        self.num_slots = num_slots
+        self.slots: list[Request | None] = [None] * num_slots
+        self._queue: deque[Request] = deque()
+        self._lock = threading.RLock()
+        self._work = threading.Condition(self._lock)
+
+    # -- producer side ---------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        with self._work:
+            req.state = RequestState.QUEUED
+            self._queue.append(req)
+            self._work.notify_all()
+
+    # -- executor side ---------------------------------------------------------
+
+    def admit(self) -> list[tuple[int, Request]]:
+        """Fill every free slot from the admission queue; the returned
+        (slot, request) pairs are in PREFILL state and need their prompt
+        prefilled into the batched KV state."""
+        out: list[tuple[int, Request]] = []
+        with self._lock:
+            for i in range(self.num_slots):
+                if self.slots[i] is None and self._queue:
+                    req = self._queue.popleft()
+                    req.state = RequestState.PREFILL
+                    self.slots[i] = req
+                    out.append((i, req))
+        return out
+
+    def active(self) -> list[tuple[int, Request]]:
+        with self._lock:
+            return [(i, r) for i, r in enumerate(self.slots) if r is not None]
+
+    def release(self, slot: int) -> Request:
+        """Free a slot whose request finished (state already DONE)."""
+        with self._lock:
+            req = self.slots[slot]
+            assert req is not None, f"release of empty slot {slot}"
+            self.slots[slot] = None
+            return req
+
+    # -- introspection ---------------------------------------------------------
+
+    @property
+    def queued(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+    @property
+    def occupied(self) -> int:
+        with self._lock:
+            return sum(r is not None for r in self.slots)
+
+    @property
+    def load(self) -> int:
+        """Queue depth analogue for least-loaded dispatch across replicas."""
+        with self._lock:
+            return len(self._queue) + sum(r is not None for r in self.slots)
+
+    def has_work(self) -> bool:
+        with self._lock:
+            return bool(self._queue) or any(r is not None for r in self.slots)
+
+    def wait_for_work(self, timeout: float | None = None) -> bool:
+        with self._work:
+            if self.has_work():
+                return True
+            self._work.wait(timeout)
+            return self.has_work()

@@ -51,6 +51,65 @@ def test_straggler_reissue():
     assert stats.reissues >= 1
 
 
+def test_straggler_reissue_fast_target_wins():
+    """An item stuck on an inflated-latency target must be reissued and the
+    fast target's result must win (first-completion-wins commit)."""
+    targets = [SimTarget("stuck", compute_s=0.5,
+                         result_fn=lambda p: ("stuck", p)),
+               SimTarget("fast", compute_s=0.005,
+                         result_fn=lambda p: ("fast", p))]
+    with OffloadEngine(targets, deadline_s=0.05) as eng:
+        results, stats = eng.run(list(range(6)))
+    assert results == [("fast", p) for p in range(6)]
+    assert stats.per_target.get("fast", 0) == 6
+    assert stats.reissues >= 3      # every round-robin item on "stuck"
+
+
+def test_least_loaded_late_binding_prefers_drained_target():
+    """With a small dispatch window, least_loaded keys on live queue_depth:
+    the fast target drains and receives most of the stream."""
+    slow = SimTarget("slow", compute_s=0.08)
+    fast = SimTarget("fast", compute_s=0.002)
+    with OffloadEngine([slow, fast], scheduler="least_loaded") as eng:
+        results, stats = eng.run_unordered(list(range(12)), window=2)
+    assert sorted(seq for seq, _ in results) == list(range(12))
+    assert stats.per_target.get("fast", 0) > stats.per_target.get("slow", 0)
+
+
+def test_out_of_order_drain_no_head_of_line():
+    """submit_async/drain collects finished items even when an earlier
+    item is still running (the fix over ordered `inflight.pop(0)`)."""
+    targets = [SimTarget("slow", compute_s=0.3),
+               SimTarget("fast", compute_s=0.005)]
+    with OffloadEngine(targets) as eng:       # round robin: even seqs slow
+        for p in range(4):
+            eng.submit_async(p)
+        seqs = [item.seq for item in eng.drain(4)]
+    assert sorted(seqs) == [0, 1, 2, 3]
+    assert seqs[0] in (1, 3)      # a fast item drains before slow seq 0
+
+
+def test_run_unordered_results_and_window():
+    targets = [SimTarget(f"t{i}", compute_s=0.003) for i in range(3)]
+    with OffloadEngine(targets) as eng:
+        results, stats = eng.run_unordered(list(range(20)), window=4)
+    assert sorted(seq for seq, _ in results) == list(range(20))
+    assert all(seq == res for seq, res in results)
+    assert stats.items == 20
+
+
+def test_async_on_done_callback_fires_once():
+    import threading
+    fired = []
+    ev = threading.Event()
+    t = SimTarget("t", compute_s=0.01)
+    with OffloadEngine([t]) as eng:
+        eng.submit("x", on_done=lambda it: (fired.append(it.result),
+                                            ev.set()))
+        assert ev.wait(5)
+    assert fired == ["x"]
+
+
 def test_multi_device_scaling():
     def mk(n):
         return [SimTarget(f"v{i}", compute_s=0.004, transfer_s=0.001)

@@ -1,0 +1,68 @@
+"""Continuous-batching scheduler: lifecycle, slot bookkeeping, admission."""
+import numpy as np
+
+from repro.serving.scheduler import (ContinuousScheduler, Request,
+                                     RequestState)
+
+
+def _req(rid, n=4):
+    return Request(rid, np.arange(6, dtype=np.int32), max_new_tokens=n)
+
+
+def test_lifecycle_states():
+    s = ContinuousScheduler(2)
+    r = _req(0)
+    s.submit(r)
+    assert r.state is RequestState.QUEUED
+    assert s.queued == 1 and s.occupied == 0
+    [(slot, admitted)] = s.admit()
+    assert admitted is r and r.state is RequestState.PREFILL
+    assert s.queued == 0 and s.occupied == 1 and s.load == 1
+    r.state = RequestState.DONE
+    assert s.release(slot) is r
+    assert s.occupied == 0 and not s.has_work()
+
+
+def test_admit_fills_free_slots_fifo():
+    s = ContinuousScheduler(2)
+    for i in range(5):
+        s.submit(_req(i))
+    first = s.admit()
+    assert [r.rid for _, r in first] == [0, 1]
+    assert s.admit() == []                      # slots full
+    assert s.queued == 3
+    # the moment a slot frees, the next queued request takes exactly it
+    slot = first[0][0]
+    s.release(slot)
+    [(slot2, nxt)] = s.admit()
+    assert slot2 == slot and nxt.rid == 2
+
+
+def test_active_and_load_reflect_slots_and_queue():
+    s = ContinuousScheduler(3)
+    for i in range(4):
+        s.submit(_req(i))
+    s.admit()
+    assert {r.rid for _, r in s.active()} == {0, 1, 2}
+    assert s.load == 4 and s.queued == 1
+    assert s.has_work()
+
+
+def test_wait_for_work_signals_on_submit():
+    s = ContinuousScheduler(1)
+    assert not s.wait_for_work(timeout=0.01)
+    s.submit(_req(0))
+    assert s.wait_for_work(timeout=0.01)
+
+
+def test_request_metrics_and_clone():
+    r = _req(7)
+    r.submitted_at = 10.0
+    r.first_token_at = 10.5
+    r.finished_at = 11.5
+    r.output = [1, 2, 3]
+    assert r.ttft_s == 0.5
+    assert abs(r.tpot_s - 0.5) < 1e-9
+    c = r.clone()
+    assert c.rid == 7 and c.output == [] and c.first_token_at is None
+    assert c.submitted_at == 10.0               # TTFT measured from arrival

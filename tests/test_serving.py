@@ -1,4 +1,8 @@
-"""Serving engine: outputs match direct greedy decode; stats sane."""
+"""Serving engine: continuous batching matches direct greedy decode; late
+short requests overtake long ones; multi-replica pull; vectorized sampling."""
+import threading
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,6 +11,12 @@ from repro.configs import registry as R
 from repro.models.registry import fns_for
 from repro.serving.engine import MultiReplicaEngine, Request, ServingEngine
 from repro.serving.sampler import greedy, temperature
+
+
+def _smoke():
+    cfg = R.smoke("qwen2.5-3b")
+    params = fns_for(cfg).init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
 
 
 def _direct_greedy(cfg, params, prompt, n_new, max_len):
@@ -25,8 +35,7 @@ def _direct_greedy(cfg, params, prompt, n_new, max_len):
 
 
 def test_engine_matches_direct_decode():
-    cfg = R.smoke("qwen2.5-3b")
-    params = fns_for(cfg).init(cfg, jax.random.PRNGKey(0))
+    cfg, params = _smoke()
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size, size=9).astype(np.int32)
                for _ in range(3)]
@@ -38,6 +47,89 @@ def test_engine_matches_direct_decode():
         assert r.output == _direct_greedy(cfg, params, p, 4, 16), r.rid
 
 
+def test_wave_path_matches_continuous():
+    """Legacy lock-step decode (benchmark baseline) produces identical
+    greedy outputs to continuous batching."""
+    cfg, params = _smoke()
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, size=8).astype(np.int32)
+               for _ in range(4)]
+    mk = lambda: [Request(i, p, max_new_tokens=3, sampler=greedy())  # noqa
+                  for i, p in enumerate(prompts)]
+    eng = ServingEngine(cfg, params, max_len=12, batch_slots=2)
+    cont, wave = mk(), mk()
+    eng.serve(cont)
+    eng.serve_wave(wave)
+    assert [r.output for r in cont] == [r.output for r in wave]
+
+
+def test_mixed_lengths_and_slot_refill():
+    """Short requests free their slots for queued ones; stats track
+    occupancy and per-request latency."""
+    cfg, params = _smoke()
+    rng = np.random.default_rng(2)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size, size=6)
+                    .astype(np.int32),
+                    max_new_tokens=2 if i % 2 else 6, sampler=greedy())
+            for i in range(6)]
+    eng = ServingEngine(cfg, params, max_len=16, batch_slots=2)
+    stats = eng.serve(reqs)
+    assert [len(r.output) for r in reqs] == [6, 2, 6, 2, 6, 2]
+    assert stats.tokens == 24
+    assert stats.prefills == 6
+    assert 0.0 < stats.slot_occupancy <= 1.0
+    assert len(stats.ttft) == 6 and stats.ttft_p50_s is not None
+    # continuous batching needs fewer decode steps than lock-step waves
+    # (3 waves x 6 steps) would
+    assert stats.decode_steps < 18
+
+
+def test_late_short_request_finishes_first():
+    """A short request admitted mid-stream completes without waiting for an
+    earlier long request's full decode (the continuous-batching invariant
+    the wave path cannot satisfy)."""
+    cfg, params = _smoke()
+    prompt = np.arange(8, dtype=np.int32)
+    long_req = Request(0, prompt, max_new_tokens=30, sampler=greedy())
+    short_req = Request(1, prompt, max_new_tokens=3, sampler=greedy())
+    ev_long, ev_short = threading.Event(), threading.Event()
+    eng = ServingEngine(cfg, params, max_len=48, batch_slots=2)
+    eng.start()
+    try:
+        eng.submit(long_req, on_finish=lambda r: ev_long.set())
+        deadline = time.monotonic() + 60
+        while long_req.first_token_at is None:   # long is mid-decode
+            assert time.monotonic() < deadline, "long request never started"
+            time.sleep(0.005)
+        short_req.submitted_at = time.monotonic()
+        eng.submit(short_req, on_finish=lambda r: ev_short.set())
+        assert ev_short.wait(60) and ev_long.wait(60)
+    finally:
+        eng.stop()
+    assert len(short_req.output) == 3 and len(long_req.output) == 30
+    assert short_req.finished_at < long_req.finished_at
+
+
+def test_rejects_request_exceeding_kv_capacity():
+    """Out-of-range cache writes clamp silently under jit — the engine must
+    reject a request that cannot fit instead of corrupting generation."""
+    import pytest
+    cfg, params = _smoke()
+    eng = ServingEngine(cfg, params, max_len=10, batch_slots=2)
+    too_big = Request(0, np.arange(8, dtype=np.int32), max_new_tokens=8)
+    with pytest.raises(ValueError, match="KV capacity"):
+        eng.serve([too_big])
+    with pytest.raises(ValueError, match="KV capacity"):
+        eng.submit(too_big)
+    with pytest.raises(ValueError, match="KV capacity"):
+        eng.serve_wave([too_big])
+    # boundary: prompt + new == max_len + 1 still fits (last token needs
+    # no cache write)
+    ok = Request(1, np.arange(8, dtype=np.int32), max_new_tokens=3)
+    stats = eng.serve([ok])
+    assert stats.tokens == 3
+
+
 def test_sampler_temperature_topk():
     logits = np.array([10.0, 9.0, -50.0, -50.0])
     s = temperature(0.5, top_k=2, seed=0)
@@ -46,13 +138,24 @@ def test_sampler_temperature_topk():
     assert greedy()(logits) == 0
 
 
+def test_sampler_vectorized_batch():
+    logits = np.array([[5.0, 1.0, 0.0], [0.0, 1.0, 5.0], [1.0, 9.0, 0.0]])
+    assert greedy().sample(logits).tolist() == [0, 2, 1]
+    out = temperature(0.3, top_k=1, seed=0).sample(logits)
+    assert out.tolist() == [0, 2, 1]            # top-1 == greedy
+    # stateless greedy slots share one batch group; temperature is per-rng
+    assert greedy().batch_key == greedy().batch_key
+    assert temperature(0.5).batch_key != temperature(0.5).batch_key
+
+
 def test_multireplica_counts():
-    cfg = R.smoke("qwen2.5-3b")
-    params = fns_for(cfg).init(cfg, jax.random.PRNGKey(0))
+    cfg, params = _smoke()
     replicas = [ServingEngine(cfg, params, max_len=12, batch_slots=2)
                 for _ in range(2)]
     reqs = [Request(i, np.arange(6, dtype=np.int32), max_new_tokens=3)
             for i in range(6)]
-    stats = MultiReplicaEngine(replicas).serve(reqs, group_size=2)
+    stats = MultiReplicaEngine(replicas).serve(reqs)
     assert stats.tokens == 18
     assert stats.requests == 6
+    assert all(len(r.output) == 3 for r in reqs)
+    assert stats.prefills == 6
