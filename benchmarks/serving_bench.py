@@ -6,17 +6,24 @@ are comparable across PRs:
 
   1. `replicas_{1,2}` — replica scaling with least-loaded request pull
      (the paper's multi-NCS protocol at LM scale).
-  2. `mixed_wave` / `mixed_continuous` — mixed-length requests
-     (max_new_tokens drawn from {4, 64}) on one replica with 4 decode
-     slots.  The wave path lock-steps every wave to its slowest member;
-     continuous batching refills a slot the moment its request finishes.
-     `continuous_speedup` is the headline number.
+  2. `mixed_wave` / `mixed_continuous` — mixed-length requests (prompts
+     6..19 tokens, max_new_tokens drawn from {4, 64}) on one replica with
+     4 decode slots.  The wave path lock-steps every wave to its slowest
+     member; continuous batching refills a slot the moment its request
+     finishes.  `mixed_continuous` runs the paged KV engine with a block
+     pool sized <= 50% of the worst-case contiguous footprint;
+     `mixed_continuous_contig` is the contiguous A/B twin.
+     `continuous_speedup` (paged vs wave) and `paged_vs_contiguous`
+     (tokens/s ratio at half the KV memory) are the headline numbers, with
+     `kv_pool_frac` / `prefill_compiles` showing where the win comes from
+     (paging + prompt-length bucketing vs per-length recompiles).
   3. `arrival` — a seeded arrival process submitted against a running
      engine (service mode): requests admitted mid-stream, the scenario a
      batch-offline API cannot express.
 
-Each scenario reports tokens/s, TTFT p50/p99 (ms), mean TPOT (ms), and
-slot occupancy.
+Each scenario reports tokens/s, TTFT p50/p99 (ms), mean TPOT (ms), slot
+occupancy, prefill jit compiles, and (paged) peak KV-pool blocks and
+utilization.
 """
 from __future__ import annotations
 
@@ -44,11 +51,14 @@ def _requests(cfg, n, prompt_len=12, new_tokens=6, seed=0):
             for i in range(n)]
 
 
-def _mixed_requests(cfg, n=16, prompt_len=12, seed=0):
-    """Alternating short/long decodes: the continuous-batching stressor."""
+def _mixed_requests(cfg, n=16, seed=0):
+    """Alternating short/long decodes over *varied* prompt lengths: the
+    stressor for both continuous batching (ragged finish times) and the
+    prefill compile cache (ragged prompt shapes)."""
     rng = np.random.default_rng(seed)
     return [Request(i, rng.integers(0, cfg.vocab_size,
-                                    size=prompt_len).astype(np.int32),
+                                    size=int(rng.integers(6, 20)))
+                    .astype(np.int32),
                     max_new_tokens=4 if i % 2 else 64, sampler=greedy())
             for i in range(n)]
 
@@ -64,7 +74,19 @@ def _summary(stats: ServeStats) -> dict:
         "tpot_ms": ms(stats.mean_tpot_s),
         "slot_occupancy": round(stats.slot_occupancy, 3),
         "prefills": stats.prefills, "decode_steps": stats.decode_steps,
+        "prefill_compiles": stats.prefill_compiles,
+        "kv_blocks_peak": stats.kv_blocks_peak,
+        "kv_pool_util": (round(stats.kv_pool_util, 3)
+                         if stats.kv_pool_util is not None else None),
     }
+
+
+def _kv_state_bytes(eng: ServingEngine) -> int:
+    """Device bytes of the engine's batched KV decode state."""
+    if eng._state is None:
+        eng._state = eng._init_state()
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(eng._state))
 
 
 def _warmup(eng: ServingEngine, cfg) -> None:
@@ -102,22 +124,44 @@ def run(verbose: bool = True) -> dict:
                    "contend for it; protocol-level replica scaling is "
                    "demonstrated with calibrated targets in fig6b (7.7x/8)")
 
-    # -- scenario 2: mixed-length, wave vs continuous ----------------------
-    max_len = 12 + 64 + 1
-    eng = ServingEngine(cfg, params, max_len=max_len, batch_slots=4)
-    _warmup(eng, cfg)
-    out["mixed_wave"] = _summary(eng.serve_wave(_mixed_requests(cfg)))
-    out["mixed_continuous"] = _summary(eng.serve(_mixed_requests(cfg)))
+    # -- scenario 2: mixed-length — wave vs continuous, paged vs contiguous
+    slots, block = 4, 16
+    max_len = 19 + 64 + 1                     # longest prompt + budget
+    # paged pool sized <= 50% of the worst-case contiguous footprint
+    pool_blocks = (slots * max_len) // (2 * block) - 1
+    contig = ServingEngine(cfg, params, max_len=max_len, batch_slots=slots,
+                           paged=False)
+    paged = ServingEngine(cfg, params, max_len=max_len, batch_slots=slots,
+                          paged=True, block_size=block,
+                          pool_blocks=pool_blocks)
+    _warmup(contig, cfg)
+    _warmup(paged, cfg)
+    out["mixed_wave"] = _summary(contig.serve_wave(_mixed_requests(cfg)))
+    out["mixed_continuous_contig"] = _summary(
+        contig.serve(_mixed_requests(cfg)))
+    out["mixed_continuous"] = _summary(paged.serve(_mixed_requests(cfg)))
     out["continuous_speedup"] = round(
         out["mixed_continuous"]["tokens_per_s"]
         / out["mixed_wave"]["tokens_per_s"], 3)
+    out["paged_vs_contiguous"] = round(
+        out["mixed_continuous"]["tokens_per_s"]
+        / out["mixed_continuous_contig"]["tokens_per_s"], 3)
+    out["kv_bytes_contiguous"] = _kv_state_bytes(contig)
+    out["kv_bytes_paged"] = _kv_state_bytes(paged)
+    out["kv_pool_frac"] = round(out["kv_bytes_paged"]
+                                / out["kv_bytes_contiguous"], 3)
     if verbose:
-        for k in ("mixed_wave", "mixed_continuous"):
+        for k in ("mixed_wave", "mixed_continuous_contig",
+                  "mixed_continuous"):
             s = out[k]
             print(f"{k}: {s['tokens_per_s']:.1f} tok/s  "
                   f"ttft p50={s['ttft_p50_ms']}ms p99={s['ttft_p99_ms']}ms  "
-                  f"occ={s['slot_occupancy']}")
+                  f"occ={s['slot_occupancy']}  "
+                  f"compiles={s['prefill_compiles']}")
         print(f"continuous vs wave speedup: {out['continuous_speedup']:.2f}x")
+        print(f"paged vs contiguous: {out['paged_vs_contiguous']:.2f}x "
+              f"tok/s at {out['kv_pool_frac']:.0%} of the KV footprint "
+              f"(peak util {out['mixed_continuous']['kv_pool_util']})")
 
     # -- scenario 3: arrival process against a running engine --------------
     eng2 = ServingEngine(cfg, params, max_len=12 + 16, batch_slots=4)
@@ -135,7 +179,10 @@ def run(verbose: bool = True) -> dict:
         if remaining[0] == 0:
             done.set()
 
-    base = (eng2.totals.decode_steps, eng2.totals.occupancy_sum)
+    base = (eng2.totals.decode_steps, eng2.totals.occupancy_sum,
+            eng2.prefill_compiles)
+    if eng2.pool is not None:
+        eng2.pool.reset_peak()
     eng2.start()
     t0 = time.monotonic()
     for r, gap in zip(reqs, gaps):
@@ -149,6 +196,10 @@ def run(verbose: bool = True) -> dict:
                        tokens=sum(len(r.output) for r in reqs))
     stats.decode_steps = eng2.totals.decode_steps - base[0]
     stats.occupancy_sum = eng2.totals.occupancy_sum - base[1]
+    stats.prefill_compiles = eng2.prefill_compiles - base[2]
+    if eng2.pool is not None:
+        stats.kv_blocks_peak = eng2.pool.peak_used
+        stats.kv_pool_util = eng2.pool.utilization
     stats.fill_request_metrics(reqs)
     out["arrival"] = _summary(stats)
     if verbose:

@@ -5,7 +5,9 @@ import jax
 
 from repro.kernels.conv2d.kernel import conv2d as _pallas
 from repro.kernels.conv2d.ref import conv2d_ref
-from repro.kernels.dispatch import use_pallas
+from repro.kernels.dispatch import register_kernel, use_pallas
+
+register_kernel("conv2d", _pallas, conv2d_ref)
 
 
 def conv2d(x, w, b, *, stride: int = 1, **block_kw):

@@ -5,13 +5,38 @@ Pallas kernels target TPU; on this CPU-only container they execute in
 correct but slow — so the model layers default to their jnp oracles and
 kernels are opt-in (``enable_pallas()``), becoming the default on a real
 TPU backend.
+
+Each kernel family's ops module registers its (pallas, ref) pair in the
+kernel table via :func:`register_kernel` (backend selection itself lives
+in the ops wrappers, which also own the interpret-mode fallback).
+`benchmarks/kernel_bench.py --smoke` (a tier-1 CI gate) cross-checks the
+table against its correctness cases — registering a kernel without a
+smoke case fails the build, as does any kernel-vs-oracle mismatch.
 """
 from __future__ import annotations
 
 import contextlib
 import threading
+from typing import Callable, NamedTuple
 
 _STATE = threading.local()
+
+
+class KernelEntry(NamedTuple):
+    pallas: Callable
+    ref: Callable
+
+
+_TABLE: dict[str, KernelEntry] = {}
+
+
+def register_kernel(name: str, pallas_fn: Callable, ref_fn: Callable) -> None:
+    """Register a kernel's Pallas implementation and its jnp oracle."""
+    _TABLE[name] = KernelEntry(pallas_fn, ref_fn)
+
+
+def kernel_table() -> dict[str, KernelEntry]:
+    return dict(_TABLE)
 
 
 def use_pallas() -> bool:

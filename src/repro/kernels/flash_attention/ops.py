@@ -3,9 +3,11 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.dispatch import use_pallas
+from repro.kernels.dispatch import register_kernel, use_pallas
 from repro.kernels.flash_attention.kernel import flash_attention as _pallas
 from repro.kernels.flash_attention.ref import flash_attention_ref
+
+register_kernel("flash_attention", _pallas, flash_attention_ref)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, **block_kw):

@@ -3,9 +3,11 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.dispatch import use_pallas
+from repro.kernels.dispatch import register_kernel, use_pallas
 from repro.kernels.matmul.kernel import matmul as matmul_pallas
 from repro.kernels.matmul.ref import matmul_ref
+
+register_kernel("matmul", matmul_pallas, matmul_ref)
 
 
 def matmul(x: jax.Array, y: jax.Array, **block_kw) -> jax.Array:

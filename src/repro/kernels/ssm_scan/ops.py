@@ -3,9 +3,11 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.dispatch import use_pallas
+from repro.kernels.dispatch import register_kernel, use_pallas
 from repro.kernels.ssm_scan.kernel import ssm_scan as _pallas
 from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+register_kernel("ssm_scan", _pallas, ssm_scan_ref)
 
 
 def ssm_scan(q, k, v, log_decay, log_gate, *, chunk: int = 128):

@@ -37,6 +37,12 @@ def main() -> int:
     ap.add_argument("--replicas", type=int, default=1)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--contiguous-kv", action="store_true",
+                    help="disable the paged KV pool (worst-case per-slot "
+                         "cache, per-prompt-length prefill compiles)")
+    ap.add_argument("--kv-pool-blocks", type=int, default=None,
+                    help="paged KV pool size in blocks (default: worst "
+                         "case = slots x ceil(max_len / block_size))")
     ap.add_argument("--mode", choices=("continuous", "wave"),
                     default="continuous",
                     help="wave = legacy lock-step decode (single replica "
@@ -59,14 +65,15 @@ def main() -> int:
                     max_new_tokens=args.new_tokens, sampler=mk_sampler())
             for i in range(args.requests)]
 
+    kw = dict(max_len=max_len, batch_slots=args.slots,
+              paged=False if args.contiguous_kv else None,
+              pool_blocks=args.kv_pool_blocks)
     if args.replicas > 1:
-        replicas = [ServingEngine(cfg, params, max_len=max_len,
-                                  batch_slots=args.slots)
+        replicas = [ServingEngine(cfg, params, **kw)
                     for _ in range(args.replicas)]
         stats = MultiReplicaEngine(replicas).serve(reqs)
     else:
-        eng = ServingEngine(cfg, params, max_len=max_len,
-                            batch_slots=args.slots)
+        eng = ServingEngine(cfg, params, **kw)
         stats = (eng.serve_wave(reqs) if args.mode == "wave"
                  else eng.serve(reqs))
     print(f"requests={stats.requests} tokens={stats.tokens} "
@@ -75,6 +82,10 @@ def main() -> int:
           f"p99={_fmt_ms(stats.ttft_p99_s)}  "
           f"tpot={_fmt_ms(stats.mean_tpot_s)}  "
           f"slot_occupancy={stats.slot_occupancy:.2f}")
+    if stats.kv_blocks_peak is not None:
+        print(f"prefill_compiles={stats.prefill_compiles}  "
+              f"kv_blocks_peak={stats.kv_blocks_peak}  "
+              f"kv_pool_util={stats.kv_pool_util:.2f}")
     report = tpu_serving_report(stats.tokens_per_s, chips=args.replicas)
     print(report.row())
     return 0

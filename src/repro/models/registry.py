@@ -32,6 +32,12 @@ class ModelFns:
     decode: Callable[..., Any]
     init_decode_state: Callable[..., Any]
     table: Callable[..., Any] = None   # cfg -> ParamDef table (for sharding)
+    # paged-KV support (None = family serves from contiguous caches only):
+    #   init_paged_state(cfg, num_blocks, block_size, batch, max_blocks,
+    #                    dtype) -> paged decode-state pytree
+    #   scatter_prefill(state, dense_batch1_cache, block_ids) -> state
+    init_paged_state: Callable[..., Any] = None
+    scatter_prefill: Callable[..., Any] = None
 
 
 # --- decoder-only transformers (dense / moe / vlm) -------------------------
@@ -45,7 +51,7 @@ def _tf_forward(cfg, params, batch, *, remat=True, chunk=1024):
 def _tf_prefill(cfg, params, batch, max_len=None, chunk=1024):
     return transformer.prefill(cfg, params, batch["tokens"],
                                batch.get("positions"), max_len=max_len,
-                               chunk=chunk)
+                               chunk=chunk, last_pos=batch.get("last_pos"))
 
 
 def _tf_decode(cfg, params, tokens, state, chunk=2048):
@@ -60,7 +66,9 @@ def _tf_state(cfg, batch, max_len, cache_dtype="bfloat16"):
 
 TRANSFORMER_FNS = ModelFns("dense", transformer.init, _tf_forward,
                            _tf_prefill, _tf_decode, _tf_state,
-                           table=transformer.lm_table)
+                           table=transformer.lm_table,
+                           init_paged_state=transformer.make_paged_cache,
+                           scatter_prefill=transformer.scatter_prefill_blocks)
 
 
 # --- hybrid (zamba2) --------------------------------------------------------

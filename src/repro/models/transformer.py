@@ -53,6 +53,49 @@ class QuantKVCache(NamedTuple):
         return self.k.shape[2]
 
 
+class PagedKVCache(NamedTuple):
+    """Paged KV cache: one global pool of fixed-size blocks shared by every
+    decode slot, indexed through per-slot block tables (vLLM-style).
+
+    k/v: (L, N_blocks, block_size, K, D) — block 0 is the trash block that
+    retired slots write into; block_tables: (B, max_blocks) physical block
+    id per logical block, 0 where unassigned; length: (B,) valid KV rows.
+    """
+    k: jax.Array
+    v: jax.Array
+    block_tables: jax.Array
+    length: jax.Array
+
+    @property
+    def block_size(self) -> int:
+        return self.k.shape[2]
+
+    @property
+    def max_len(self) -> int:
+        """Max addressable rows per sequence (table width x block size)."""
+        return self.block_tables.shape[1] * self.k.shape[2]
+
+
+class QuantPagedKVCache(NamedTuple):
+    """int8 variant of :class:`PagedKVCache`: pools are int8 with absmax
+    scales per (block, row, kv-head).  k/v: (L, N, bs, K, D) int8;
+    k_scale/v_scale: (L, N, bs, K) f32."""
+    k: jax.Array
+    v: jax.Array
+    k_scale: jax.Array
+    v_scale: jax.Array
+    block_tables: jax.Array
+    length: jax.Array
+
+    @property
+    def block_size(self) -> int:
+        return self.k.shape[2]
+
+    @property
+    def max_len(self) -> int:
+        return self.block_tables.shape[1] * self.k.shape[2]
+
+
 def quantize_kv(x: jax.Array):
     """x: (..., D) -> (int8 (..., D), scale (...,) f32)."""
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
@@ -80,6 +123,51 @@ def make_cache(cfg, batch: int, max_len: int, dtype="bfloat16",
             v_scale=jnp.zeros(shape[:-1], jnp.float32), length=ln)
     dt = dtype_of(dtype)
     return KVCache(k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt), length=ln)
+
+
+def make_paged_cache(cfg, num_blocks: int, block_size: int, batch: int,
+                     max_blocks: int, dtype="bfloat16",
+                     num_layers: int | None = None):
+    """Paged cache sized to ``num_blocks`` pool blocks (incl. trash block 0)
+    with ``batch`` block tables of ``max_blocks`` entries each."""
+    L = num_layers if num_layers is not None else cfg.num_layers
+    hd = cfg.resolved_head_dim
+    shape = (L, num_blocks, block_size, cfg.num_kv_heads, hd)
+    tables = jnp.zeros((batch, max_blocks), jnp.int32)
+    ln = jnp.zeros((batch,), jnp.int32)
+    if dtype == "int8":
+        return QuantPagedKVCache(
+            k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
+            k_scale=jnp.zeros(shape[:-1], jnp.float32),
+            v_scale=jnp.zeros(shape[:-1], jnp.float32),
+            block_tables=tables, length=ln)
+    dt = dtype_of(dtype)
+    return PagedKVCache(k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt),
+                        block_tables=tables, length=ln)
+
+
+def scatter_prefill_blocks(cache, dense: KVCache, ids: jax.Array):
+    """Write a batch-1 dense prefill cache into pool blocks ``ids``.
+
+    dense.k/v: (L, 1, S, K, D) with S a multiple of the pool block size;
+    ids: (S // block_size,) physical block ids in logical order (entries
+    past the prompt's blocks point at the trash block 0, so bucket padding
+    rows land in trash).  Returns the cache with the pools updated.
+    """
+    L, N, bs, K, D = cache.k.shape
+    S = dense.k.shape[2]
+    nb = S // bs
+    kb = dense.k[:, 0].reshape(L, nb, bs, K, D)
+    vb = dense.v[:, 0].reshape(L, nb, bs, K, D)
+    if isinstance(cache, QuantPagedKVCache):
+        kq, ksc = quantize_kv(kb)
+        vq, vsc = quantize_kv(vb)
+        return cache._replace(
+            k=cache.k.at[:, ids].set(kq), v=cache.v.at[:, ids].set(vq),
+            k_scale=cache.k_scale.at[:, ids].set(ksc),
+            v_scale=cache.v_scale.at[:, ids].set(vsc))
+    return cache._replace(k=cache.k.at[:, ids].set(kb.astype(cache.k.dtype)),
+                          v=cache.v.at[:, ids].set(vb.astype(cache.v.dtype)))
 
 
 # ---------------------------------------------------------------------------
@@ -146,15 +234,56 @@ def _ffn_apply(cfg, p, h):
     return out, aux
 
 
+def _paged_attend(cfg, q, k_new, v_new, pool_k, pool_v, scales,
+                  block_tables, length, chunk):
+    """Paged decode attention for one layer: write the new KV row into the
+    block-table-addressed pool slot, then attend over live blocks only.
+
+    q/k_new/v_new: (B, 1, H|K, D); pool_k/pool_v: (N, bs, K, D) this
+    layer's slice of the global pool; block_tables: (B, max_blocks);
+    length: (B,) rows already valid (the new row is written at ``length``).
+    Retired slots have all-zero tables, so their writes land in the trash
+    block and never corrupt blocks reused by live requests.
+    """
+    from repro.kernels.decode_attention.ops import paged_decode_attention
+    N, bs, K, D = pool_k.shape
+    B = q.shape[0]
+    mb = block_tables.shape[1]
+    bi = jnp.clip(length // bs, 0, mb - 1)
+    bt = block_tables[jnp.arange(B), bi]            # physical block per seq
+    off = length % bs
+    row_k, row_v = k_new[:, 0], v_new[:, 0]
+    if scales is not None:
+        k_scale, v_scale = scales
+        kq, ks = quantize_kv(row_k)
+        vq, vs = quantize_kv(row_v)
+        nk = pool_k.at[bt, off].set(kq)
+        nv = pool_v.at[bt, off].set(vq)
+        nks = k_scale.at[bt, off].set(ks)
+        nvs = v_scale.at[bt, off].set(vs)
+        out = paged_decode_attention(
+            q[:, 0], nk, nv, block_tables, length + 1,
+            k_scale=nks, v_scale=nvs, softcap=cfg.attn_logit_softcap,
+            chunk=chunk)
+        return out[:, None], (nk, nv, nks, nvs)
+    nk = pool_k.at[bt, off].set(row_k.astype(pool_k.dtype))
+    nv = pool_v.at[bt, off].set(row_v.astype(pool_v.dtype))
+    out = paged_decode_attention(q[:, 0], nk, nv, block_tables, length + 1,
+                                 softcap=cfg.attn_logit_softcap, chunk=chunk)
+    return out[:, None], (nk, nv)
+
+
 def block_apply(cfg, p, x, positions, *,
                 cache_k=None, cache_v=None, cache_scales=None, kv_len=None,
-                chunk=1024):
+                block_tables=None, chunk=1024):
     """One transformer block. Returns (x, aux, new_kv) where new_kv is
     (k, v) or (k, v, k_scale, v_scale) for the int8 cache.
 
     Without cache: full self-attention over x (train / prefill).
     With cache (decode): x is (B, 1, D); the new KV row is written at
-    ``kv_len`` and attention runs over the whole cache.
+    ``kv_len`` and attention runs over the whole cache.  With
+    ``block_tables`` the cache is paged: cache_k/v are (N, bs, K, D) pool
+    slices and reads gather only live blocks.
     """
     h = apply_norm(cfg, p["ln1"], x)
     # SP boundary: norm runs on the seq-sharded carry; attention needs the
@@ -168,6 +297,11 @@ def block_apply(cfg, p, x, positions, *,
             softcap=cfg.attn_logit_softcap, window=cfg.sliding_window,
             chunk=chunk)
         new_kv = (k, v)
+    elif block_tables is not None:
+        q, k, v = A.qkv_project(cfg, p["attn"], h, positions)
+        attn, new_kv = _paged_attend(cfg, q, k, v, cache_k, cache_v,
+                                     cache_scales, block_tables, kv_len,
+                                     chunk)
     else:
         from repro.distributed.collectives import seq_sharded_decode_attention
         q, k, v = A.qkv_project(cfg, p["attn"], h, positions)
@@ -205,7 +339,8 @@ def _scan_blocks(cfg, stacked, x, positions, *, remat, cache=None,
     training leaves it off so no (L, B, S, K, D) buffer is ever requested.
     """
 
-    quant = isinstance(cache, QuantKVCache)
+    quant = isinstance(cache, (QuantKVCache, QuantPagedKVCache))
+    tables = getattr(cache, "block_tables", None)
 
     def body_nocache(carry, p):
         h, aux = carry
@@ -223,7 +358,8 @@ def _scan_blocks(cfg, stacked, x, positions, *, remat, cache=None,
             scales = None
         h, a, kv = block_apply(cfg, p, h, positions,
                                cache_k=ck, cache_v=cv, cache_scales=scales,
-                               kv_len=cache.length, chunk=chunk)
+                               kv_len=cache.length, block_tables=tables,
+                               chunk=chunk)
         return (h, aux + a), kv
 
     body = body_cache if cache is not None else body_nocache
@@ -248,26 +384,31 @@ def _apply_backbone(cfg, params, tokens, positions, *, remat,
     compute_dt = dtype_of(cfg.compute_dtype)
     x = embed(params["embed"], tokens, compute_dt)
     aux_total = jnp.zeros((), jnp.float32)
-    quant = isinstance(cache, QuantKVCache)
+    quant = isinstance(cache, (QuantKVCache, QuantPagedKVCache))
+    paged = isinstance(cache, (PagedKVCache, QuantPagedKVCache))
     dense_caches = []
     n_dense = len(params.get("dense_blocks", ()))
     for i, bp in enumerate(params.get("dense_blocks", ())):
-        ck = cv = scales = None
+        ck = cv = scales = tables = None
         kl = None
         if cache is not None:
             ck, cv, kl = cache.k[i], cache.v[i], cache.length
             if quant:
                 scales = (cache.k_scale[i], cache.v_scale[i])
+            if paged:
+                tables = cache.block_tables
         x, a, kv = block_apply(cfg, bp, x, positions,
                                cache_k=ck, cache_v=cv, cache_scales=scales,
-                               kv_len=kl, chunk=chunk)
+                               kv_len=kl, block_tables=tables, chunk=chunk)
         aux_total += a
         if cache is not None or collect_kv:
             dense_caches.append(kv)
     sub = None
     if cache is not None:
+        # slice off the unrolled dense layers; only the stacked pools /
+        # caches have a leading layer axis (block_tables and length don't)
         sub = jax.tree_util.tree_map(
-            lambda c: c[n_dense:] if c.ndim > 1 else c, cache)
+            lambda c: c[n_dense:] if c.ndim > 2 else c, cache)
         sub = sub._replace(length=cache.length)
     x, aux, kv = _scan_blocks(cfg, params["blocks"], x, positions,
                               remat=remat, cache=sub,
@@ -284,7 +425,16 @@ def _apply_backbone(cfg, params, tokens, positions, *, remat,
         length = (cache.length if cache is not None
                   else jnp.full((tokens.shape[0],), tokens.shape[1],
                                 jnp.int32))
-        if len(kv) == 4:
+        if paged:
+            if len(kv) == 4:
+                new_cache = QuantPagedKVCache(
+                    k=kv[0], v=kv[1], k_scale=kv[2], v_scale=kv[3],
+                    block_tables=cache.block_tables, length=length)
+            else:
+                new_cache = PagedKVCache(k=kv[0], v=kv[1],
+                                         block_tables=cache.block_tables,
+                                         length=length)
+        elif len(kv) == 4:
             new_cache = QuantKVCache(k=kv[0], v=kv[1], k_scale=kv[2],
                                      v_scale=kv[3], length=length)
         else:
@@ -316,8 +466,14 @@ def forward(cfg, params, tokens, positions=None, *, remat=True, chunk=1024):
 
 
 def prefill(cfg, params, tokens, positions=None, *, cache_dtype="bfloat16",
-            max_len: int | None = None, chunk=1024):
-    """Prefill: last-position logits (B, V) + KV cache sized to ``max_len``."""
+            max_len: int | None = None, chunk=1024, last_pos=None):
+    """Prefill: last-position logits (B, V) + KV cache sized to ``max_len``.
+
+    ``last_pos`` (B,) reads logits at an arbitrary position instead of the
+    final one — the bucketed-prefill path right-pads prompts to a compile
+    bucket, so the real last token sits at ``prompt_len - 1`` (causality
+    keeps its logits independent of the padding that follows).
+    """
     if positions is None:
         positions = default_positions(cfg, tokens)
     x, _, cache = _apply_backbone(cfg, params, tokens, positions, remat=False,
@@ -333,14 +489,21 @@ def prefill(cfg, params, tokens, positions=None, *, cache_dtype="bfloat16",
         return out.at[:, :, :Sq].set(c.astype(cdt))
 
     cache = KVCache(k=grow(cache.k), v=grow(cache.v), length=cache.length)
-    last = x[:, -1:]
+    if last_pos is None:
+        last = x[:, -1:]
+    else:
+        last = x[jnp.arange(x.shape[0]), last_pos][:, None]
     lg = lm_logits(params["embed"], last, cfg.tie_embeddings,
                    cfg.final_logit_softcap)
     return lg[:, 0], cache
 
 
-def decode_step(cfg, params, tokens, cache: KVCache, *, chunk=2048):
-    """One decode step. tokens: (B, 1) -> logits (B, V), updated cache."""
+def decode_step(cfg, params, tokens, cache, *, chunk=2048):
+    """One decode step. tokens: (B, 1) -> logits (B, V), updated cache.
+
+    ``cache`` may be any of the four cache types; the paged variants route
+    attention through the block-table gather path (Pallas kernel on TPU,
+    jnp oracle otherwise)."""
     B = tokens.shape[0]
     pos = cache.length[:, None]
     if cfg.m_rope:

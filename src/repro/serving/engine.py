@@ -12,9 +12,20 @@ protocol (least-loaded dispatch, out-of-order collection), so a slow
 request on one replica never blocks completions elsewhere.
 
 Request lifecycle: QUEUED -> PREFILL -> DECODE -> DONE (see scheduler.py).
-Per-slot KV state lives in one batched decode-state pytree; a finished
-slot's cache lines are overwritten in place by the next request's prefill
-(`_merge_slot` writes along the batch axis of every state leaf).
+
+KV state comes in two layouts:
+
+  * **paged** (default for transformer families): one global
+    :class:`~repro.serving.kv_pool.KVBlockPool` of fixed-size KV blocks
+    shared by every slot, per-request block tables, block-aware admission,
+    and power-of-two *prompt-length bucketing* so the jitted prefill
+    compiles once per bucket instead of once per length.  Decode attention
+    gathers only live blocks (Pallas paged kernel on TPU, jnp oracle
+    elsewhere), so neither HBM nor decode reads pay worst-case ``max_len``
+    per slot.
+  * **contiguous** (``paged=False`` and non-transformer families): the
+    PR-1 layout — a worst-case ``(L, slots, max_len, K, D)`` state whose
+    batch axis is overwritten in place per refill (`_merge_slot`).
 
 `serve_wave` preserves the seed's lock-step wave decode for A/B comparison
 in `benchmarks/serving_bench.py`.
@@ -32,6 +43,7 @@ import numpy as np
 
 from repro.core.offload import OffloadEngine, Target, WorkItem
 from repro.models.registry import fns_for
+from repro.serving.kv_pool import CapacityError, KVBlockPool
 from repro.serving.scheduler import ContinuousScheduler, Request, RequestState
 from repro.serving.sampler import Sampler  # noqa: F401 (re-export)
 
@@ -44,6 +56,9 @@ class ServeStats:
     prefills: int = 0
     decode_steps: int = 0
     occupancy_sum: float = 0.0          # sum over decode steps of active/slots
+    prefill_compiles: int = 0           # distinct jitted prefill signatures
+    kv_blocks_peak: int | None = None   # paged only: peak pool blocks in use
+    kv_pool_util: float | None = None   # paged only: peak / capacity
     ttft: list = field(default_factory=list)    # per-request seconds
     tpot: list = field(default_factory=list)    # per-request seconds/token
 
@@ -105,23 +120,51 @@ class ServingEngine:
     """
 
     def __init__(self, cfg, params, *, max_len: int = 256,
-                 batch_slots: int = 4, chunk: int = 512):
+                 batch_slots: int = 4, chunk: int = 512,
+                 paged: bool | None = None, block_size: int = 16,
+                 pool_blocks: int | None = None,
+                 cache_dtype: str = "bfloat16"):
         self.cfg = cfg
         self.params = params
         self.fns = fns_for(cfg)
         self.max_len = max_len
         self.slots = batch_slots
         self.chunk = chunk
-        self.scheduler = ContinuousScheduler(batch_slots)
+        if paged is None:                    # auto: families with paged fns
+            paged = self.fns.init_paged_state is not None
+        elif paged and self.fns.init_paged_state is None:
+            raise ValueError(f"family {cfg.family!r} has no paged-KV "
+                             f"support (ModelFns.init_paged_state is None)")
+        self.paged = paged
+        self.block_size = block_size
+        self.cache_dtype = cache_dtype
+        if paged:
+            worst = batch_slots * -(-max_len // block_size)
+            self.pool = KVBlockPool(pool_blocks or worst, block_size)
+            self.max_blocks = self.pool.blocks_for(max_len)
+            # host mirrors of the device block tables / lengths: growth and
+            # slot retirement are numpy writes, re-injected every step
+            self._tables = np.zeros((batch_slots, self.max_blocks), np.int32)
+            self._lengths = np.zeros((batch_slots,), np.int32)
+            self._scatter = jax.jit(self.fns.scatter_prefill)
+            # bucketed prefill: cache sized to the bucket, logits read at
+            # the true prompt end — one compile per power-of-two bucket
+            self._prefill_bucketed = jax.jit(
+                lambda p, b: self.fns.prefill(cfg, p, b, max_len=None,
+                                              chunk=chunk))
+        else:
+            self.pool = None
+        self.scheduler = ContinuousScheduler(batch_slots, pool=self.pool)
         self._decode = jax.jit(
             lambda p, t, s: self.fns.decode(cfg, p, t, s, chunk=chunk))
         # jitted prefill, shape-keyed: one compile per (batch, prompt-len)
-        # signature — the continuous path always prefills batch 1, so slot
-        # refills never pay an eager-dispatch tax.
+        # signature — used by the contiguous continuous path and the legacy
+        # wave path (which needs a full worst-case ``max_len`` cache).
         self._prefill = jax.jit(
             lambda p, b: self.fns.prefill(cfg, p, b, max_len=max_len,
                                           chunk=chunk))
         self._merge = jax.jit(_merge_slot)
+        self._prefill_shapes: set = set()    # distinct jitted signatures
         self._state = None                   # batched decode-state pytree
         self._last: np.ndarray | None = None  # (slots, V) last logits
         self.totals = ServeStats()           # lifetime counters (monotonic)
@@ -130,16 +173,25 @@ class ServingEngine:
 
     # -- model plumbing --------------------------------------------------------
 
+    @property
+    def prefill_compiles(self) -> int:
+        """Distinct prefill shapes seen == jit cache entries paid for."""
+        return len(self._prefill_shapes)
+
     def _check_fits(self, req: Request) -> None:
         """Reject requests that would overrun the per-slot KV capacity —
         out-of-range cache writes clamp/drop silently under jit, corrupting
-        generation instead of failing."""
+        generation instead of failing.  Paged engines additionally reject
+        requests whose block count exceeds the whole pool (they could never
+        be admitted, only wedge the FIFO queue)."""
         need = len(req.prompt) + req.max_new_tokens
         if need > self.max_len + 1:
-            raise ValueError(
+            raise CapacityError(
                 f"request {req.rid}: prompt {len(req.prompt)} + "
                 f"max_new_tokens {req.max_new_tokens} exceeds KV capacity "
                 f"max_len={self.max_len}")
+        if self.pool is not None:
+            self.pool.validate_rows(req.kv_rows, req.rid)
 
     def _batch_for(self, prompts: np.ndarray) -> dict:
         """prompts: (W, S) -> model batch dict (positions/frames as needed)."""
@@ -154,14 +206,41 @@ class ServingEngine:
                 jnp.float32)
         return batch
 
+    def _bucket_len(self, n: int) -> int:
+        """Smallest power-of-two multiple of block_size holding ``n``."""
+        b = self.block_size
+        while b < n:
+            b *= 2
+        return b
+
     def _prefill_one(self, req: Request):
-        """Chunked prefill of one prompt -> ((V,) logits, batch-1 state)."""
-        batch = self._batch_for(req.prompt[None])
-        last, state = self._prefill(self.params, batch)
+        """Chunked prefill of one prompt -> ((V,) logits, batch-1 state).
+
+        Paged mode right-pads the prompt to a power-of-two bucket (compile
+        cache is per bucket, not per length) and reads logits at the true
+        last token; the returned dense bucket-sized cache is then scattered
+        into the slot's pool blocks by the caller."""
+        if not self.paged:
+            self._prefill_shapes.add((1, len(req.prompt)))
+            batch = self._batch_for(req.prompt[None])
+            last, state = self._prefill(self.params, batch)
+            return np.asarray(last[0]), state
+        P = len(req.prompt)
+        bucket = self._bucket_len(P)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :P] = req.prompt
+        batch = self._batch_for(toks)
+        batch["last_pos"] = jnp.asarray([P - 1], jnp.int32)
+        self._prefill_shapes.add((1, bucket))
+        last, state = self._prefill_bucketed(self.params, batch)
         return np.asarray(last[0]), state
 
     def _init_state(self):
         """Batched decode-state template covering all slots."""
+        if self.paged:
+            return self.fns.init_paged_state(
+                self.cfg, self.pool.total_blocks, self.block_size,
+                self.slots, self.max_blocks, self.cache_dtype)
         return self.fns.init_decode_state(self.cfg, self.slots, self.max_len)
 
     # -- executor step ---------------------------------------------------------
@@ -181,6 +260,43 @@ class ServingEngine:
                 toks[slot] = int(tok)
         return toks
 
+    def _admit_paged(self, slot: int, req: Request, state1) -> None:
+        """Materialize an admitted request's prompt blocks and scatter the
+        bucket-sized prefill cache into them; entries past the prompt's
+        blocks point at the trash block so bucket-padding rows land there."""
+        nb = self.pool.blocks_for(len(req.prompt))
+        req.block_ids = self.pool.alloc_reserved(nb)
+        bucket = state1.k.shape[2]
+        ids = np.zeros((bucket // self.block_size,), np.int32)
+        ids[:nb] = req.block_ids
+        self._state = self._scatter(self._state, state1, jnp.asarray(ids))
+        self._tables[slot] = 0
+        self._tables[slot, :nb] = req.block_ids
+        self._lengths[slot] = len(req.prompt)
+
+    def _retire_slot(self, slot: int) -> None:
+        """Point a finished slot's table at the trash block before its
+        freed blocks can be reused — the batched decode still writes a
+        (discarded) row for this slot every step."""
+        self._tables[slot] = 0
+        self._lengths[slot] = 0
+
+    def _grow_paged(self, still: list[tuple[int, Request]]) -> None:
+        """Allocate the next block for any request whose write position
+        crossed a block boundary, then re-inject the host-side tables and
+        lengths into the decode state."""
+        bs = self.block_size
+        for slot, req in still:
+            pos = len(req.prompt) + len(req.output) - 1   # row written next
+            if pos >= len(req.block_ids) * bs:
+                nb = len(req.block_ids)
+                req.block_ids.extend(self.pool.alloc_reserved(1))
+                self._tables[slot, nb] = req.block_ids[-1]
+            self._lengths[slot] = pos
+        self._state = self._state._replace(
+            block_tables=jnp.asarray(self._tables),
+            length=jnp.asarray(self._lengths))
+
     def _step(self) -> bool:
         """One executor iteration: refill free slots (chunked prefill),
         sample one token per active slot (vectorized), advance the batched
@@ -192,8 +308,11 @@ class ServingEngine:
                 self._state = self._init_state()
                 self._last = np.zeros((self.slots, last1.shape[-1]),
                                       last1.dtype)
-            self._state = self._merge(self._state, state1,
-                                      jnp.int32(slot))
+            if self.paged:
+                self._admit_paged(slot, req, state1)
+            else:
+                self._state = self._merge(self._state, state1,
+                                          jnp.int32(slot))
             if not self._last.flags.writeable:  # np view of a jax buffer
                 self._last = self._last.copy()
             self._last[slot] = last1
@@ -216,12 +335,16 @@ class ServingEngine:
             if len(req.output) >= req.max_new_tokens:
                 req.state = RequestState.DONE
                 req.finished_at = time.monotonic()
-                self.scheduler.release(slot)
+                self.scheduler.release(slot)   # returns blocks to the pool
+                if self.paged:
+                    self._retire_slot(slot)
                 if req.on_finish is not None:
                     req.on_finish(req)
 
         still = self.scheduler.active()
         if still:        # someone needs next-token logits
+            if self.paged:
+                self._grow_paged(still)
             last, self._state = self._decode(
                 self.params, jnp.asarray(feed)[:, None], self._state)
             self._last = np.asarray(last)
@@ -238,7 +361,10 @@ class ServingEngine:
         for r in requests:
             self._check_fits(r)
         base = (self.totals.tokens, self.totals.prefills,
-                self.totals.decode_steps, self.totals.occupancy_sum)
+                self.totals.decode_steps, self.totals.occupancy_sum,
+                self.prefill_compiles)
+        if self.pool is not None:
+            self.pool.reset_peak()
         t0 = time.monotonic()
         for r in requests:
             self.scheduler.submit(r)
@@ -250,6 +376,10 @@ class ServingEngine:
         stats.prefills = self.totals.prefills - base[1]
         stats.decode_steps = self.totals.decode_steps - base[2]
         stats.occupancy_sum = self.totals.occupancy_sum - base[3]
+        stats.prefill_compiles = self.prefill_compiles - base[4]
+        if self.pool is not None:
+            stats.kv_blocks_peak = self.pool.peak_used
+            stats.kv_pool_util = self.pool.utilization
         stats.fill_request_metrics(requests)
         return stats
 
@@ -299,6 +429,7 @@ class ServingEngine:
         for r in requests:
             self._check_fits(r)
         stats = ServeStats(requests=len(requests))
+        compiles0 = self.prefill_compiles
         t0 = time.monotonic()
         buckets: dict[int, list[Request]] = {}
         for r in requests:
@@ -307,6 +438,7 @@ class ServingEngine:
             for w0 in range(0, len(bucket), self.slots):
                 wave = bucket[w0:w0 + self.slots]
                 prompts = np.stack([r.prompt for r in wave])
+                self._prefill_shapes.add(prompts.shape)
                 last, state = self._prefill(self.params,
                                             self._batch_for(prompts))
                 stats.prefills += 1
@@ -334,6 +466,7 @@ class ServingEngine:
                     stats.decode_steps += 1
                     stats.occupancy_sum += active.sum() / self.slots
         stats.wall_s = time.monotonic() - t0
+        stats.prefill_compiles = self.prefill_compiles - compiles0
         stats.fill_request_metrics(requests)
         return stats
 
@@ -399,7 +532,8 @@ class MultiReplicaEngine:
         window = (group_size * len(self.replicas) if group_size
                   else 2 * total_slots)
         base = [(e.totals.prefills, e.totals.decode_steps,
-                 e.totals.occupancy_sum) for e in self.replicas]
+                 e.totals.occupancy_sum, e.prefill_compiles)
+                for e in self.replicas]
         t0 = time.monotonic()
         with OffloadEngine(self.targets, scheduler="least_loaded",
                            deadline_s=self.deadline_s) as eng:
@@ -413,9 +547,10 @@ class MultiReplicaEngine:
             orig.first_token_at = done.first_token_at
             orig.finished_at = done.finished_at
             stats.tokens += len(done.output)
-        for e, (p0, d0, o0) in zip(self.replicas, base):
+        for e, (p0, d0, o0, c0) in zip(self.replicas, base):
             stats.prefills += e.totals.prefills - p0
             stats.decode_steps += e.totals.decode_steps - d0
             stats.occupancy_sum += e.totals.occupancy_sum - o0
+            stats.prefill_compiles += e.prefill_compiles - c0
         stats.fill_request_metrics(requests)
         return stats

@@ -1,0 +1,150 @@
+"""Paged KV-cache block pool: fixed-size blocks, per-request block tables.
+
+Instead of reserving a worst-case ``(L, B, max_len, K, D)`` cache slice per
+decode slot, the engine owns one global pool of ``num_blocks`` fixed-size KV
+blocks (``block_size`` tokens each).  Requests hold *block tables* — lists of
+physical block ids in logical order — and the scheduler admits a request when
+enough blocks are *free*, not when a worst-case slot is free.  Block 0 is a
+reserved trash block: retired decode slots keep writing their (discarded)
+rows there, so freeing a finished request's blocks can never be corrupted by
+the in-flight batched decode step.
+
+Lifecycle per request:
+  * admission: ``reserve(n)`` the worst-case block count (prompt + budget)
+  * prefill:   ``alloc_reserved`` the prompt's blocks
+  * decode:    ``alloc_reserved(1)`` each time generation crosses a block
+  * release:   ``free`` the allocated ids + ``unreserve`` the unused tail
+
+``CapacityError`` is the shared typed error for requests that can *never*
+fit (engine ``_check_fits`` and scheduler admission both raise it), as
+opposed to transient fullness, which just defers admission.
+"""
+from __future__ import annotations
+
+import threading
+
+
+class CapacityError(ValueError):
+    """Request exceeds KV capacity (per-request table or whole pool)."""
+
+
+class KVBlockPool:
+    """Allocator for a global pool of fixed-size KV-cache blocks.
+
+    ``num_blocks`` counts *usable* blocks; the backing device arrays have
+    ``total_blocks = num_blocks + 1`` rows because id 0 is the trash block
+    and is never handed out.
+    """
+
+    TRASH = 0
+
+    def __init__(self, num_blocks: int, block_size: int = 16):
+        assert num_blocks >= 1 and block_size >= 1
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._lock = threading.Lock()
+        # LIFO free stack of usable ids (1..num_blocks); 0 is trash.
+        self._free: list[int] = list(range(num_blocks, 0, -1))
+        self._allocated: set[int] = set()
+        self._reserved = 0
+        self.peak_used = 0
+
+    # -- sizing ----------------------------------------------------------------
+
+    @property
+    def total_blocks(self) -> int:
+        """Rows in the backing pool arrays (usable blocks + trash block)."""
+        return self.num_blocks + 1
+
+    @property
+    def capacity(self) -> int:
+        return self.num_blocks
+
+    def blocks_for(self, tokens: int) -> int:
+        """Blocks needed to hold ``tokens`` KV rows."""
+        return max(0, -(-tokens // self.block_size))
+
+    def validate_rows(self, rows: int, rid=None) -> int:
+        """The shared admission predicate: blocks for ``rows`` KV rows, or
+        :class:`CapacityError` if they exceed the whole pool — engine
+        ``_check_fits`` and scheduler ``submit`` both call this, so the
+        check (and its message) cannot drift between the two."""
+        blocks = self.blocks_for(rows)
+        if blocks > self.capacity:
+            raise CapacityError(
+                f"request {rid}: {rows} KV rows need {blocks} blocks, "
+                f"exceeding pool KV capacity of {self.capacity} blocks "
+                f"({self.capacity * self.block_size} rows)")
+        return blocks
+
+    # -- accounting ------------------------------------------------------------
+
+    @property
+    def used_blocks(self) -> int:
+        with self._lock:
+            return len(self._allocated)
+
+    @property
+    def free_blocks(self) -> int:
+        """Blocks neither allocated nor promised to an admitted request."""
+        with self._lock:
+            return len(self._free) - self._reserved
+
+    @property
+    def reserved_blocks(self) -> int:
+        with self._lock:
+            return self._reserved
+
+    @property
+    def utilization(self) -> float:
+        """Peak allocated blocks as a fraction of capacity."""
+        return self.peak_used / self.num_blocks
+
+    def reset_peak(self) -> None:
+        with self._lock:
+            self.peak_used = len(self._allocated)
+
+    # -- lifecycle -------------------------------------------------------------
+
+    def reserve(self, n: int) -> bool:
+        """Promise ``n`` blocks to a request being admitted.
+
+        Returns False when the pool is transiently too full (caller defers
+        admission); raises :class:`CapacityError` when ``n`` exceeds the
+        whole pool, i.e. the request could never run.
+        """
+        if n > self.num_blocks:
+            raise CapacityError(
+                f"request needs {n} KV blocks but the pool only has "
+                f"{self.num_blocks} (block_size={self.block_size})")
+        with self._lock:
+            if len(self._free) - self._reserved < n:
+                return False
+            self._reserved += n
+            return True
+
+    def unreserve(self, n: int) -> None:
+        with self._lock:
+            assert self._reserved >= n, (self._reserved, n)
+            self._reserved -= n
+
+    def alloc_reserved(self, n: int) -> list[int]:
+        """Materialize ``n`` previously reserved blocks as physical ids."""
+        with self._lock:
+            assert self._reserved >= n, \
+                f"alloc of {n} blocks exceeds reservation {self._reserved}"
+            assert len(self._free) >= n     # invariant: reserved <= free
+            ids = [self._free.pop() for _ in range(n)]
+            self._allocated.update(ids)
+            self._reserved -= n
+            self.peak_used = max(self.peak_used, len(self._allocated))
+            return ids
+
+    def free(self, ids: list[int]) -> None:
+        """Return blocks to the pool; freeing an unallocated id raises."""
+        with self._lock:
+            for b in ids:
+                if b not in self._allocated:
+                    raise ValueError(f"double free of KV block {b}")
+                self._allocated.remove(b)
+                self._free.append(b)

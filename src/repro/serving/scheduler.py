@@ -12,6 +12,12 @@ admission deque feeding them, and thread-safe submit so a replica pull-loop
 slot's request finishes, the next queued request is admitted into that slot
 — no lock-step waves, no length bucketing.
 
+With a :class:`~repro.serving.kv_pool.KVBlockPool` attached, admission is
+*block-aware*: a request enters a slot only when the pool can reserve its
+worst-case block count (prompt + decode budget), and release returns its
+blocks — so admission is bounded by live KV rows, not by worst-case
+``max_len`` per slot.
+
 The scheduler is pure bookkeeping: the :class:`~repro.serving.engine.
 ServingEngine` executor owns params, KV state, and the jitted decode step.
 """
@@ -26,6 +32,7 @@ from typing import Callable
 
 import numpy as np
 
+from repro.serving.kv_pool import KVBlockPool
 from repro.serving.sampler import Sampler, greedy
 
 
@@ -49,6 +56,15 @@ class Request:
     first_token_at: float | None = None
     finished_at: float | None = None
     on_finish: Callable[["Request"], None] | None = None
+    # paged-KV bookkeeping (engine/scheduler-owned; empty when contiguous)
+    block_ids: list = field(default_factory=list)
+    blocks_reserved: int = 0
+
+    @property
+    def kv_rows(self) -> int:
+        """Worst-case KV rows written: every position except the final
+        sampled token (which is never fed back)."""
+        return len(self.prompt) + self.max_new_tokens - 1
 
     @property
     def ttft_s(self) -> float | None:
@@ -82,9 +98,10 @@ class ContinuousScheduler:
     `admit`/`active`/`release`.
     """
 
-    def __init__(self, num_slots: int):
+    def __init__(self, num_slots: int, pool: KVBlockPool | None = None):
         assert num_slots >= 1
         self.num_slots = num_slots
+        self.pool = pool
         self.slots: list[Request | None] = [None] * num_slots
         self._queue: deque[Request] = deque()
         self._lock = threading.RLock()
@@ -93,6 +110,8 @@ class ContinuousScheduler:
     # -- producer side ---------------------------------------------------------
 
     def submit(self, req: Request) -> None:
+        if self.pool is not None:
+            self.pool.validate_rows(req.kv_rows, req.rid)
         with self._work:
             req.state = RequestState.QUEUED
             self._queue.append(req)
@@ -101,14 +120,25 @@ class ContinuousScheduler:
     # -- executor side ---------------------------------------------------------
 
     def admit(self) -> list[tuple[int, Request]]:
-        """Fill every free slot from the admission queue; the returned
+        """Fill free slots from the admission queue; the returned
         (slot, request) pairs are in PREFILL state and need their prompt
-        prefilled into the batched KV state."""
+        prefilled into the batched KV state.
+
+        Block-aware mode: a request is admitted only when the pool can
+        reserve its worst-case block count; FIFO order is preserved, so a
+        too-large head-of-queue request waits for blocks to free rather
+        than being overtaken."""
         out: list[tuple[int, Request]] = []
         with self._lock:
             for i in range(self.num_slots):
                 if self.slots[i] is None and self._queue:
-                    req = self._queue.popleft()
+                    req = self._queue[0]
+                    if self.pool is not None:
+                        need = self.pool.blocks_for(req.kv_rows)
+                        if not self.pool.reserve(need):
+                            break               # wait for blocks to free
+                        req.blocks_reserved = need
+                    self._queue.popleft()
                     req.state = RequestState.PREFILL
                     self.slots[i] = req
                     out.append((i, req))
@@ -119,12 +149,21 @@ class ContinuousScheduler:
             return [(i, r) for i, r in enumerate(self.slots) if r is not None]
 
     def release(self, slot: int) -> Request:
-        """Free a slot whose request finished (state already DONE)."""
+        """Free a slot whose request finished (state already DONE); returns
+        the request's KV blocks (and any unallocated reservation tail) to
+        the pool."""
         with self._lock:
             req = self.slots[slot]
             assert req is not None, f"release of empty slot {slot}"
             self.slots[slot] = None
-            return req
+        if self.pool is not None:
+            if req.block_ids:
+                self.pool.free(req.block_ids)
+            if req.blocks_reserved > len(req.block_ids):
+                self.pool.unreserve(req.blocks_reserved - len(req.block_ids))
+            req.block_ids = []
+            req.blocks_reserved = 0
+        return req
 
     # -- introspection ---------------------------------------------------------
 

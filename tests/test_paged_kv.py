@@ -1,0 +1,323 @@
+"""Paged KV cache: block pool lifecycle, paged-vs-contiguous attention
+equivalence (ragged lengths, int8 pools, Pallas interpret), bucketed
+prefill, block-aware admission, and end-to-end engine agreement."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry as R
+from repro.kernels.decode_attention.kernel import \
+    paged_decode_attention as pallas_paged
+from repro.kernels.decode_attention.ref import (decode_attention_ref,
+                                                paged_decode_attention_ref)
+from repro.models import transformer as T
+from repro.models.registry import fns_for
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.kv_pool import CapacityError, KVBlockPool
+from repro.serving.sampler import greedy
+
+
+def _smoke():
+    cfg = R.smoke("qwen2.5-3b")
+    params = fns_for(cfg).init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# -- block pool lifecycle ------------------------------------------------------
+
+def test_pool_alloc_free_cycle():
+    pool = KVBlockPool(4, block_size=16)
+    assert pool.capacity == 4 and pool.total_blocks == 5
+    assert pool.blocks_for(1) == 1 and pool.blocks_for(16) == 1
+    assert pool.blocks_for(17) == 2 and pool.blocks_for(0) == 0
+    assert pool.reserve(3)
+    ids = pool.alloc_reserved(2)
+    assert len(ids) == 2 and KVBlockPool.TRASH not in ids
+    assert pool.used_blocks == 2 and pool.reserved_blocks == 1
+    assert pool.free_blocks == 1                 # 4 - 2 allocated - 1 promised
+    assert not pool.reserve(2)                   # transient: defer, no raise
+    pool.free(ids)
+    pool.unreserve(1)
+    assert pool.used_blocks == 0 and pool.free_blocks == 4
+    assert pool.peak_used == 2
+    pool.reset_peak()
+    assert pool.peak_used == 0
+
+
+def test_pool_double_free_raises():
+    pool = KVBlockPool(2)
+    pool.reserve(1)
+    [b] = pool.alloc_reserved(1)
+    pool.free([b])
+    with pytest.raises(ValueError, match="double free"):
+        pool.free([b])
+    with pytest.raises(ValueError, match="double free"):
+        pool.free([KVBlockPool.TRASH])           # trash is never allocated
+
+
+def test_pool_capacity_error_is_typed_and_valueerror():
+    pool = KVBlockPool(2, block_size=16)
+    with pytest.raises(CapacityError):
+        pool.reserve(3)
+    assert issubclass(CapacityError, ValueError)
+
+
+# -- paged attention vs dense oracle ------------------------------------------
+
+def _ragged_case(seed, B=3, mb=4, bs=8, K=2, H=4, D=16):
+    """Random pool + disjoint tables + ragged lengths, and the dense
+    contiguous gather the paged read must match."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    N = 1 + B * mb
+    q = jax.random.normal(ks[0], (B, H, D))
+    k_pool = jax.random.normal(ks[1], (N, bs, K, D))
+    v_pool = jax.random.normal(ks[2], (N, bs, K, D))
+    rng = np.random.default_rng(seed)
+    tables = 1 + rng.permutation(B * mb).reshape(B, mb).astype(np.int32)
+    lengths = rng.integers(1, mb * bs + 1, size=B).astype(np.int32)
+    return q, k_pool, v_pool, jnp.asarray(tables), jnp.asarray(lengths)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_paged_ref_matches_dense_ref_ragged(seed):
+    q, kp, vp, tables, lengths = _ragged_case(seed)
+    B, mb, bs = q.shape[0], tables.shape[1], kp.shape[1]
+    kd = kp[tables].reshape(B, mb * bs, *kp.shape[2:])
+    vd = vp[tables].reshape(B, mb * bs, *vp.shape[2:])
+    out = paged_decode_attention_ref(q, kp, vp, tables, lengths)
+    ref = decode_attention_ref(q, kd, vd, lengths)
+    np.testing.assert_allclose(out, ref, atol=1e-6)
+
+
+@pytest.mark.parametrize("seed", range(2))
+def test_paged_pallas_matches_ref_ragged(seed):
+    q, kp, vp, tables, lengths = _ragged_case(seed)
+    out = pallas_paged(q, kp, vp, tables, lengths, interpret=True)
+    ref = paged_decode_attention_ref(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+def test_paged_pallas_int8_matches_ref():
+    q, kp, vp, tables, lengths = _ragged_case(7)
+    kq, ks = T.quantize_kv(kp)
+    vq, vs = T.quantize_kv(vp)
+    out = pallas_paged(q, kq, vq, tables, lengths, k_scale=ks, v_scale=vs,
+                       interpret=True)
+    ref = paged_decode_attention_ref(q, kq, vq, tables, lengths,
+                                     k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+    # and the quantized path stays close to the fp path (absmax int8)
+    fp = paged_decode_attention_ref(q, kp, vp, tables, lengths)
+    assert float(jnp.abs(ref - fp).max()) < 0.05
+
+
+def test_property_paged_matches_dense_over_ragged_lengths():
+    """Property: for any block size / table width / ragged lengths / cache
+    dtype, paged attention equals the dense gather (hypothesis-driven;
+    module stays collectable without hypothesis)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, strategies as st
+
+    @given(st.integers(0, 10**6), st.sampled_from([4, 8, 16]),
+           st.integers(1, 4), st.booleans())
+    def prop(seed, bs, mb, quant):
+        rng = np.random.default_rng(seed)
+        B, K, H, D = 2, 2, 4, 8
+        N = 1 + B * mb
+        ks = jax.random.split(jax.random.PRNGKey(seed % (2**31)), 3)
+        q = jax.random.normal(ks[0], (B, H, D))
+        kp = jax.random.normal(ks[1], (N, bs, K, D))
+        vp = jax.random.normal(ks[2], (N, bs, K, D))
+        tables = jnp.asarray(
+            1 + rng.permutation(B * mb).reshape(B, mb).astype(np.int32))
+        lengths = jnp.asarray(
+            rng.integers(1, mb * bs + 1, size=B).astype(np.int32))
+        scales = {}
+        if quant:
+            kp, ksc = T.quantize_kv(kp)
+            vp, vsc = T.quantize_kv(vp)
+            scales = dict(k_scale=ksc, v_scale=vsc)
+        out = paged_decode_attention_ref(q, kp, vp, tables, lengths,
+                                         **scales)
+        kd = kp[tables].reshape(B, mb * bs, K, D)
+        vd = vp[tables].reshape(B, mb * bs, K, D)
+        if quant:
+            kd = (kd.astype(jnp.float32)
+                  * scales["k_scale"][tables].reshape(B, mb * bs, K)[
+                      ..., None]).astype(q.dtype)
+            vd = (vd.astype(jnp.float32)
+                  * scales["v_scale"][tables].reshape(B, mb * bs, K)[
+                      ..., None]).astype(q.dtype)
+        ref = decode_attention_ref(q, kd, vd, lengths)
+        np.testing.assert_allclose(out, ref, atol=2e-6)
+
+    prop()
+
+
+def test_paged_trash_block_rows_never_attended():
+    """Garbage in dead table entries / the trash block must not leak into
+    the output of live rows."""
+    q, kp, vp, tables, lengths = _ragged_case(3)
+    ref = paged_decode_attention_ref(q, kp, vp, tables, lengths)
+    poisoned_k = kp.at[0].set(1e4)          # trash block full of garbage
+    poisoned_v = vp.at[0].set(-1e4)
+    out = paged_decode_attention_ref(q, poisoned_k, poisoned_v, tables,
+                                     lengths)
+    np.testing.assert_allclose(out, ref, atol=1e-6)
+
+
+# -- paged decode_step vs dense decode_step (model level, incl. int8) ---------
+
+def _paged_state_from_prefill(cfg, st: T.KVCache, bs, mb, dtype):
+    """Scatter a dense batch-B prefill cache into a paged cache with
+    ``mb``-wide block tables (each sequence gets its own contiguous run of
+    blocks; entries past the prefill hold spare blocks for decode)."""
+    L, B, S, K, D = st.k.shape
+    assert S % bs == 0
+    nb = S // bs
+    assert mb >= nb
+    cache = T.make_paged_cache(cfg, 1 + B * mb, bs, B, mb, dtype)
+    tables = np.zeros((B, mb), np.int32)
+    nxt = 1
+    for b in range(B):
+        ids = np.arange(nxt, nxt + mb, dtype=np.int32)
+        nxt += mb
+        tables[b] = ids
+        one = jax.tree_util.tree_map(lambda c: c[:, b:b + 1]
+                                     if c.ndim > 1 else c, st)
+        cache = T.scatter_prefill_blocks(cache, one, jnp.asarray(ids[:nb]))
+    return cache._replace(block_tables=jnp.asarray(tables),
+                          length=st.length)
+
+
+@pytest.mark.parametrize("cache_dtype", ["bfloat16", "int8"])
+def test_paged_decode_step_matches_dense(cache_dtype):
+    cfg, params = _smoke()
+    fns = fns_for(cfg)
+    B, S, extra, bs = 2, 16, 3, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + extra), 0,
+                              cfg.vocab_size)
+    _, st = fns.prefill(cfg, params, {"tokens": toks[:, :S]},
+                        max_len=S + extra)
+    # dense reference cache in the target dtype
+    if cache_dtype == "int8":
+        kq, ks = T.quantize_kv(st.k)
+        vq, vs = T.quantize_kv(st.v)
+        dense = T.QuantKVCache(k=kq, v=vq, k_scale=ks, v_scale=vs,
+                               length=st.length)
+    else:
+        dense = st
+    # paged cache scatters the S prefill rows; the grown tail rows of the
+    # dense cache are zeros, so slicing them off loses nothing
+    st_s = T.KVCache(k=st.k[:, :, :S], v=st.v[:, :, :S], length=st.length)
+    paged = _paged_state_from_prefill(cfg, st_s, bs, S // bs + 1,
+                                      cache_dtype)
+    for t in range(S, S + extra):
+        lg_d, dense = fns.decode(cfg, params, toks[:, t:t + 1], dense)
+        lg_p, paged = fns.decode(cfg, params, toks[:, t:t + 1], paged)
+        np.testing.assert_allclose(np.asarray(lg_p), np.asarray(lg_d),
+                                   atol=1e-4)
+    assert int(paged.length[0]) == S + extra
+
+
+# -- bucketed prefill ----------------------------------------------------------
+
+def test_bucketed_prefill_logits_match_exact():
+    """Right-padding the prompt to a bucket and reading logits at
+    last_pos must equal the unpadded prefill (causality)."""
+    cfg, params = _smoke()
+    fns = fns_for(cfg)
+    P, bucket = 9, 16
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, P), 0,
+                              cfg.vocab_size)
+    lg_ref, _ = fns.prefill(cfg, params, {"tokens": toks})
+    padded = jnp.zeros((1, bucket), jnp.int32).at[:, :P].set(toks)
+    lg_b, st = fns.prefill(cfg, params,
+                           {"tokens": padded,
+                            "last_pos": jnp.asarray([P - 1])})
+    np.testing.assert_allclose(np.asarray(lg_b), np.asarray(lg_ref),
+                               atol=1e-5)
+    assert st.k.shape[2] == bucket            # cache sized to the bucket
+
+
+# -- engine: equivalence, leak-freedom, capacity, admission -------------------
+
+def test_paged_engine_matches_contiguous_and_frees_blocks():
+    cfg, params = _smoke()
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (9, 5, 13, 7, 11)]
+    mk = lambda: [Request(i, p, max_new_tokens=3 + (i % 3),  # noqa: E731
+                          sampler=greedy())
+                  for i, p in enumerate(prompts)]
+    paged = ServingEngine(cfg, params, max_len=24, batch_slots=2, paged=True)
+    contig = ServingEngine(cfg, params, max_len=24, batch_slots=2,
+                           paged=False)
+    rp, rc = mk(), mk()
+    sp = paged.serve(rp)
+    contig.serve(rc)
+    assert [r.output for r in rp] == [r.output for r in rc]
+    # no leak: every block and reservation returned after serve()
+    assert paged.pool.used_blocks == 0
+    assert paged.pool.reserved_blocks == 0
+    assert sp.kv_blocks_peak >= 1
+    assert 0.0 < sp.kv_pool_util <= 1.0
+    # bucketing: 5 distinct prompt lengths but only one 16-bucket compile
+    assert sp.prefill_compiles == 1
+
+
+def test_paged_engine_small_pool_still_serves_all():
+    """A pool sized well below slots x max_len defers admission instead of
+    failing, and every request still completes."""
+    cfg, params = _smoke()
+    rng = np.random.default_rng(6)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size, size=6)
+                    .astype(np.int32),
+                    max_new_tokens=2 if i % 2 else 10, sampler=greedy())
+            for i in range(6)]
+    # worst case would be 4 slots x blocks_for(24) = 8 blocks; give it 2
+    eng = ServingEngine(cfg, params, max_len=24, batch_slots=4, paged=True,
+                        block_size=8, pool_blocks=2)
+    stats = eng.serve(reqs)
+    assert [len(r.output) for r in reqs] == [10, 2, 10, 2, 10, 2]
+    assert stats.kv_blocks_peak <= 2
+    assert eng.pool.used_blocks == 0 and eng.pool.reserved_blocks == 0
+
+
+def test_capacity_error_paths():
+    cfg, params = _smoke()
+    eng = ServingEngine(cfg, params, max_len=32, batch_slots=2, paged=True,
+                        block_size=8, pool_blocks=2)   # 16 KV rows total
+    too_big = Request(0, np.arange(8, dtype=np.int32), max_new_tokens=12)
+    with pytest.raises(CapacityError, match="KV"):
+        eng.serve([too_big])                 # pool capacity, not max_len
+    with pytest.raises(CapacityError):
+        eng.submit(too_big)
+    # the scheduler's own admission guard raises the same typed error
+    with pytest.raises(CapacityError):
+        eng.scheduler.submit(too_big)
+    # a fitting request still serves
+    ok = Request(1, np.arange(8, dtype=np.int32), max_new_tokens=6)
+    assert eng.serve([ok]).tokens == 6
+
+
+def test_paged_engine_int8_cache_top1_stable():
+    """End-to-end paged serving with the int8 pool: greedy outputs match
+    the bf16 paged engine on >= all-but-one token (paper's criterion)."""
+    cfg, params = _smoke()
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(0, cfg.vocab_size, size=10).astype(np.int32)
+               for _ in range(2)]
+    mk = lambda: [Request(i, p, max_new_tokens=4, sampler=greedy())  # noqa
+                  for i, p in enumerate(prompts)]
+    bf = ServingEngine(cfg, params, max_len=16, batch_slots=2, paged=True)
+    q8 = ServingEngine(cfg, params, max_len=16, batch_slots=2, paged=True,
+                       cache_dtype="int8")
+    rb, rq = mk(), mk()
+    bf.serve(rb)
+    q8.serve(rq)
+    agree = sum(int(a == b) for ra, rb_ in zip(rb, rq)
+                for a, b in zip(ra.output, rb_.output))
+    assert agree >= 2 * 4 - 1
+    assert q8._state.k.dtype == jnp.int8
