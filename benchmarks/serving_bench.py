@@ -20,10 +20,21 @@ are comparable across PRs:
   3. `arrival` — a seeded arrival process submitted against a running
      engine (service mode): requests admitted mid-stream, the scenario a
      batch-offline API cannot express.
+  4. `priority_fifo` / `priority_slo` — the same pressure workload (long
+     low-priority decodes wedging the pool, short high-priority requests
+     arriving mid-stream) served without and with SLO-aware scheduling;
+     `priority_hipri_ttft_p99_speedup` (high-priority p99 TTFT, FIFO /
+     SLO) and `priority_tokens_cost_frac` (aggregate tokens/s given up to
+     preemption recompute) are the headline pair.
+  5. `shared_prefix` / `shared_prefix_nosharing` — N requests over one
+     long common prompt prefix with refcounted prefix sharing on and off;
+     with sharing the pool peaks below N x prefix-blocks
+     (`shared_prefix_nominal_prefix_blocks`) because every request's
+     leading table entries point at one shared copy.
 
 Each scenario reports tokens/s, TTFT p50/p99 (ms), mean TPOT (ms), slot
-occupancy, prefill jit compiles, and (paged) peak KV-pool blocks and
-utilization.
+occupancy, prefill jit compiles, preemptions, prefix-shared table
+entries, SLO miss rate, and (paged) peak KV-pool blocks and utilization.
 """
 from __future__ import annotations
 
@@ -63,6 +74,86 @@ def _mixed_requests(cfg, n=16, seed=0):
             for i in range(n)]
 
 
+def _shared_prefix_requests(cfg, n=6, prefix_blocks=2, block=16, seed=4):
+    """N prompts sharing a ``prefix_blocks``-block common prefix with
+    distinct 8-token tails: with refcounted prefix sharing the pool holds
+    ONE copy of the prefix instead of N."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size,
+                          size=prefix_blocks * block).astype(np.int32)
+    return [Request(i, np.concatenate(
+                    [prefix, rng.integers(0, cfg.vocab_size, size=8)
+                     .astype(np.int32)]),
+                    max_new_tokens=4, sampler=greedy())
+            for i in range(n)]
+
+
+def _run_pressure(cfg, params, *, slo_aware: bool, repeats: int = 3):
+    """Queue-pressure A/B arm: 8 long low-priority decodes wedge every
+    slot and pool block; 4 short requests arrive mid-stream.
+    ``slo_aware=True`` marks the late arrivals priority-2 with a TTFT SLO
+    (they preempt); ``False`` leaves everything priority-0 (the old FIFO
+    behaviour: late arrivals wait behind every queued long decode).
+
+    The workload repeats ``repeats`` times on the same warm engine and the
+    median-wall run is reported: this single-core host's wall clock is
+    noisy enough (~20%) to swamp the few-percent preemption-recompute
+    cost the A/B is trying to measure."""
+    slots, block, low_new = 4, 16, 192
+    rows = 8 + low_new - 1
+    pool = slots * -(-rows // block)     # lows wedge the pool exactly
+    eng = ServingEngine(cfg, params, max_len=8 + low_new + 1,
+                        batch_slots=slots, paged=True, block_size=block,
+                        pool_blocks=pool)
+    # warm the (slots, 1) decode signature and the 16..128 prefill buckets
+    # this run can hit (preemption re-prefills prompt + generated tokens)
+    eng.serve(_requests(cfg, slots, prompt_len=8, new_tokens=2, seed=99))
+    for n, plen in ((2, 20), (2, 33), (2, 65)):
+        eng.serve(_requests(cfg, n, prompt_len=plen, new_tokens=2,
+                            seed=90 + plen))
+    runs = []
+    for rep in range(repeats):
+        rng = np.random.default_rng(3 + rep)
+        lows = [Request(i, rng.integers(0, cfg.vocab_size, size=8)
+                        .astype(np.int32), max_new_tokens=low_new,
+                        sampler=greedy())
+                for i in range(8)]
+        highs = [Request(100 + i, rng.integers(0, cfg.vocab_size, size=8)
+                         .astype(np.int32), max_new_tokens=4,
+                         sampler=greedy(),
+                         priority=2 if slo_aware else 0,
+                         slo_ttft_s=0.5 if slo_aware else None)
+                 for i in range(4)]
+        done = threading.Event()
+        remaining = [len(lows) + len(highs)]
+
+        def fin(_, remaining=remaining, done=done):
+            remaining[0] -= 1
+            if remaining[0] == 0:
+                done.set()
+
+        base = eng.begin_window()
+        eng.start()
+        t0 = time.monotonic()
+        for r in lows:
+            eng.submit(r, on_finish=fin)
+        time.sleep(0.1)              # lows now hold every pool block
+        for r in highs:
+            eng.submit(r, on_finish=fin)
+        done.wait(timeout=180)
+        wall = time.monotonic() - t0
+        eng.stop()
+        stats = eng.collect_window(base, lows + highs, wall)
+        # censor a never-served request's TTFT at the window wall so a
+        # timeout degrades the number instead of crashing the percentile
+        ttfts = [r.ttft_s if r.ttft_s is not None else wall for r in highs]
+        p99_ms = round(float(np.percentile(ttfts, 99)) * 1e3, 2)
+        runs.append((wall, stats, p99_ms))
+    runs.sort(key=lambda r: r[0])
+    _, stats, p99_ms = runs[len(runs) // 2]
+    return stats, p99_ms
+
+
 def _summary(stats: ServeStats) -> dict:
     ms = lambda v: round(v * 1e3, 2) if v is not None else None  # noqa: E731
     return {
@@ -75,6 +166,10 @@ def _summary(stats: ServeStats) -> dict:
         "slot_occupancy": round(stats.slot_occupancy, 3),
         "prefills": stats.prefills, "decode_steps": stats.decode_steps,
         "prefill_compiles": stats.prefill_compiles,
+        "preemptions": stats.preemptions,
+        "prefix_shared_blocks": stats.prefix_shared_blocks,
+        "slo_miss_rate": (round(stats.slo_miss_rate, 3)
+                          if stats.slo_miss_rate is not None else None),
         "kv_blocks_peak": stats.kv_blocks_peak,
         "kv_pool_util": (round(stats.kv_pool_util, 3)
                          if stats.kv_pool_util is not None else None),
@@ -179,34 +274,61 @@ def run(verbose: bool = True) -> dict:
         if remaining[0] == 0:
             done.set()
 
-    base = (eng2.totals.decode_steps, eng2.totals.occupancy_sum,
-            eng2.prefill_compiles)
-    if eng2.pool is not None:
-        eng2.pool.reset_peak()
+    base = eng2.begin_window()
     eng2.start()
     t0 = time.monotonic()
     for r, gap in zip(reqs, gaps):
         time.sleep(gap)
-        r.submitted_at = time.monotonic()
+        # scheduler.submit stamps submitted_at at true submission time
         eng2.submit(r, on_finish=fin)
     done.wait(timeout=120)
     wall = time.monotonic() - t0
     eng2.stop()
-    stats = ServeStats(requests=len(reqs), wall_s=wall,
-                       tokens=sum(len(r.output) for r in reqs))
-    stats.decode_steps = eng2.totals.decode_steps - base[0]
-    stats.occupancy_sum = eng2.totals.occupancy_sum - base[1]
-    stats.prefill_compiles = eng2.prefill_compiles - base[2]
-    if eng2.pool is not None:
-        stats.kv_blocks_peak = eng2.pool.peak_used
-        stats.kv_pool_util = eng2.pool.utilization
-    stats.fill_request_metrics(reqs)
-    out["arrival"] = _summary(stats)
+    out["arrival"] = _summary(eng2.collect_window(base, reqs, wall))
     if verbose:
         s = out["arrival"]
         print(f"arrival: {s['tokens_per_s']:.1f} tok/s  "
               f"ttft p50={s['ttft_p50_ms']}ms p99={s['ttft_p99_ms']}ms  "
               f"occ={s['slot_occupancy']}")
+
+    # -- scenario 4: priority under pressure (SLO-aware vs FIFO) -----------
+    for key, slo_aware in (("priority_fifo", False), ("priority_slo", True)):
+        stats, hipri_p99_ms = _run_pressure(cfg, params, slo_aware=slo_aware)
+        s = _summary(stats)
+        s["hipri_ttft_p99_ms"] = hipri_p99_ms
+        out[key] = s
+    out["priority_hipri_ttft_p99_speedup"] = round(
+        out["priority_fifo"]["hipri_ttft_p99_ms"]
+        / out["priority_slo"]["hipri_ttft_p99_ms"], 3)
+    out["priority_tokens_cost_frac"] = round(
+        1.0 - (out["priority_slo"]["tokens_per_s"]
+               / out["priority_fifo"]["tokens_per_s"]), 3)
+    if verbose:
+        print(f"priority: hi-pri ttft p99 "
+              f"{out['priority_fifo']['hipri_ttft_p99_ms']}ms (fifo) -> "
+              f"{out['priority_slo']['hipri_ttft_p99_ms']}ms (slo), "
+              f"{out['priority_hipri_ttft_p99_speedup']:.1f}x better at "
+              f"{out['priority_tokens_cost_frac']:.1%} tok/s cost "
+              f"({out['priority_slo']['preemptions']} preemptions, "
+              f"slo miss {out['priority_slo']['slo_miss_rate']})")
+
+    # -- scenario 5: shared prompt prefix (refcounted blocks) --------------
+    n_share, prefix_blocks = 6, 2
+    for key, sharing in (("shared_prefix", True),
+                         ("shared_prefix_nosharing", False)):
+        eng = ServingEngine(cfg, params, max_len=2 * 16 + 8 + 4 + 1,
+                            batch_slots=n_share, prefix_sharing=sharing)
+        _warmup(eng, cfg)
+        out[key] = _summary(eng.serve(_shared_prefix_requests(
+            cfg, n=n_share, prefix_blocks=prefix_blocks)))
+    out["shared_prefix_nominal_prefix_blocks"] = n_share * prefix_blocks
+    if verbose:
+        s = out["shared_prefix"]
+        print(f"shared_prefix: peak {s['kv_blocks_peak']} blocks "
+              f"(unshared {out['shared_prefix_nosharing']['kv_blocks_peak']},"
+              f" nominal prefix demand "
+              f"{out['shared_prefix_nominal_prefix_blocks']}) — "
+              f"{s['prefix_shared_blocks']} table entries shared")
 
     save_artifact("serving_bench", out)
     return out

@@ -6,8 +6,11 @@ refilled by a chunked prefill of the next queued request (QUEUED -> PREFILL
 -> DECODE -> DONE lifecycle in `repro.serving.scheduler`).  With more than
 one replica, requests are dispatched individually to the least-loaded
 replica through `repro.core.offload`'s split-phase protocol and collected
-out of order, so one slow request never blocks the rest.  Stats include
-TTFT p50/p99, TPOT, and slot occupancy.
+out of order, so one slow request never blocks the rest.  Admission is
+SLO-aware: every third request here carries `priority=1` and a TTFT SLO,
+so it is admitted ahead of the backlog (and, under KV-block pressure, may
+preempt a lower-priority decode).  Stats include TTFT p50/p99, TPOT, slot
+occupancy, SLO miss rate, and (paged) KV-pool peaks.
 
   PYTHONPATH=src python examples/serve_lm.py [--replicas 2]
 """
@@ -39,7 +42,10 @@ def main():
                     rng.integers(0, cfg.vocab_size, size=12).astype(np.int32),
                     max_new_tokens=3 if i % 3 else 9,
                     sampler=greedy() if i % 2 else temperature(0.7, top_k=20,
-                                                               seed=i))
+                                                               seed=i),
+                    # interactive tier: jumps the queue, 2s TTFT target
+                    priority=1 if i % 3 == 0 else 0,
+                    slo_ttft_s=2.0 if i % 3 == 0 else None)
             for i in range(args.requests)]
 
     replicas = [ServingEngine(cfg, params, max_len=24, batch_slots=4)
@@ -51,6 +57,10 @@ def main():
     print(f"{stats.requests} requests -> {stats.tokens} tokens in "
           f"{stats.wall_s:.2f}s  ({stats.tokens_per_s:.1f} tok/s, "
           f"slot occupancy {stats.slot_occupancy:.2f})")
+    if stats.slo_miss_rate is not None:
+        print(f"slo miss rate {stats.slo_miss_rate:.2f}  "
+              f"preemptions {stats.preemptions}  "
+              f"kv_blocks_peak {stats.kv_blocks_peak}")
     print(tpu_serving_report(stats.tokens_per_s, chips=args.replicas).row())
     for r in reqs[:3]:
         print(f"  req {r.rid} [{r.state.value}]: {r.output}  "

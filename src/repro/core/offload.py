@@ -226,9 +226,22 @@ class OffloadEngine:
         return self
 
     def __exit__(self, *exc):
-        for t in self.targets:
-            t.close()
         self._open = False
+        errors = []
+        for t in self.targets:     # close every target even if one raises
+            try:
+                t.close()
+            except Exception as e:  # noqa: BLE001 — aggregated below
+                errors.append(e)
+        # never mask an in-flight exception from the with-body; close
+        # errors stay inspectable either way
+        self.close_errors = errors
+        if errors and exc[0] is None:
+            if len(errors) == 1:
+                raise errors[0]
+            raise RuntimeError(
+                f"{len(errors)} targets failed to close: "
+                + "; ".join(repr(e) for e in errors)) from errors[0]
 
     def _pick(self) -> Target:
         if self.scheduler == "round_robin":

@@ -43,6 +43,19 @@ def main() -> int:
     ap.add_argument("--kv-pool-blocks", type=int, default=None,
                     help="paged KV pool size in blocks (default: worst "
                          "case = slots x ceil(max_len / block_size))")
+    ap.add_argument("--no-preemption", action="store_true",
+                    help="disable decode preemption (paged KV only): a "
+                         "high-priority request waits for a slot/blocks "
+                         "instead of evicting a lower-priority decode")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable refcounted prompt-prefix block sharing")
+    ap.add_argument("--hipri-every", type=int, default=0, metavar="N",
+                    help="mark every Nth request priority 1 (0 = all "
+                         "requests priority 0); exercises SLO-aware "
+                         "admission and preemption")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="TTFT SLO attached to the high-priority requests "
+                         "(reported as slo_miss_rate)")
     ap.add_argument("--mode", choices=("continuous", "wave"),
                     default="continuous",
                     help="wave = legacy lock-step decode (single replica "
@@ -64,10 +77,17 @@ def main() -> int:
                                     size=args.prompt_len).astype(np.int32),
                     max_new_tokens=args.new_tokens, sampler=mk_sampler())
             for i in range(args.requests)]
+    if args.hipri_every:
+        for r in reqs[::args.hipri_every]:
+            r.priority = 1
+            if args.slo_ttft_ms is not None:
+                r.slo_ttft_s = args.slo_ttft_ms / 1e3
 
     kw = dict(max_len=max_len, batch_slots=args.slots,
               paged=False if args.contiguous_kv else None,
-              pool_blocks=args.kv_pool_blocks)
+              pool_blocks=args.kv_pool_blocks,
+              preemption=not args.no_preemption,
+              prefix_sharing=not args.no_prefix_sharing)
     if args.replicas > 1:
         replicas = [ServingEngine(cfg, params, **kw)
                     for _ in range(args.replicas)]
@@ -86,6 +106,12 @@ def main() -> int:
         print(f"prefill_compiles={stats.prefill_compiles}  "
               f"kv_blocks_peak={stats.kv_blocks_peak}  "
               f"kv_pool_util={stats.kv_pool_util:.2f}")
+    if stats.preemptions or stats.prefix_shared_blocks or stats.slo_tracked:
+        miss = (f"{stats.slo_miss_rate:.2f}"
+                if stats.slo_miss_rate is not None else "n/a")
+        print(f"preemptions={stats.preemptions}  "
+              f"prefix_shared_blocks={stats.prefix_shared_blocks}  "
+              f"slo_miss_rate={miss}")
     report = tpu_serving_report(stats.tokens_per_s, chips=args.replicas)
     print(report.row())
     return 0

@@ -22,7 +22,16 @@ KV state comes in two layouts:
     compiles once per bucket instead of once per length.  Decode attention
     gathers only live blocks (Pallas paged kernel on TPU, jnp oracle
     elsewhere), so neither HBM nor decode reads pay worst-case ``max_len``
-    per slot.
+    per slot.  On top of the pool the engine layers **SLO-aware
+    scheduling** — priority admission with recompute-style preemption of
+    lower-priority decodes under block pressure (the victim's generated
+    tokens fold into its prompt and re-prefill through the bucketed path)
+    — and **prefix sharing**: a prefix index maps the token content of
+    full leading prompt blocks to refcounted pool blocks, so requests with
+    a common prompt prefix point their leading table entries at one shared
+    copy and allocate only their tail.  (The prefix is still *recomputed*
+    by the bucketed prefill — its rows land in the trash block; dropping
+    the recompute needs a cache-seeded prefill path, a ROADMAP item.)
   * **contiguous** (``paged=False`` and non-transformer families): the
     PR-1 layout — a worst-case ``(L, slots, max_len, K, D)`` state whose
     batch axis is overwritten in place per refill (`_merge_slot`).
@@ -32,10 +41,11 @@ in `benchmarks/serving_bench.py`.
 """
 from __future__ import annotations
 
+import hashlib
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -57,6 +67,10 @@ class ServeStats:
     decode_steps: int = 0
     occupancy_sum: float = 0.0          # sum over decode steps of active/slots
     prefill_compiles: int = 0           # distinct jitted prefill signatures
+    preemptions: int = 0                # decode evictions under queue pressure
+    prefix_shared_blocks: int = 0       # table entries mapped to shared blocks
+    slo_tracked: int = 0                # requests carrying a TTFT SLO
+    slo_misses: int = 0                 # ... whose TTFT exceeded it
     kv_blocks_peak: int | None = None   # paged only: peak pool blocks in use
     kv_pool_util: float | None = None   # paged only: peak / capacity
     ttft: list = field(default_factory=list)    # per-request seconds
@@ -84,12 +98,37 @@ class ServeStats:
     def mean_tpot_s(self) -> float | None:
         return float(np.mean(self.tpot)) if self.tpot else None
 
+    @property
+    def slo_miss_rate(self) -> float | None:
+        """Fraction of SLO-carrying requests whose TTFT missed; None when
+        the workload carries no SLOs."""
+        return self.slo_misses / self.slo_tracked if self.slo_tracked \
+            else None
+
     def fill_request_metrics(self, requests: list[Request]) -> None:
         for r in requests:
             if r.ttft_s is not None:
                 self.ttft.append(r.ttft_s)
             if r.tpot_s is not None:
                 self.tpot.append(r.tpot_s)
+            if r.slo_ttft_s is not None:
+                # an SLO request that never produced a token inside the
+                # window missed by definition — excluding it would let the
+                # worst outcomes deflate the miss rate
+                self.slo_tracked += 1
+                self.slo_misses += int(r.slo_miss is not False)
+
+
+class WindowBase(NamedTuple):
+    """Lifetime-counter snapshot anchoring a serving measurement window
+    (:meth:`ServingEngine.begin_window` / ``collect_window``)."""
+    tokens: int
+    prefills: int
+    decode_steps: int
+    occupancy_sum: float
+    prefill_compiles: int
+    preemptions: int
+    prefix_shared: int
 
 
 def _merge_slot(state, slot_state, slot: jax.Array):
@@ -123,7 +162,8 @@ class ServingEngine:
                  batch_slots: int = 4, chunk: int = 512,
                  paged: bool | None = None, block_size: int = 16,
                  pool_blocks: int | None = None,
-                 cache_dtype: str = "bfloat16"):
+                 cache_dtype: str = "bfloat16",
+                 preemption: bool = True, prefix_sharing: bool = True):
         self.cfg = cfg
         self.params = params
         self.fns = fns_for(cfg)
@@ -138,6 +178,13 @@ class ServingEngine:
         self.paged = paged
         self.block_size = block_size
         self.cache_dtype = cache_dtype
+        self.prefix_sharing = prefix_sharing and paged
+        # prefix index: chained digest of the tokens of each full leading
+        # block -> (block id, alloc generation); entries are validated
+        # against the pool on lookup, so a freed-and-reused block can
+        # never be shared stale
+        self._prefix_index: dict[bytes, tuple[int, int]] = {}
+        self.prefix_shared_total = 0         # lifetime shared table entries
         if paged:
             worst = batch_slots * -(-max_len // block_size)
             self.pool = KVBlockPool(pool_blocks or worst, block_size)
@@ -154,7 +201,8 @@ class ServingEngine:
                                               chunk=chunk))
         else:
             self.pool = None
-        self.scheduler = ContinuousScheduler(batch_slots, pool=self.pool)
+        self.scheduler = ContinuousScheduler(batch_slots, pool=self.pool,
+                                             preemption=preemption)
         self._decode = jax.jit(
             lambda p, t, s: self.fns.decode(cfg, p, t, s, chunk=chunk))
         # jitted prefill, shape-keyed: one compile per (batch, prompt-len)
@@ -216,19 +264,24 @@ class ServingEngine:
     def _prefill_one(self, req: Request):
         """Chunked prefill of one prompt -> ((V,) logits, batch-1 state).
 
+        Uses ``req.prefill_tokens`` — prompt plus any tokens generated
+        before a preemption — so an evicted request resumes recompute-style
+        with its history re-prefilled (the bucketed path keeps that cheap).
+
         Paged mode right-pads the prompt to a power-of-two bucket (compile
         cache is per bucket, not per length) and reads logits at the true
         last token; the returned dense bucket-sized cache is then scattered
         into the slot's pool blocks by the caller."""
+        prompt = req.prefill_tokens
         if not self.paged:
-            self._prefill_shapes.add((1, len(req.prompt)))
-            batch = self._batch_for(req.prompt[None])
+            self._prefill_shapes.add((1, len(prompt)))
+            batch = self._batch_for(prompt[None])
             last, state = self._prefill(self.params, batch)
             return np.asarray(last[0]), state
-        P = len(req.prompt)
+        P = len(prompt)
         bucket = self._bucket_len(P)
         toks = np.zeros((1, bucket), np.int32)
-        toks[0, :P] = req.prompt
+        toks[0, :P] = prompt
         batch = self._batch_for(toks)
         batch["last_pos"] = jnp.asarray([P - 1], jnp.int32)
         self._prefill_shapes.add((1, bucket))
@@ -260,19 +313,87 @@ class ServingEngine:
                 toks[slot] = int(tok)
         return toks
 
+    def _prefix_keys(self, tokens: np.ndarray) -> list[bytes]:
+        """One chained digest per *full* leading block: key ``j`` covers
+        the tokens of blocks 0..j.  Chaining keeps the whole key list
+        O(prompt) — slicing ``tokens[:(j+1)*bs]`` fresh per key would be
+        O(prompt^2) bytes hashed on the executor hot path."""
+        bs = self.block_size
+        h = hashlib.sha1()
+        keys: list[bytes] = []
+        for j in range(len(tokens) // bs):
+            h.update(np.ascontiguousarray(tokens[j * bs:(j + 1) * bs],
+                                          dtype=np.int32).tobytes())
+            keys.append(h.digest())
+        return keys
+
+    def _lookup_prefix(self, keys: list[bytes]) -> list[int]:
+        """Longest run of full leading blocks already resident in the pool
+        for this token prefix.  Dead index entries (block freed, or freed
+        and re-allocated — the generation tag catches both) are pruned on
+        the way."""
+        shared: list[int] = []
+        for key in keys:
+            ent = self._prefix_index.get(key)
+            if ent is None:
+                break
+            bid, gen = ent
+            if not self.pool.block_live(bid, gen):
+                del self._prefix_index[key]
+                break
+            shared.append(bid)
+        return shared
+
+    def _register_prefix(self, keys: list[bytes], req: Request) -> None:
+        """Publish the request's own *full* prompt blocks under their token
+        prefix so later requests with the same leading tokens share them.
+        A live publication wins, but a dead entry (block freed or reused
+        since) is overwritten — otherwise one round of pool churn would
+        leave dead tombstones blocking re-publication for that prefix."""
+        for j in range(req.shared_blocks, len(keys)):
+            ent = self._prefix_index.get(keys[j])
+            if ent is not None and self.pool.block_live(*ent):
+                continue
+            bid = req.block_ids[j]
+            self._prefix_index[keys[j]] = (bid, self.pool.generation(bid))
+        if len(self._prefix_index) > 8 * self.pool.capacity:
+            self._prefix_index = {
+                k: (b, g) for k, (b, g) in self._prefix_index.items()
+                if self.pool.block_live(b, g)}
+
     def _admit_paged(self, slot: int, req: Request, state1) -> None:
         """Materialize an admitted request's prompt blocks and scatter the
-        bucket-sized prefill cache into them; entries past the prompt's
-        blocks point at the trash block so bucket-padding rows land there."""
-        nb = self.pool.blocks_for(len(req.prompt))
-        req.block_ids = self.pool.alloc_reserved(nb)
+        bucket-sized prefill cache into them.
+
+        Leading blocks whose full token prefix is already in the pool are
+        *shared* (refcount bumped, reservation tail returned) instead of
+        re-allocated; their scatter ids stay at the trash block, so the
+        recomputed prefix rows are discarded and the shared copy is the one
+        every holder reads.  Entries past the prompt's blocks also point at
+        the trash block so bucket-padding rows land there."""
+        toks = req.prefill_tokens
+        P = len(toks)
+        nb = self.pool.blocks_for(P)
+        keys = self._prefix_keys(toks) if self.prefix_sharing else []
+        shared = self._lookup_prefix(keys)
+        ns = len(shared)
+        if ns:
+            self.pool.share(shared)
+            self.pool.unreserve(ns)          # shared blocks need no copy
+            self.prefix_shared_total += ns
+        own = self.pool.alloc_reserved(nb - ns)
+        req.block_ids = shared + own
+        req.shared_blocks = ns
+        req.blocks_reserved -= nb           # remaining = decode-growth tail
         bucket = state1.k.shape[2]
         ids = np.zeros((bucket // self.block_size,), np.int32)
-        ids[:nb] = req.block_ids
+        ids[ns:nb] = own
         self._state = self._scatter(self._state, state1, jnp.asarray(ids))
         self._tables[slot] = 0
         self._tables[slot, :nb] = req.block_ids
-        self._lengths[slot] = len(req.prompt)
+        self._lengths[slot] = P
+        if self.prefix_sharing:
+            self._register_prefix(keys, req)
 
     def _retire_slot(self, slot: int) -> None:
         """Point a finished slot's table at the trash block before its
@@ -291,6 +412,7 @@ class ServingEngine:
             if pos >= len(req.block_ids) * bs:
                 nb = len(req.block_ids)
                 req.block_ids.extend(self.pool.alloc_reserved(1))
+                req.blocks_reserved -= 1
                 self._tables[slot, nb] = req.block_ids[-1]
             self._lengths[slot] = pos
         self._state = self._state._replace(
@@ -301,7 +423,14 @@ class ServingEngine:
         """One executor iteration: refill free slots (chunked prefill),
         sample one token per active slot (vectorized), advance the batched
         decode step.  Returns False when there was no work."""
-        for slot, req in self.scheduler.admit():
+        admitted = self.scheduler.admit()
+        if self.paged:
+            # trash the tables of any slots admit() preempted *before*
+            # scattering new prompts into the freed blocks: the victim slot
+            # keeps writing its (discarded) decode row to the trash block
+            for slot, _ in self.scheduler.drain_preempted():
+                self._retire_slot(slot)
+        for slot, req in admitted:
             last1, state1 = self._prefill_one(req)
             self.totals.prefills += 1
             if self._state is None:
@@ -352,6 +481,44 @@ class ServingEngine:
             self.totals.occupancy_sum += len(still) / self.slots
         return True
 
+    # -- measurement windows ---------------------------------------------------
+
+    def begin_window(self) -> "WindowBase":
+        """Snapshot the lifetime counters (and reset the pool peak) so a
+        caller can scope :class:`ServeStats` to one serving window — used
+        by blocking :meth:`serve` and by service-mode drivers (benchmarks,
+        the multi-replica engine), which previously had no way to get
+        pool/preemption stats out of a live engine."""
+        if self.pool is not None:
+            self.pool.reset_peak()
+        return WindowBase(
+            tokens=self.totals.tokens, prefills=self.totals.prefills,
+            decode_steps=self.totals.decode_steps,
+            occupancy_sum=self.totals.occupancy_sum,
+            prefill_compiles=self.prefill_compiles,
+            preemptions=self.scheduler.preemptions,
+            prefix_shared=self.prefix_shared_total)
+
+    def collect_window(self, base: "WindowBase", requests: list[Request],
+                       wall_s: float) -> ServeStats:
+        """Stats for everything this engine did since ``base`` (a
+        :meth:`begin_window` snapshot), with per-request latency metrics
+        filled from ``requests``."""
+        stats = ServeStats(requests=len(requests), wall_s=wall_s)
+        stats.tokens = self.totals.tokens - base.tokens
+        stats.prefills = self.totals.prefills - base.prefills
+        stats.decode_steps = self.totals.decode_steps - base.decode_steps
+        stats.occupancy_sum = self.totals.occupancy_sum - base.occupancy_sum
+        stats.prefill_compiles = self.prefill_compiles - base.prefill_compiles
+        stats.preemptions = self.scheduler.preemptions - base.preemptions
+        stats.prefix_shared_blocks = (self.prefix_shared_total
+                                      - base.prefix_shared)
+        if self.pool is not None:
+            stats.kv_blocks_peak = self.pool.peak_used
+            stats.kv_pool_util = self.pool.utilization
+        stats.fill_request_metrics(requests)
+        return stats
+
     # -- blocking mode ---------------------------------------------------------
 
     def serve(self, requests: list[Request]) -> ServeStats:
@@ -360,28 +527,13 @@ class ServingEngine:
         assert self._thread is None, "engine already running in service mode"
         for r in requests:
             self._check_fits(r)
-        base = (self.totals.tokens, self.totals.prefills,
-                self.totals.decode_steps, self.totals.occupancy_sum,
-                self.prefill_compiles)
-        if self.pool is not None:
-            self.pool.reset_peak()
+        base = self.begin_window()
         t0 = time.monotonic()
         for r in requests:
             self.scheduler.submit(r)
         while self.scheduler.has_work():
             self._step()
-        stats = ServeStats(requests=len(requests),
-                           wall_s=time.monotonic() - t0)
-        stats.tokens = self.totals.tokens - base[0]
-        stats.prefills = self.totals.prefills - base[1]
-        stats.decode_steps = self.totals.decode_steps - base[2]
-        stats.occupancy_sum = self.totals.occupancy_sum - base[3]
-        stats.prefill_compiles = self.prefill_compiles - base[4]
-        if self.pool is not None:
-            stats.kv_blocks_peak = self.pool.peak_used
-            stats.kv_pool_util = self.pool.utilization
-        stats.fill_request_metrics(requests)
-        return stats
+        return self.collect_window(base, requests, time.monotonic() - t0)
 
     # -- service mode (used by MultiReplicaEngine and live traffic) ------------
 
@@ -407,11 +559,19 @@ class ServingEngine:
             req.on_finish = on_finish
         self.scheduler.submit(req)
 
-    def stop(self) -> None:
+    def stop(self, timeout: float = 10.0) -> None:
+        """Stop the service-mode executor thread.  Raises if the thread
+        does not exit within ``timeout`` — and keeps the handle, so a later
+        :meth:`start` cannot race two executors over ``_state``."""
         if self._thread is None:
             return
         self._stop.set()
-        self._thread.join(timeout=10)
+        self._thread.join(timeout=timeout)
+        if self._thread.is_alive():
+            raise RuntimeError(
+                f"executor thread did not stop within {timeout}s; handle "
+                f"retained — a second start() would race two executors "
+                f"over the decode state")
         self._thread = None
 
     @property
@@ -431,6 +591,9 @@ class ServingEngine:
         stats = ServeStats(requests=len(requests))
         compiles0 = self.prefill_compiles
         t0 = time.monotonic()
+        for r in requests:          # wave path bypasses scheduler.submit()
+            if r.submitted_at is None:
+                r.submitted_at = t0
         buckets: dict[int, list[Request]] = {}
         for r in requests:
             buckets.setdefault(len(r.prompt), []).append(r)
@@ -531,10 +694,13 @@ class MultiReplicaEngine:
         total_slots = sum(e.slots for e in self.replicas)
         window = (group_size * len(self.replicas) if group_size
                   else 2 * total_slots)
-        base = [(e.totals.prefills, e.totals.decode_steps,
-                 e.totals.occupancy_sum, e.prefill_compiles)
-                for e in self.replicas]
+        base = [e.begin_window() for e in self.replicas]
         t0 = time.monotonic()
+        for r in requests:
+            # arrival = hand-off to the multi-replica engine; clones inherit
+            # it, so reissue across replicas keeps TTFT measured from here
+            if r.submitted_at is None:
+                r.submitted_at = t0
         with OffloadEngine(self.targets, scheduler="least_loaded",
                            deadline_s=self.deadline_s) as eng:
             results, ostats = eng.run_unordered(requests, window=window)
@@ -547,10 +713,22 @@ class MultiReplicaEngine:
             orig.first_token_at = done.first_token_at
             orig.finished_at = done.finished_at
             stats.tokens += len(done.output)
-        for e, (p0, d0, o0, c0) in zip(self.replicas, base):
-            stats.prefills += e.totals.prefills - p0
-            stats.decode_steps += e.totals.decode_steps - d0
-            stats.occupancy_sum += e.totals.occupancy_sum - o0
-            stats.prefill_compiles += e.prefill_compiles - c0
+        # per-replica windows keep the delta logic in one place
+        # (collect_window); only the cross-replica aggregation lives here
+        for e, b in zip(self.replicas, base):
+            sub = e.collect_window(b, [], 0.0)
+            stats.prefills += sub.prefills
+            stats.decode_steps += sub.decode_steps
+            stats.occupancy_sum += sub.occupancy_sum
+            stats.prefill_compiles += sub.prefill_compiles
+            stats.preemptions += sub.preemptions
+            stats.prefix_shared_blocks += sub.prefix_shared_blocks
+            if sub.kv_blocks_peak is not None:
+                stats.kv_blocks_peak = ((stats.kv_blocks_peak or 0)
+                                        + sub.kv_blocks_peak)
+        cap = sum(e.pool.capacity for e in self.replicas
+                  if e.pool is not None)
+        if stats.kv_blocks_peak is not None and cap:
+            stats.kv_pool_util = stats.kv_blocks_peak / cap
         stats.fill_request_metrics(requests)
         return stats

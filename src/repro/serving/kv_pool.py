@@ -15,6 +15,16 @@ Lifecycle per request:
   * decode:    ``alloc_reserved(1)`` each time generation crosses a block
   * release:   ``free`` the allocated ids + ``unreserve`` the unused tail
 
+Blocks are **refcounted** so a full prompt-prefix block can be shared by
+several requests (prefix sharing): ``alloc_reserved`` hands a block out with
+refcount 1, ``share`` increments it for each additional holder, and ``free``
+decrements — the block only returns to the free list when the last holder
+lets go, so a sharer can never free a block out from under another request.
+Each allocation also bumps the block's **generation** counter; the engine's
+prefix index stores ``(block_id, generation)`` pairs and treats an entry as
+dead the moment the generation moves on, so a stale index entry can never
+alias a block that was freed and re-allocated with different contents.
+
 ``CapacityError`` is the shared typed error for requests that can *never*
 fit (engine ``_check_fits`` and scheduler admission both raise it), as
 opposed to transient fullness, which just defers admission.
@@ -45,7 +55,8 @@ class KVBlockPool:
         self._lock = threading.Lock()
         # LIFO free stack of usable ids (1..num_blocks); 0 is trash.
         self._free: list[int] = list(range(num_blocks, 0, -1))
-        self._allocated: set[int] = set()
+        self._refs: dict[int, int] = {}      # allocated id -> holder count
+        self._gen = [0] * (num_blocks + 1)   # bumped on every allocation
         self._reserved = 0
         self.peak_used = 0
 
@@ -81,8 +92,9 @@ class KVBlockPool:
 
     @property
     def used_blocks(self) -> int:
+        """Distinct allocated blocks (a shared block counts once)."""
         with self._lock:
-            return len(self._allocated)
+            return len(self._refs)
 
     @property
     def free_blocks(self) -> int:
@@ -102,7 +114,7 @@ class KVBlockPool:
 
     def reset_peak(self) -> None:
         with self._lock:
-            self.peak_used = len(self._allocated)
+            self.peak_used = len(self._refs)
 
     # -- lifecycle -------------------------------------------------------------
 
@@ -129,22 +141,71 @@ class KVBlockPool:
             self._reserved -= n
 
     def alloc_reserved(self, n: int) -> list[int]:
-        """Materialize ``n`` previously reserved blocks as physical ids."""
+        """Materialize ``n`` previously reserved blocks as physical ids
+        (each handed out with refcount 1 and a fresh generation)."""
         with self._lock:
             assert self._reserved >= n, \
                 f"alloc of {n} blocks exceeds reservation {self._reserved}"
             assert len(self._free) >= n     # invariant: reserved <= free
             ids = [self._free.pop() for _ in range(n)]
-            self._allocated.update(ids)
+            for b in ids:
+                self._refs[b] = 1
+                self._gen[b] += 1
             self._reserved -= n
-            self.peak_used = max(self.peak_used, len(self._allocated))
+            self.peak_used = max(self.peak_used, len(self._refs))
             return ids
 
-    def free(self, ids: list[int]) -> None:
-        """Return blocks to the pool; freeing an unallocated id raises."""
+    def share(self, ids: list[int]) -> None:
+        """Add one holder to each (already allocated) block — the prefix-
+        sharing path: a new request maps its leading table entries to
+        blocks another request allocated."""
         with self._lock:
             for b in ids:
-                if b not in self._allocated:
+                if b not in self._refs:
+                    raise ValueError(f"share of unallocated KV block {b}")
+                self._refs[b] += 1
+
+    def free(self, ids: list[int]) -> list[int]:
+        """Drop one holder per block; blocks whose last holder left return
+        to the free list.  Returns the ids actually released (refcount hit
+        zero).  Freeing an unallocated id raises."""
+        released: list[int] = []
+        with self._lock:
+            for b in ids:
+                refs = self._refs.get(b)
+                if refs is None:
                     raise ValueError(f"double free of KV block {b}")
-                self._allocated.remove(b)
-                self._free.append(b)
+                if refs > 1:
+                    self._refs[b] = refs - 1
+                else:
+                    del self._refs[b]
+                    self._free.append(b)
+                    released.append(b)
+        return released
+
+    # -- prefix-index support ----------------------------------------------------
+
+    def refcount(self, block_id: int) -> int:
+        """Current holder count (0 if the block is free)."""
+        with self._lock:
+            return self._refs.get(block_id, 0)
+
+    def releasable_count(self, ids: list[int]) -> int:
+        """How many of ``ids`` would actually return to the free list if
+        their holder freed them now (refcount exactly 1) — the preemption
+        gain estimate for a victim whose blocks may be shared out."""
+        with self._lock:
+            return sum(self._refs.get(b, 0) == 1 for b in ids)
+
+    def generation(self, block_id: int) -> int:
+        """Allocation generation of ``block_id`` (bumped per allocation)."""
+        with self._lock:
+            return self._gen[block_id]
+
+    def block_live(self, block_id: int, gen: int) -> bool:
+        """True iff ``block_id`` is still allocated *and* still the same
+        allocation the caller tagged — the prefix index's validity check:
+        a block that was freed and re-allocated has a newer generation and
+        must not be shared as if it still held the old prefix rows."""
+        with self._lock:
+            return block_id in self._refs and self._gen[block_id] == gen

@@ -16,6 +16,30 @@ def test_results_in_queueing_order():
     assert stats.items == 20
 
 
+def test_exit_closes_every_target_before_raising():
+    """A close() that raises (e.g. a wedged replica executor) must not
+    skip closing the remaining targets; the first error surfaces after
+    all targets had their shutdown."""
+    closed = []
+
+    class Flaky(SimTarget):
+        def __init__(self, name, fail):
+            super().__init__(name, compute_s=0.001)
+            self.fail = fail
+
+        def close(self):
+            closed.append(self.name)
+            super().close()
+            if self.fail:
+                raise RuntimeError(f"{self.name} wedged")
+
+    targets = [Flaky("t0", fail=True), Flaky("t1", fail=False)]
+    with pytest.raises(RuntimeError, match="t0 wedged"):
+        with OffloadEngine(targets) as eng:
+            eng.run([1, 2])
+    assert closed == ["t0", "t1"]           # t1 closed despite t0's raise
+
+
 def test_round_robin_assignment():
     targets = [SimTarget(f"t{i}", compute_s=0.001) for i in range(4)]
     with OffloadEngine(targets, scheduler="round_robin") as eng:

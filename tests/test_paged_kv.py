@@ -63,6 +63,44 @@ def test_pool_capacity_error_is_typed_and_valueerror():
     assert issubclass(CapacityError, ValueError)
 
 
+def test_pool_refcount_share_free_and_double_free():
+    """Prefix sharing: a shared block survives its first holder's free and
+    only returns to the pool when the last holder lets go; double frees
+    and shares of unallocated blocks still raise."""
+    pool = KVBlockPool(4, block_size=8)
+    pool.reserve(2)
+    ids = pool.alloc_reserved(2)
+    pool.share(ids)                              # second holder
+    assert all(pool.refcount(b) == 2 for b in ids)
+    assert pool.free(ids) == []                  # first holder: no release
+    assert pool.used_blocks == 2 and pool.free_blocks == 2
+    released = pool.free(ids)                    # last holder: released
+    assert sorted(released) == sorted(ids)
+    assert pool.used_blocks == 0 and pool.free_blocks == 4
+    with pytest.raises(ValueError, match="double free"):
+        pool.free([ids[0]])
+    with pytest.raises(ValueError, match="share of unallocated"):
+        pool.share([ids[0]])
+
+
+def test_pool_generation_invalidates_stale_prefix_entries():
+    """A (block, generation) tag goes dead on free and stays dead when the
+    block is re-allocated for different contents — the prefix index can
+    never alias a reused block."""
+    pool = KVBlockPool(1, block_size=8)
+    pool.reserve(1)
+    [b] = pool.alloc_reserved(1)
+    g = pool.generation(b)
+    assert pool.block_live(b, g)
+    pool.free([b])
+    assert not pool.block_live(b, g)             # freed -> dead
+    pool.reserve(1)
+    [b2] = pool.alloc_reserved(1)
+    assert b2 == b                               # same physical block...
+    assert not pool.block_live(b, g)             # ...but the old tag stays dead
+    assert pool.block_live(b2, pool.generation(b2))
+
+
 # -- paged attention vs dense oracle ------------------------------------------
 
 def _ragged_case(seed, B=3, mb=4, bs=8, K=2, H=4, D=16):
@@ -300,6 +338,40 @@ def test_capacity_error_paths():
     # a fitting request still serves
     ok = Request(1, np.arange(8, dtype=np.int32), max_new_tokens=6)
     assert eng.serve([ok]).tokens == 6
+
+
+def test_prefix_sharing_dedups_blocks_and_matches_unshared():
+    """Requests with a common full-block prompt prefix map their leading
+    table entries to one refcounted copy: same outputs, strictly fewer
+    peak pool blocks, balanced pool afterwards."""
+    cfg, params = _smoke()
+    rng = np.random.default_rng(11)
+    prefix = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+    prompts = [np.concatenate([prefix, rng.integers(0, cfg.vocab_size,
+                                                    size=4).astype(np.int32)])
+               for _ in range(3)]                # 20 tokens: 2 full blocks
+    mk = lambda: [Request(i, p, max_new_tokens=3, sampler=greedy())  # noqa
+                  for i, p in enumerate(prompts)]
+    kw = dict(max_len=24, batch_slots=3, paged=True, block_size=8)
+    shared = ServingEngine(cfg, params, **kw)
+    plain = ServingEngine(cfg, params, prefix_sharing=False, **kw)
+    rs, rp = mk(), mk()
+    ss = shared.serve(rs)
+    sp = plain.serve(rp)
+    assert [r.output for r in rs] == [r.output for r in rp]
+    # 2 shared prefix blocks counted once + 1 own tail block each
+    assert ss.prefix_shared_blocks == 4          # 2 sharers x 2 blocks
+    assert sp.prefix_shared_blocks == 0
+    assert ss.kv_blocks_peak < sp.kv_blocks_peak
+    assert ss.kv_blocks_peak < 3 * 2             # < N x prefix-blocks
+    # refcounted release: nothing leaks once every sharer is done
+    assert shared.pool.used_blocks == 0
+    assert shared.pool.reserved_blocks == 0
+    # pool churn invalidated every index entry (blocks freed); a second
+    # round with the same prefix must re-publish over the dead entries and
+    # recover full sharing immediately, not one block per admission
+    ss2 = shared.serve(mk())
+    assert ss2.prefix_shared_blocks == 4         # same as the first round
 
 
 def test_paged_engine_int8_cache_top1_stable():

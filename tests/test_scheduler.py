@@ -1,12 +1,18 @@
-"""Continuous-batching scheduler: lifecycle, slot bookkeeping, admission."""
-import numpy as np
+"""Continuous-batching scheduler: lifecycle, slot bookkeeping, SLO-aware
+admission (priority / deadline / arrival order), decode preemption."""
+import math
+import time
 
+import numpy as np
+import pytest
+
+from repro.serving.kv_pool import KVBlockPool
 from repro.serving.scheduler import (ContinuousScheduler, Request,
                                      RequestState)
 
 
-def _req(rid, n=4):
-    return Request(rid, np.arange(6, dtype=np.int32), max_new_tokens=n)
+def _req(rid, n=4, **kw):
+    return Request(rid, np.arange(6, dtype=np.int32), max_new_tokens=n, **kw)
 
 
 def test_lifecycle_states():
@@ -56,13 +62,196 @@ def test_wait_for_work_signals_on_submit():
 
 
 def test_request_metrics_and_clone():
-    r = _req(7)
+    r = _req(7, priority=3, slo_ttft_s=0.4)
     r.submitted_at = 10.0
     r.first_token_at = 10.5
     r.finished_at = 11.5
     r.output = [1, 2, 3]
     assert r.ttft_s == 0.5
     assert abs(r.tpot_s - 0.5) < 1e-9
+    assert r.slo_miss is True                   # 0.5s TTFT > 0.4s SLO
     c = r.clone()
     assert c.rid == 7 and c.output == [] and c.first_token_at is None
     assert c.submitted_at == 10.0               # TTFT measured from arrival
+    assert c.priority == 3 and c.slo_ttft_s == 0.4
+    assert c.arrival_seq is None                # fresh seq per scheduler
+
+
+def test_submit_stamps_submitted_at_at_submission():
+    """Regression: submitted_at used to be stamped at Request construction,
+    inflating TTFT for any pre-constructed request."""
+    r = _req(0)
+    assert r.submitted_at is None               # construction does not stamp
+    time.sleep(0.03)
+    s = ContinuousScheduler(1)
+    t0 = time.monotonic()
+    s.submit(r)
+    assert r.submitted_at is not None and abs(r.submitted_at - t0) < 0.02
+    # a pre-stamped arrival (multi-replica reissue clone) is preserved
+    r2 = _req(1)
+    r2.submitted_at = 123.0
+    s.submit(r2)
+    assert r2.submitted_at == 123.0
+
+
+def test_admission_order_priority_then_deadline_then_arrival():
+    s = ContinuousScheduler(1)
+    r_bg = _req(0, priority=0)                      # background, first in
+    r_slo_loose = _req(1, priority=1, slo_ttft_s=9.0)
+    r_slo_tight = _req(2, priority=1, slo_ttft_s=0.1)  # later, tighter SLO
+    r_plain = _req(3, priority=1)                   # no SLO: last in tier
+    for r in (r_bg, r_slo_loose, r_slo_tight, r_plain):
+        s.submit(r)
+    order = []
+    while s.has_work():
+        [(slot, r)] = s.admit()
+        r.state = RequestState.DONE
+        s.release(slot)
+        order.append(r.rid)
+    assert order == [2, 1, 3, 0]
+
+
+def test_property_admission_order():
+    """Property: drain order equals sorting by (priority desc, SLO
+    deadline, arrival) for any mix of priorities and SLOs."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, strategies as st
+
+    @given(st.lists(st.tuples(st.integers(0, 3),
+                              st.one_of(st.none(),
+                                        st.floats(0.01, 10.0))),
+                    min_size=1, max_size=12))
+    def prop(specs):
+        s = ContinuousScheduler(1)
+        reqs = []
+        for i, (pri, slo) in enumerate(specs):
+            r = _req(i, priority=pri, slo_ttft_s=slo)
+            r.submitted_at = float(i)       # deterministic deadlines
+            s.submit(r)
+            reqs.append(r)
+        drained = []
+        while s.has_work():
+            [(slot, r)] = s.admit()
+            r.state = RequestState.DONE
+            s.release(slot)
+            drained.append(r.rid)
+
+        def key(r):
+            dl = (r.submitted_at + r.slo_ttft_s
+                  if r.slo_ttft_s is not None else math.inf)
+            return (-r.priority, dl, r.arrival_seq)
+
+        assert drained == [r.rid for r in sorted(reqs, key=key)]
+
+    prop()
+
+
+# -- preemption ----------------------------------------------------------------
+
+def _admit_and_decode(s, pool, prompt_blocks):
+    """Simulate the engine side of admission: materialize prompt blocks
+    and flip the request to DECODE (the state preemption targets)."""
+    out = []
+    for slot, r in s.admit():
+        r.block_ids = pool.alloc_reserved(prompt_blocks)
+        r.blocks_reserved -= prompt_blocks
+        r.state = RequestState.DECODE
+        out.append((slot, r))
+    return out
+
+
+def test_preemption_lifecycle_accounting_balanced():
+    pool = KVBlockPool(8, block_size=4)
+    s = ContinuousScheduler(2, pool=pool)
+    lows = [_req(i, n=9) for i in range(2)]     # 16 rows -> 4 blocks each
+    for r in lows:
+        s.submit(r)
+    assert len(_admit_and_decode(s, pool, 2)) == 2
+    assert pool.free_blocks == 0                # 4 allocated + 4 promised
+
+    high = Request(9, np.arange(6, dtype=np.int32), max_new_tokens=3,
+                   priority=1)                  # 8 rows -> 2 blocks
+    s.submit(high)
+    admitted = s.admit()
+    # high evicted exactly one low (ties broken deterministically) and
+    # took its slot; the victim's blocks and reservation tail returned
+    assert [r.rid for _, r in admitted] == [9]
+    assert s.preemptions == 1
+    [(vslot, victim)] = s.drain_preempted()
+    assert s.drain_preempted() == []            # drained exactly once
+    assert victim in lows and victim.state is RequestState.QUEUED
+    assert victim.preempted_count == 1
+    assert victim.block_ids == [] and victim.blocks_reserved == 0
+    assert admitted[0][0] == vslot              # victim's slot reused
+    # pool: surviving low holds 2 + 2 promised; high has 2 promised
+    assert pool.used_blocks == 2
+    assert pool.reserved_blocks == 4
+    assert s.queued == 1                        # victim re-queued
+
+    # high materializes its prompt blocks, runs, and finishes
+    high.block_ids = pool.alloc_reserved(2)
+    high.blocks_reserved -= 2
+    high.state = RequestState.DONE
+    s.release(vslot)
+    # ...then the victim re-admits into the freed capacity and completes
+    readmitted = _admit_and_decode(s, pool, 2)
+    assert [r for _, r in readmitted] == [victim]
+    for slot, r in s.active():
+        r.state = RequestState.DONE
+        s.release(slot)
+    assert pool.used_blocks == 0 and pool.reserved_blocks == 0
+    assert pool.free_blocks == 8                # fully balanced
+
+
+def test_no_preemption_within_equal_priority_or_when_disabled():
+    for preemption in (True, False):
+        pool = KVBlockPool(4, block_size=4)
+        s = ContinuousScheduler(1, pool=pool, preemption=preemption)
+        low = _req(0, n=9, priority=0)          # 16 rows -> 4 blocks
+        s.submit(low)
+        _admit_and_decode(s, pool, 2)
+        # equal priority never evicts; disabled preemption never evicts
+        s.submit(_req(1, n=3, priority=0 if preemption else 5))
+        assert s.admit() == []
+        assert s.preemptions == 0 and low.state is RequestState.DECODE
+
+
+def test_preemption_gain_ignores_shared_out_blocks():
+    """A victim whose prompt blocks are prefix-shared with other holders
+    frees only its reservation tail on eviction — the gain estimate must
+    not count shared blocks, or a doomed eviction throws work away."""
+    pool = KVBlockPool(4, block_size=4)
+    s = ContinuousScheduler(1, pool=pool)
+    low = _req(0, n=11)                         # 16 rows -> 4 blocks
+    s.submit(low)
+    _admit_and_decode(s, pool, 2)               # 2 allocated + 2 tail
+    pool.share(low.block_ids)                   # another request shares them
+    s.submit(_req(9, n=7, priority=1))          # 12 rows -> needs 3 blocks
+    # evicting low would free only its 2-block tail (shared blocks stay)
+    assert s.admit() == []
+    assert s.preemptions == 0 and low.state is RequestState.DECODE
+    pool.free(low.block_ids)                    # drop the sharer's hold
+    assert s.admit() != []                      # now eviction covers need
+    assert s.preemptions == 1
+
+
+def test_preemption_declined_when_gain_cannot_cover_need():
+    """A doomed eviction (even all eligible victims' blocks would not fit
+    the head) must not happen — completed decode work is never thrown away
+    for an admission that still could not proceed.  Mid-PREFILL requests
+    are not eligible victims."""
+    pool = KVBlockPool(8, block_size=4)
+    s = ContinuousScheduler(2, pool=pool)
+    for i in range(2):
+        s.submit(_req(i, n=9))                  # 14 rows -> 4 blocks each
+    pairs = s.admit()
+    # only the first low reaches DECODE; the second stays mid-PREFILL
+    _, low0 = pairs[0]
+    low0.block_ids = pool.alloc_reserved(2)
+    low0.blocks_reserved -= 2
+    low0.state = RequestState.DECODE
+    big = Request(2, np.arange(24, dtype=np.int32), max_new_tokens=9,
+                  priority=2)                   # 32 rows -> 8 blocks
+    s.submit(big)
+    assert s.admit() == []                      # evicting low0 frees only 4
+    assert s.preemptions == 0 and low0.state is RequestState.DECODE

@@ -101,7 +101,6 @@ def test_late_short_request_finishes_first():
         while long_req.first_token_at is None:   # long is mid-decode
             assert time.monotonic() < deadline, "long request never started"
             time.sleep(0.005)
-        short_req.submitted_at = time.monotonic()
         eng.submit(short_req, on_finish=lambda r: ev_short.set())
         assert ev_short.wait(60) and ev_long.wait(60)
     finally:
@@ -159,3 +158,71 @@ def test_multireplica_counts():
     assert stats.requests == 6
     assert all(len(r.output) == 3 for r in reqs)
     assert stats.prefills == 6
+
+
+def test_multireplica_aggregates_paged_pool_stats():
+    """Regression: multi-replica serving never populated the paged-KV pool
+    metrics even when every replica was paged — peaks are now summed and
+    utilization is peak over combined capacity."""
+    cfg, params = _smoke()
+    replicas = [ServingEngine(cfg, params, max_len=16, batch_slots=2,
+                              paged=True) for _ in range(2)]
+    reqs = [Request(i, np.arange(6, dtype=np.int32), max_new_tokens=3)
+            for i in range(6)]
+    stats = MultiReplicaEngine(replicas).serve(reqs)
+    assert stats.kv_blocks_peak is not None and stats.kv_blocks_peak >= 1
+    assert stats.kv_blocks_peak <= sum(e.pool.capacity for e in replicas)
+    assert 0.0 < stats.kv_pool_util <= 1.0
+    # arrival is stamped at hand-off, so TTFT survives the clone round-trip
+    assert len(stats.ttft) == 6
+
+
+def test_stop_raises_when_executor_wedged():
+    """Regression: stop() used to drop the thread handle even when join
+    timed out, letting a later start() race two executors over _state."""
+    import pytest
+    cfg, params = _smoke()
+    eng = ServingEngine(cfg, params, max_len=12, batch_slots=1)
+    gate = threading.Event()
+    wedged = threading.Thread(target=gate.wait, daemon=True)
+    wedged.start()
+    eng._thread = wedged                # simulate a stuck executor thread
+    with pytest.raises(RuntimeError, match="did not stop"):
+        eng.stop(timeout=0.05)
+    assert eng._thread is wedged        # handle retained, no silent leak
+    gate.set()
+    wedged.join(timeout=5)
+    eng._thread = None
+
+
+def test_preempted_decode_resumes_and_completes_correctly():
+    """Preemption lifecycle end to end: a high-priority arrival evicts the
+    only active decode; the victim re-queues with its generated tokens
+    folded into its prompt, re-prefills on re-admission, and still
+    produces exactly the un-preempted greedy output."""
+    cfg, params = _smoke()
+    prompt = (np.arange(8, dtype=np.int32) * 7) % cfg.vocab_size
+    expect = _direct_greedy(cfg, params, prompt, 24, 36)
+    eng = ServingEngine(cfg, params, max_len=33, batch_slots=1, paged=True,
+                        block_size=4, pool_blocks=8)
+    low = Request(0, prompt, max_new_tokens=24, sampler=greedy())
+    high = Request(1, np.arange(4, dtype=np.int32), max_new_tokens=2,
+                   sampler=greedy(), priority=1)
+    ev_low, ev_high = threading.Event(), threading.Event()
+    eng.start()
+    try:
+        eng.submit(low, on_finish=lambda r: ev_low.set())
+        deadline = time.monotonic() + 60
+        while low.first_token_at is None:       # low is mid-decode
+            assert time.monotonic() < deadline, "low request never started"
+            time.sleep(0.005)
+        eng.submit(high, on_finish=lambda r: ev_high.set())
+        assert ev_high.wait(60) and ev_low.wait(60)
+    finally:
+        eng.stop()
+    assert low.preempted_count >= 1             # eviction really happened
+    assert eng.scheduler.preemptions >= 1
+    assert len(high.output) == 2
+    assert low.output == expect                 # recompute-resume is exact
+    # reservation accounting balanced after the whole dance
+    assert eng.pool.used_blocks == 0 and eng.pool.reserved_blocks == 0
