@@ -19,6 +19,7 @@ import repro.kernels.conv2d.ops        # noqa: F401  (register_kernel)
 import repro.kernels.decode_attention.ops  # noqa: F401
 import repro.kernels.flash_attention.ops   # noqa: F401
 import repro.kernels.matmul.ops        # noqa: F401
+import repro.kernels.prefill_attention.ops  # noqa: F401
 import repro.kernels.ssm_scan.ops      # noqa: F401
 from repro.kernels.conv2d.kernel import conv2d
 from repro.kernels.conv2d.ref import conv2d_ref
@@ -31,6 +32,8 @@ from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.matmul.kernel import matmul
 from repro.kernels.matmul.ref import matmul_ref
+from repro.kernels.prefill_attention.kernel import paged_prefill_attention
+from repro.kernels.prefill_attention.ref import paged_prefill_attention_ref
 from repro.kernels.ssm_scan.kernel import ssm_scan
 from repro.kernels.ssm_scan.ref import ssm_scan_ref
 from repro.roofline.hw import TPU_V5E
@@ -46,6 +49,7 @@ COVERAGE = {
     "flash_attention": "flash_err",
     "decode_attention": "decode_err",
     "paged_decode_attention": "paged_decode_err",
+    "paged_prefill_attention": "paged_prefill_err",
     "ssm_scan": "ssm_err",
     "conv2d": "conv2d_err",
 }
@@ -109,6 +113,23 @@ def _kernel_errs(interpret: bool = True) -> dict:
                                v_scale=vsc, interpret=interpret)
         - paged_decode_attention_ref(qd, kq, vq, tables, plens,
                                      k_scale=ksc, v_scale=vsc)).max())
+
+    # paged prefill: a multi-row chunk offset into seeded pool KV (causal
+    # against absolute positions), same pool/tables as the decode case
+    qc = jax.random.normal(ks[5], (2, 8, 4, 64))
+    q_start = jnp.array([21, 48], jnp.int32)      # seeded rows before chunk
+    clens = q_start + 8
+    out["paged_prefill_err"] = float(jnp.abs(
+        paged_prefill_attention(qc, kp, vp, tables, q_start, clens,
+                                interpret=interpret)
+        - paged_prefill_attention_ref(qc, kp, vp, tables, q_start,
+                                      clens)).max())
+    out["paged_prefill_int8_err"] = float(jnp.abs(
+        paged_prefill_attention(qc, kq, vq, tables, q_start, clens,
+                                k_scale=ksc, v_scale=vsc,
+                                interpret=interpret)
+        - paged_prefill_attention_ref(qc, kq, vq, tables, q_start, clens,
+                                      k_scale=ksc, v_scale=vsc)).max())
 
     ld = -jax.nn.softplus(jax.random.normal(ks[6], (1, 256, 4)))
     lg = 0.1 * jax.random.normal(ks[7], (1, 256, 4))

@@ -8,6 +8,12 @@ Example:
   # A/B against the legacy lock-step wave decode:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
       --mode wave
+  # chunked prefill (long prompts interleave with decode steps) and the
+  # seeded-prefill recompute baseline:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
+      --prompt-len 96 --prefill-chunk 32
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
+      --no-seeded-prefill
 """
 from __future__ import annotations
 
@@ -49,6 +55,17 @@ def main() -> int:
                          "instead of evicting a lower-priority decode")
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="disable refcounted prompt-prefix block sharing")
+    ap.add_argument("--prefill-chunk", type=int, default=None, metavar="C",
+                    help="paged KV only: prefill prompts in C-token chunks "
+                         "interleaved with decode steps (C must be a "
+                         "multiple of the 16-token block size; default: "
+                         "whole prompt in one go, stalling active decodes "
+                         "for its full prefill)")
+    ap.add_argument("--no-seeded-prefill", action="store_true",
+                    help="recompute baseline: shared prefix blocks are "
+                         "still mapped, but every prompt token is re-run "
+                         "and its rows discarded into the trash block "
+                         "(compare prefill_tokens_computed)")
     ap.add_argument("--hipri-every", type=int, default=0, metavar="N",
                     help="mark every Nth request priority 1 (0 = all "
                          "requests priority 0); exercises SLO-aware "
@@ -87,7 +104,9 @@ def main() -> int:
               paged=False if args.contiguous_kv else None,
               pool_blocks=args.kv_pool_blocks,
               preemption=not args.no_preemption,
-              prefix_sharing=not args.no_prefix_sharing)
+              prefix_sharing=not args.no_prefix_sharing,
+              prefill_chunk=args.prefill_chunk,
+              seeded_prefill=not args.no_seeded_prefill)
     if args.replicas > 1:
         replicas = [ServingEngine(cfg, params, **kw)
                     for _ in range(args.replicas)]
@@ -106,6 +125,13 @@ def main() -> int:
         print(f"prefill_compiles={stats.prefill_compiles}  "
               f"kv_blocks_peak={stats.kv_blocks_peak}  "
               f"kv_pool_util={stats.kv_pool_util:.2f}")
+    if stats.prefill_tokens_total:
+        stall = (f"{stats.decode_stall_p99_s * 1e3:.1f}ms"
+                 if stats.decode_stall_p99_s is not None else "n/a")
+        print(f"prefill_tokens={stats.prefill_tokens_computed}"
+              f"/{stats.prefill_tokens_total} computed "
+              f"({stats.prefill_compute_frac:.0%})  "
+              f"decode_stall_p99={stall}")
     if stats.preemptions or stats.prefix_shared_blocks or stats.slo_tracked:
         miss = (f"{stats.slo_miss_rate:.2f}"
                 if stats.slo_miss_rate is not None else "n/a")

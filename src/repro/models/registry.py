@@ -36,8 +36,13 @@ class ModelFns:
     #   init_paged_state(cfg, num_blocks, block_size, batch, max_blocks,
     #                    dtype) -> paged decode-state pytree
     #   scatter_prefill(state, dense_batch1_cache, block_ids) -> state
+    #   prefill_paged(cfg, params, batch, state, write_ids, table,
+    #                 q_start, kv_len, last_idx) -> (logits, state) —
+    #     one prompt chunk written directly into pool blocks, attending
+    #     over already-seeded blocks (cache-seeded chunked prefill)
     init_paged_state: Callable[..., Any] = None
     scatter_prefill: Callable[..., Any] = None
+    prefill_paged: Callable[..., Any] = None
 
 
 # --- decoder-only transformers (dense / moe / vlm) -------------------------
@@ -58,6 +63,13 @@ def _tf_decode(cfg, params, tokens, state, chunk=2048):
     return transformer.decode_step(cfg, params, tokens, state, chunk=chunk)
 
 
+def _tf_prefill_paged(cfg, params, tokens, state, write_ids, table, *,
+                      q_start, kv_len, last_idx, chunk=1024):
+    return transformer.prefill_paged(cfg, params, tokens, state, write_ids,
+                                     table, q_start=q_start, kv_len=kv_len,
+                                     last_idx=last_idx, chunk=chunk)
+
+
 def _tf_state(cfg, batch, max_len, cache_dtype="bfloat16"):
     return transformer.make_cache(cfg, batch, max_len, cache_dtype,
                                   length=jnp.full((batch,), max_len - 1,
@@ -68,7 +80,8 @@ TRANSFORMER_FNS = ModelFns("dense", transformer.init, _tf_forward,
                            _tf_prefill, _tf_decode, _tf_state,
                            table=transformer.lm_table,
                            init_paged_state=transformer.make_paged_cache,
-                           scatter_prefill=transformer.scatter_prefill_blocks)
+                           scatter_prefill=transformer.scatter_prefill_blocks,
+                           prefill_paged=_tf_prefill_paged)
 
 
 # --- hybrid (zamba2) --------------------------------------------------------

@@ -5,9 +5,13 @@ size is O(1) in depth (llama3-405b's 126 layers compile as one body).
 Heterogeneous prefixes (DeepSeekMoE's first-k dense layers) are unrolled.
 
 Entry points:
-  * ``forward``      — full-sequence logits (training).
-  * ``prefill``      — logits at the last position + filled KV cache.
-  * ``decode_step``  — one token against a KV cache (serving).
+  * ``forward``       — full-sequence logits (training).
+  * ``prefill``       — logits at the last position + filled KV cache.
+  * ``prefill_paged`` — one prompt chunk written *directly* into paged
+    pool blocks (no dense bucket cache + scatter round-trip), attending
+    over already-seeded blocks, so shared prefixes and resumed histories
+    are never recomputed.
+  * ``decode_step``   — one token against a KV cache (serving).
 """
 from __future__ import annotations
 
@@ -273,9 +277,48 @@ def _paged_attend(cfg, q, k_new, v_new, pool_k, pool_v, scales,
     return out[:, None], (nk, nv)
 
 
+def _paged_prefill_attend(cfg, q, k_new, v_new, pool_k, pool_v, scales,
+                          write_ids, table, q_start, kv_len, chunk):
+    """Paged prefill for one layer: write the chunk's KV rows directly
+    into pool blocks, then attend causally over the table's blocks.
+
+    q/k_new/v_new: (1, C, H|K, D) with C a multiple of the pool block
+    size; write_ids: (C // bs,) physical block per chunk block (trash 0
+    for rows that must not land anywhere — bucket padding, and the
+    recompute-baseline's shared prefix); table: (1, max_blocks) read
+    table; q_start: (1,) absolute position of the chunk's first row;
+    kv_len: (1,) valid rows incl. this chunk.  Seeded blocks (shared
+    prefix, resumed history) are attended without being recomputed —
+    causality against absolute positions does the masking.
+    """
+    from repro.kernels.prefill_attention.ops import paged_prefill_attention
+    N, bs, K, D = pool_k.shape
+    C = q.shape[1]
+    kb = k_new[0].reshape(C // bs, bs, K, D)
+    vb = v_new[0].reshape(C // bs, bs, K, D)
+    if scales is not None:
+        k_scale, v_scale = scales
+        kq, ksc = quantize_kv(kb)
+        vq, vsc = quantize_kv(vb)
+        nk = pool_k.at[write_ids].set(kq)
+        nv = pool_v.at[write_ids].set(vq)
+        nks = k_scale.at[write_ids].set(ksc)
+        nvs = v_scale.at[write_ids].set(vsc)
+        out = paged_prefill_attention(
+            q, nk, nv, table, q_start, kv_len, k_scale=nks, v_scale=nvs,
+            softcap=cfg.attn_logit_softcap, chunk=chunk)
+        return out, (nk, nv, nks, nvs)
+    nk = pool_k.at[write_ids].set(kb.astype(pool_k.dtype))
+    nv = pool_v.at[write_ids].set(vb.astype(pool_v.dtype))
+    out = paged_prefill_attention(q, nk, nv, table, q_start, kv_len,
+                                  softcap=cfg.attn_logit_softcap,
+                                  chunk=chunk)
+    return out, (nk, nv)
+
+
 def block_apply(cfg, p, x, positions, *,
                 cache_k=None, cache_v=None, cache_scales=None, kv_len=None,
-                block_tables=None, chunk=1024):
+                block_tables=None, paged_prefill=None, chunk=1024):
     """One transformer block. Returns (x, aux, new_kv) where new_kv is
     (k, v) or (k, v, k_scale, v_scale) for the int8 cache.
 
@@ -283,7 +326,10 @@ def block_apply(cfg, p, x, positions, *,
     With cache (decode): x is (B, 1, D); the new KV row is written at
     ``kv_len`` and attention runs over the whole cache.  With
     ``block_tables`` the cache is paged: cache_k/v are (N, bs, K, D) pool
-    slices and reads gather only live blocks.
+    slices and reads gather only live blocks.  ``paged_prefill`` (a dict
+    of write_ids/table/q_start/kv_len) switches the paged path to the
+    multi-row chunk prefill: KV written straight into pool blocks,
+    attention causal over the table's blocks.
     """
     h = apply_norm(cfg, p["ln1"], x)
     # SP boundary: norm runs on the seq-sharded carry; attention needs the
@@ -297,6 +343,11 @@ def block_apply(cfg, p, x, positions, *,
             softcap=cfg.attn_logit_softcap, window=cfg.sliding_window,
             chunk=chunk)
         new_kv = (k, v)
+    elif block_tables is not None and paged_prefill is not None:
+        q, k, v = A.qkv_project(cfg, p["attn"], h, positions)
+        attn, new_kv = _paged_prefill_attend(cfg, q, k, v, cache_k, cache_v,
+                                             cache_scales, chunk=chunk,
+                                             **paged_prefill)
     elif block_tables is not None:
         q, k, v = A.qkv_project(cfg, p["attn"], h, positions)
         attn, new_kv = _paged_attend(cfg, q, k, v, cache_k, cache_v,
@@ -332,7 +383,7 @@ _REMAT_POLICIES = {
 
 
 def _scan_blocks(cfg, stacked, x, positions, *, remat, cache=None,
-                 collect_kv=False, chunk=1024):
+                 collect_kv=False, paged_prefill=None, chunk=1024):
     """Scan the homogeneous block stack. Returns (x, aux_sum, (ks, vs)).
 
     ``collect_kv`` stacks each layer's fresh K/V as scan outputs (prefill);
@@ -359,7 +410,7 @@ def _scan_blocks(cfg, stacked, x, positions, *, remat, cache=None,
         h, a, kv = block_apply(cfg, p, h, positions,
                                cache_k=ck, cache_v=cv, cache_scales=scales,
                                kv_len=cache.length, block_tables=tables,
-                               chunk=chunk)
+                               paged_prefill=paged_prefill, chunk=chunk)
         return (h, aux + a), kv
 
     body = body_cache if cache is not None else body_nocache
@@ -380,7 +431,7 @@ def _scan_blocks(cfg, stacked, x, positions, *, remat, cache=None,
 
 def _apply_backbone(cfg, params, tokens, positions, *, remat,
                     cache: KVCache | None = None, collect_kv=False,
-                    chunk=1024):
+                    paged_prefill=None, chunk=1024):
     compute_dt = dtype_of(cfg.compute_dtype)
     x = embed(params["embed"], tokens, compute_dt)
     aux_total = jnp.zeros((), jnp.float32)
@@ -399,7 +450,8 @@ def _apply_backbone(cfg, params, tokens, positions, *, remat,
                 tables = cache.block_tables
         x, a, kv = block_apply(cfg, bp, x, positions,
                                cache_k=ck, cache_v=cv, cache_scales=scales,
-                               kv_len=kl, block_tables=tables, chunk=chunk)
+                               kv_len=kl, block_tables=tables,
+                               paged_prefill=paged_prefill, chunk=chunk)
         aux_total += a
         if cache is not None or collect_kv:
             dense_caches.append(kv)
@@ -412,7 +464,8 @@ def _apply_backbone(cfg, params, tokens, positions, *, remat,
         sub = sub._replace(length=cache.length)
     x, aux, kv = _scan_blocks(cfg, params["blocks"], x, positions,
                               remat=remat, cache=sub,
-                              collect_kv=collect_kv, chunk=chunk)
+                              collect_kv=collect_kv,
+                              paged_prefill=paged_prefill, chunk=chunk)
     aux_total += aux
     x = apply_norm(cfg, params["ln_f"], x)
     new_cache = None
@@ -496,6 +549,41 @@ def prefill(cfg, params, tokens, positions=None, *, cache_dtype="bfloat16",
     lg = lm_logits(params["embed"], last, cfg.tie_embeddings,
                    cfg.final_logit_softcap)
     return lg[:, 0], cache
+
+
+def prefill_paged(cfg, params, tokens, cache, write_ids, table, *,
+                  q_start, kv_len, last_idx, chunk=1024):
+    """Cache-seeded chunked prefill: write one prompt chunk straight into
+    paged pool blocks and attend over everything already seeded.
+
+    tokens: (1, C) chunk (C a multiple of the pool block size; rows past
+    the real prompt are padding whose writes land in the trash block via
+    ``write_ids``); cache: Paged/QuantPagedKVCache whose pools are shared
+    by every slot; write_ids: (C // block_size,) physical block per chunk
+    block; table: (1, max_blocks) the request's read table; q_start: (1,)
+    absolute position of the chunk's first token; kv_len: (1,) valid KV
+    rows including this chunk's real tokens; last_idx: row whose logits
+    to return (the chunk's last real token).
+
+    Computation starts at the first unseeded token: rows before
+    ``q_start`` (shared prefix blocks, a preemption victim's surviving
+    history) are *read* through the table, never re-run — this is what
+    the bucketed dense-prefill + scatter path could not do.  Returns
+    ((1, V) logits at ``last_idx``, cache with updated pools).
+    """
+    B, C = tokens.shape
+    pos = q_start[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
+    pos = jnp.broadcast_to(pos, (B, C))
+    if cfg.m_rope:
+        pos = jnp.broadcast_to(pos[None], (3, B, C))
+    x, _, new_cache = _apply_backbone(
+        cfg, params, tokens, pos, remat=False, cache=cache, chunk=chunk,
+        paged_prefill=dict(write_ids=write_ids, table=table,
+                           q_start=q_start, kv_len=kv_len))
+    last = x[jnp.arange(B), last_idx][:, None]
+    lg = lm_logits(params["embed"], last, cfg.tie_embeddings,
+                   cfg.final_logit_softcap)
+    return lg[:, 0], new_cache
 
 
 def decode_step(cfg, params, tokens, cache, *, chunk=2048):

@@ -29,9 +29,16 @@ KV state comes in two layouts:
     — and **prefix sharing**: a prefix index maps the token content of
     full leading prompt blocks to refcounted pool blocks, so requests with
     a common prompt prefix point their leading table entries at one shared
-    copy and allocate only their tail.  (The prefix is still *recomputed*
-    by the bucketed prefill — its rows land in the trash block; dropping
-    the recompute needs a cache-seeded prefill path, a ROADMAP item.)
+    copy and allocate only their tail.  Prefill is **cache-seeded and
+    chunked**: prompt KV is written *directly* into pool blocks by
+    ``prefill_paged`` (no dense bucket cache + scatter round-trip), and
+    computation starts at the first unseeded token — a shared prefix or a
+    preemption-surviving history is read through the block table, never
+    re-run.  A ``prefill_chunk`` budget splits long prompts into
+    fixed-size chunks interleaved with decode steps, so one huge prompt
+    no longer stalls every active decode for its whole prefill
+    (SARATHI-style chunked prefill; the stall shows up as
+    ``decode_gaps`` / ``decode_stall_p99_s`` in :class:`ServeStats`).
   * **contiguous** (``paged=False`` and non-transformer families): the
     PR-1 layout — a worst-case ``(L, slots, max_len, K, D)`` state whose
     batch axis is overwritten in place per refill (`_merge_slot`).
@@ -71,10 +78,13 @@ class ServeStats:
     prefix_shared_blocks: int = 0       # table entries mapped to shared blocks
     slo_tracked: int = 0                # requests carrying a TTFT SLO
     slo_misses: int = 0                 # ... whose TTFT exceeded it
+    prefill_tokens_total: int = 0       # tokens a full recompute would run
+    prefill_tokens_computed: int = 0    # tokens actually run (rest seeded)
     kv_blocks_peak: int | None = None   # paged only: peak pool blocks in use
     kv_pool_util: float | None = None   # paged only: peak / capacity
     ttft: list = field(default_factory=list)    # per-request seconds
     tpot: list = field(default_factory=list)    # per-request seconds/token
+    decode_gaps: list = field(default_factory=list)  # s between decode steps
 
     @property
     def tokens_per_s(self) -> float:
@@ -97,6 +107,21 @@ class ServeStats:
     @property
     def mean_tpot_s(self) -> float | None:
         return float(np.mean(self.tpot)) if self.tpot else None
+
+    @property
+    def prefill_compute_frac(self) -> float | None:
+        """Fraction of prefill tokens actually computed (1.0 = nothing was
+        seeded from the cache); None when no prefill happened."""
+        return (self.prefill_tokens_computed / self.prefill_tokens_total
+                if self.prefill_tokens_total else None)
+
+    @property
+    def decode_stall_p99_s(self) -> float | None:
+        """p99 wall-clock gap between consecutive decode steps while
+        decodes were active — a long un-chunked prefill of a newly
+        admitted prompt shows up here as one giant gap."""
+        return (float(np.percentile(self.decode_gaps, 99))
+                if self.decode_gaps else None)
 
     @property
     def slo_miss_rate(self) -> float | None:
@@ -129,6 +154,11 @@ class WindowBase(NamedTuple):
     prefill_compiles: int
     preemptions: int
     prefix_shared: int
+    prefill_tokens_total: int
+    prefill_tokens_computed: int
+    decode_gap_n: int           # lifetime decode-gap count at window start
+                                # (incl. entries trimmed from the bounded
+                                # totals.decode_gaps list)
 
 
 def _merge_slot(state, slot_state, slot: jax.Array):
@@ -144,6 +174,22 @@ def _merge_slot(state, slot_state, slot: jax.Array):
         return jax.lax.dynamic_update_slice_in_dim(
             big, small.astype(big.dtype), slot, axis)
     return jax.tree_util.tree_map(leaf, state, slot_state)
+
+
+@dataclass
+class _PrefillJob:
+    """One slot's in-progress cache-seeded chunked prefill.  Blocks are
+    *materialized* (prefix lookup + share + alloc) lazily at the first
+    chunk, not at admission: jobs advance strictly oldest-first, so by
+    the time a job starts computing, every earlier same-step admission
+    has completed and published its prefix blocks — chunked mode seeds
+    common prefixes exactly like the un-chunked path."""
+    req: Request
+    tokens: np.ndarray          # prefill_tokens snapshot (prompt + resume)
+    nb: int                     # prompt blocks in the request's table
+    keys: list                  # prefix digests, published at completion
+    pos: int = -1               # rows already in the pool; -1 = blocks
+                                # not yet materialized
 
 
 class ServingEngine:
@@ -163,7 +209,9 @@ class ServingEngine:
                  paged: bool | None = None, block_size: int = 16,
                  pool_blocks: int | None = None,
                  cache_dtype: str = "bfloat16",
-                 preemption: bool = True, prefix_sharing: bool = True):
+                 preemption: bool = True, prefix_sharing: bool = True,
+                 prefill_chunk: int | None = None,
+                 seeded_prefill: bool = True):
         self.cfg = cfg
         self.params = params
         self.fns = fns_for(cfg)
@@ -179,26 +227,57 @@ class ServingEngine:
         self.block_size = block_size
         self.cache_dtype = cache_dtype
         self.prefix_sharing = prefix_sharing and paged
+        # cache-seeded prefill: computation starts at the first unseeded
+        # token; off = the recompute baseline (shared blocks still mapped,
+        # but every prompt token re-run, its rows discarded into trash)
+        self.seeded_prefill = seeded_prefill and paged
+        if prefill_chunk is not None:
+            if not paged:
+                raise ValueError("prefill_chunk needs the paged KV engine")
+            if prefill_chunk < block_size or prefill_chunk % block_size:
+                raise ValueError(
+                    f"prefill_chunk={prefill_chunk} must be a positive "
+                    f"multiple of block_size={block_size} (chunk starts "
+                    f"must stay block-aligned for the pool writes)")
+        self.prefill_chunk = prefill_chunk
         # prefix index: chained digest of the tokens of each full leading
         # block -> (block id, alloc generation); entries are validated
         # against the pool on lookup, so a freed-and-reused block can
         # never be shared stale
         self._prefix_index: dict[bytes, tuple[int, int]] = {}
         self.prefix_shared_total = 0         # lifetime shared table entries
+        # slot -> in-progress chunked prefill (insertion order = service
+        # order); drained by the executor under the prefill_chunk budget
+        self._prefilling: dict[int, _PrefillJob] = {}
+        self._last_decode_end: float | None = None
+        self._gaps_dropped = 0               # decode_gaps entries trimmed
+        if paged and getattr(cfg, "sliding_window", 0):
+            # the paged attention paths (prefill and decode) are
+            # full-causal; serving a sliding-window arch through them
+            # would silently diverge from the contiguous engine
+            raise ValueError(
+                f"family {cfg.family!r} uses sliding_window="
+                f"{cfg.sliding_window}, which the paged KV attention "
+                f"paths do not mask — serve it with paged=False")
         if paged:
             worst = batch_slots * -(-max_len // block_size)
             self.pool = KVBlockPool(pool_blocks or worst, block_size)
             self.max_blocks = self.pool.blocks_for(max_len)
+            self._prefix_cap = 8 * self.pool.capacity
             # host mirrors of the device block tables / lengths: growth and
             # slot retirement are numpy writes, re-injected every step
             self._tables = np.zeros((batch_slots, self.max_blocks), np.int32)
             self._lengths = np.zeros((batch_slots,), np.int32)
-            self._scatter = jax.jit(self.fns.scatter_prefill)
-            # bucketed prefill: cache sized to the bucket, logits read at
-            # the true prompt end — one compile per power-of-two bucket
-            self._prefill_bucketed = jax.jit(
-                lambda p, b: self.fns.prefill(cfg, p, b, max_len=None,
-                                              chunk=chunk))
+            if self.fns.prefill_paged is None:
+                raise ValueError(f"family {cfg.family!r} has paged KV but "
+                                 f"no paged prefill (ModelFns.prefill_paged"
+                                 f" is None)")
+            # cache-seeded chunked prefill: prompt KV written directly
+            # into pool blocks; one compile per padded chunk length
+            self._prefill_paged = jax.jit(
+                lambda p, t, s, w, tb, qs, kl, li: self.fns.prefill_paged(
+                    cfg, p, t, s, w, tb, q_start=qs, kv_len=kl,
+                    last_idx=li, chunk=chunk))
         else:
             self.pool = None
         self.scheduler = ContinuousScheduler(batch_slots, pool=self.pool,
@@ -262,30 +341,17 @@ class ServingEngine:
         return b
 
     def _prefill_one(self, req: Request):
-        """Chunked prefill of one prompt -> ((V,) logits, batch-1 state).
+        """Dense prefill of one prompt -> ((V,) logits, batch-1 state) —
+        the contiguous-KV path (paged engines prefill straight into pool
+        blocks via :meth:`_advance_prefill`).
 
         Uses ``req.prefill_tokens`` — prompt plus any tokens generated
         before a preemption — so an evicted request resumes recompute-style
-        with its history re-prefilled (the bucketed path keeps that cheap).
-
-        Paged mode right-pads the prompt to a power-of-two bucket (compile
-        cache is per bucket, not per length) and reads logits at the true
-        last token; the returned dense bucket-sized cache is then scattered
-        into the slot's pool blocks by the caller."""
+        with its history re-prefilled."""
         prompt = req.prefill_tokens
-        if not self.paged:
-            self._prefill_shapes.add((1, len(prompt)))
-            batch = self._batch_for(prompt[None])
-            last, state = self._prefill(self.params, batch)
-            return np.asarray(last[0]), state
-        P = len(prompt)
-        bucket = self._bucket_len(P)
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, :P] = prompt
-        batch = self._batch_for(toks)
-        batch["last_pos"] = jnp.asarray([P - 1], jnp.int32)
-        self._prefill_shapes.add((1, bucket))
-        last, state = self._prefill_bucketed(self.params, batch)
+        self._prefill_shapes.add((1, len(prompt)))
+        batch = self._batch_for(prompt[None])
+        last, state = self._prefill(self.params, batch)
         return np.asarray(last[0]), state
 
     def _init_state(self):
@@ -346,7 +412,11 @@ class ServingEngine:
 
     def _register_prefix(self, keys: list[bytes], req: Request) -> None:
         """Publish the request's own *full* prompt blocks under their token
-        prefix so later requests with the same leading tokens share them.
+        prefix so later requests with the same leading tokens share (and,
+        seeded, skip recomputing) them.  Called only once the blocks'
+        rows are actually in the pool — a mid-prefill publication would
+        let a concurrent admission seed from unwritten blocks.
+
         A live publication wins, but a dead entry (block freed or reused
         since) is overwritten — otherwise one round of pool churn would
         leave dead tombstones blocking re-publication for that prefix."""
@@ -356,44 +426,144 @@ class ServingEngine:
                 continue
             bid = req.block_ids[j]
             self._prefix_index[keys[j]] = (bid, self.pool.generation(bid))
-        if len(self._prefix_index) > 8 * self.pool.capacity:
-            self._prefix_index = {
-                k: (b, g) for k, (b, g) in self._prefix_index.items()
-                if self.pool.block_live(b, g)}
+        if len(self._prefix_index) > self._prefix_cap:
+            # two-phase trim: stale-generation entries go first, and only
+            # if that is not enough are *live* entries capped —
+            # oldest-published first (dict order) — so hot shared prefixes
+            # are never silently un-published while dead tombstones
+            # survive the sweep
+            live = {k: e for k, e in self._prefix_index.items()
+                    if self.pool.block_live(*e)}
+            for k in list(live)[:max(0, len(live) - self._prefix_cap)]:
+                del live[k]
+            self._prefix_index = live
 
-    def _admit_paged(self, slot: int, req: Request, state1) -> None:
-        """Materialize an admitted request's prompt blocks and scatter the
-        bucket-sized prefill cache into them.
+    def _admit_paged(self, slot: int, req: Request) -> None:
+        """Queue an admitted request's cache-seeded chunked prefill
+        (block materialization is deferred to its first chunk — see
+        :meth:`_materialize_blocks`).
 
-        Leading blocks whose full token prefix is already in the pool are
-        *shared* (refcount bumped, reservation tail returned) instead of
-        re-allocated; their scatter ids stay at the trash block, so the
-        recomputed prefix rows are discarded and the shared copy is the one
-        every holder reads.  Entries past the prompt's blocks also point at
-        the trash block so bucket-padding rows land there."""
+        The decode-state table row stays at the trash block until the
+        prefill completes: the in-flight batched decode keeps writing
+        this slot's (discarded) row, and must not corrupt half-filled
+        prompt blocks."""
         toks = req.prefill_tokens
         P = len(toks)
         nb = self.pool.blocks_for(P)
         keys = self._prefix_keys(toks) if self.prefix_sharing else []
-        shared = self._lookup_prefix(keys)
+        self._tables[slot] = 0
+        self._lengths[slot] = 0
+        self._prefilling[slot] = _PrefillJob(req=req, tokens=toks,
+                                             nb=nb, keys=keys)
+        self.totals.prefill_tokens_total += P
+
+    def _materialize_blocks(self, job: _PrefillJob) -> None:
+        """First-chunk block materialization: map shared prefix blocks
+        (seeding past them when enabled) and allocate the tail from the
+        reservation the scheduler took at admission.  Deferred to here —
+        not admission — so a job admitted in the same batch as an
+        identical-prefix predecessor still finds the predecessor's
+        published blocks (jobs advance oldest-first, so the predecessor
+        has completed by the time this one starts)."""
+        req = job.req
+        P = len(job.tokens)
+        bs = self.block_size
+        shared = self._lookup_prefix(job.keys)[:(P - 1) // bs]
         ns = len(shared)
         if ns:
             self.pool.share(shared)
             self.pool.unreserve(ns)          # shared blocks need no copy
             self.prefix_shared_total += ns
-        own = self.pool.alloc_reserved(nb - ns)
+        own = self.pool.alloc_reserved(job.nb - ns)
         req.block_ids = shared + own
         req.shared_blocks = ns
-        req.blocks_reserved -= nb           # remaining = decode-growth tail
-        bucket = state1.k.shape[2]
-        ids = np.zeros((bucket // self.block_size,), np.int32)
-        ids[ns:nb] = own
-        self._state = self._scatter(self._state, state1, jnp.asarray(ids))
-        self._tables[slot] = 0
-        self._tables[slot, :nb] = req.block_ids
-        self._lengths[slot] = P
-        if self.prefix_sharing:
-            self._register_prefix(keys, req)
+        req.blocks_reserved -= job.nb       # remaining = decode-growth tail
+        job.pos = ns * bs if self.seeded_prefill else 0
+
+    def _advance_prefill(self, slot: int, budget: int | None = None) -> int:
+        """Run one chunk of a slot's prefill straight into its pool blocks;
+        returns the number of real prompt tokens computed.
+
+        Each call processes up to ``prefill_chunk`` tokens — and no more
+        than ``budget`` (floored to a block multiple), so a step never
+        overspends its prefill budget across several jobs — right-padded
+        to a power-of-two bucket capped at the chunk; the jitted
+        signature is keyed by the padded chunk length, not the prompt
+        length (the whole remaining prompt when un-chunked).  Rows that
+        must not land anywhere (bucket padding past the prompt, and the
+        recompute-baseline's shared-prefix rows) write to the trash
+        block.  On the final chunk the slot's decode table/length go live
+        and the prompt's full blocks are published to the prefix index.
+        """
+        job = self._prefilling[slot]
+        req = job.req
+        if job.pos < 0:
+            self._materialize_blocks(job)
+        P = len(job.tokens)
+        start = job.pos
+        remaining = P - start
+        bucket = self._bucket_len(remaining)
+        bs = self.block_size
+        cap = self.prefill_chunk
+        if cap is not None and budget is not None and budget < cap:
+            # spend only a power-of-two multiple of block_size of the
+            # leftover budget: an arbitrary block-multiple width would be
+            # a never-warmed jit signature compiling on the hot path
+            cap = bs
+            while cap * 2 <= budget:
+                cap *= 2
+        Cpad = min(cap, bucket) if cap else bucket
+        real = min(remaining, Cpad)
+        b0 = start // bs
+        chunk_toks = np.zeros((1, Cpad), np.int32)
+        chunk_toks[0, :real] = job.tokens[start:start + real]
+        wids = np.zeros((Cpad // bs,), np.int32)
+        for j in range(Cpad // bs):
+            lb = b0 + j                      # logical block of this write
+            if req.shared_blocks <= lb < job.nb:
+                wids[j] = req.block_ids[lb]
+        # read table sliced to the blocks this chunk can actually see
+        # (rounded up to a power of two): the attention gather scales
+        # with rows seeded-so-far, not the slot's worst-case table width,
+        # and the compile cache is keyed by (chunk, seeded) shape
+        mb_need = -(-(start + real) // bs)
+        mb_eff = 1
+        while mb_eff < mb_need:
+            mb_eff *= 2
+        mb_eff = min(mb_eff, self.max_blocks)
+        tbl = np.zeros((1, mb_eff), np.int32)
+        nb_vis = min(job.nb, mb_eff)
+        tbl[0, :nb_vis] = req.block_ids[:nb_vis]
+        self._prefill_shapes.add((1, Cpad, mb_eff))
+        last, self._state = self._prefill_paged(
+            self.params, jnp.asarray(chunk_toks), self._state,
+            jnp.asarray(wids), jnp.asarray(tbl),
+            jnp.asarray([start], jnp.int32),
+            jnp.asarray([start + real], jnp.int32),
+            jnp.int32(real - 1))
+        self.totals.prefill_tokens_computed += real
+        job.pos = start + real
+        if job.pos == P:                     # logits of the last real token
+            del self._prefilling[slot]
+            self._tables[slot] = 0
+            self._tables[slot, :job.nb] = req.block_ids
+            self._lengths[slot] = P
+            self._set_last(slot, np.asarray(last[0]))
+            if self.prefix_sharing:
+                self._register_prefix(job.keys, req)
+            req.state = RequestState.DECODE
+        return real
+
+    def _set_last(self, slot: int, last1: np.ndarray) -> None:
+        """Store one slot's next-token logits (lazy-allocating the batch
+        buffer, and un-aliasing it when it is a read-only view of a jax
+        buffer from the last decode step)."""
+        if self._last is None:
+            self._last = np.zeros((self.slots, last1.shape[-1]),
+                                  last1.dtype)
+        if not self._last.flags.writeable:
+            self._last = self._last.copy()
+        self._last[slot] = last1
 
     def _retire_slot(self, slot: int) -> None:
         """Point a finished slot's table at the trash block before its
@@ -420,36 +590,58 @@ class ServingEngine:
             length=jnp.asarray(self._lengths))
 
     def _step(self) -> bool:
-        """One executor iteration: refill free slots (chunked prefill),
-        sample one token per active slot (vectorized), advance the batched
-        decode step.  Returns False when there was no work."""
+        """One executor iteration: refill free slots, spend the chunked
+        prefill budget, sample one token per decoding slot (vectorized),
+        advance the batched decode step.  Returns False when there was no
+        work."""
         admitted = self.scheduler.admit()
         if self.paged:
             # trash the tables of any slots admit() preempted *before*
-            # scattering new prompts into the freed blocks: the victim slot
+            # prefilling new prompts into the freed blocks: the victim slot
             # keeps writing its (discarded) decode row to the trash block
             for slot, _ in self.scheduler.drain_preempted():
                 self._retire_slot(slot)
+                self._prefilling.pop(slot, None)
         for slot, req in admitted:
-            last1, state1 = self._prefill_one(req)
             self.totals.prefills += 1
             if self._state is None:
                 self._state = self._init_state()
-                self._last = np.zeros((self.slots, last1.shape[-1]),
-                                      last1.dtype)
             if self.paged:
-                self._admit_paged(slot, req, state1)
+                self._admit_paged(slot, req)
+                if self.prefill_chunk is None:
+                    # un-chunked: finish this prompt before admitting the
+                    # next, so its published prefix blocks are sharable
+                    # (and seedable) by the very next admission
+                    while slot in self._prefilling:
+                        self._advance_prefill(slot)
             else:
+                last1, state1 = self._prefill_one(req)
+                self.totals.prefill_tokens_total += len(req.prefill_tokens)
+                self.totals.prefill_tokens_computed += \
+                    len(req.prefill_tokens)
                 self._state = self._merge(self._state, state1,
                                           jnp.int32(slot))
-            if not self._last.flags.writeable:  # np view of a jax buffer
-                self._last = self._last.copy()
-            self._last[slot] = last1
-            req.state = RequestState.DECODE
+                self._set_last(slot, last1)
+                req.state = RequestState.DECODE
 
-        active = self.scheduler.active()
+        if self._prefilling:
+            # chunked mode: spend at most prefill_chunk prompt tokens per
+            # executor step, oldest admission first, then fall through to
+            # the decode step — a long prompt prefills interleaved with
+            # decodes instead of stalling them for its whole length.  The
+            # remaining budget caps each chunk, so finishing one job and
+            # starting the next can never overspend the step.
+            budget = self.prefill_chunk
+            while budget >= self.block_size and self._prefilling:
+                budget -= self._advance_prefill(
+                    next(iter(self._prefilling)), budget)
+
+        active = self.scheduler.decoding()
         if not active:
-            return False
+            # no decodes to stall — a prefill-only period is not a decode
+            # gap, so the cadence anchor resets either way
+            self._last_decode_end = None
+            return bool(self._prefilling)
 
         toks = self._sample_active(active)
         now = time.monotonic()
@@ -470,15 +662,26 @@ class ServingEngine:
                 if req.on_finish is not None:
                     req.on_finish(req)
 
-        still = self.scheduler.active()
+        still = self.scheduler.decoding()
         if still:        # someone needs next-token logits
             if self.paged:
                 self._grow_paged(still)
             last, self._state = self._decode(
                 self.params, jnp.asarray(feed)[:, None], self._state)
             self._last = np.asarray(last)
+            now = time.monotonic()
+            if self._last_decode_end is not None:
+                gaps = self.totals.decode_gaps
+                gaps.append(now - self._last_decode_end)
+                if len(gaps) > 65536:        # bound the lifetime list: a
+                    drop = len(gaps) // 2    # service-mode engine decodes
+                    del gaps[:drop]          # indefinitely
+                    self._gaps_dropped += drop
+            self._last_decode_end = now
             self.totals.decode_steps += 1
             self.totals.occupancy_sum += len(still) / self.slots
+        else:
+            self._last_decode_end = None     # cadence broken, not stalled
         return True
 
     # -- measurement windows ---------------------------------------------------
@@ -497,7 +700,10 @@ class ServingEngine:
             occupancy_sum=self.totals.occupancy_sum,
             prefill_compiles=self.prefill_compiles,
             preemptions=self.scheduler.preemptions,
-            prefix_shared=self.prefix_shared_total)
+            prefix_shared=self.prefix_shared_total,
+            prefill_tokens_total=self.totals.prefill_tokens_total,
+            prefill_tokens_computed=self.totals.prefill_tokens_computed,
+            decode_gap_n=self._gaps_dropped + len(self.totals.decode_gaps))
 
     def collect_window(self, base: "WindowBase", requests: list[Request],
                        wall_s: float) -> ServeStats:
@@ -513,6 +719,12 @@ class ServingEngine:
         stats.preemptions = self.scheduler.preemptions - base.preemptions
         stats.prefix_shared_blocks = (self.prefix_shared_total
                                       - base.prefix_shared)
+        stats.prefill_tokens_total = (self.totals.prefill_tokens_total
+                                      - base.prefill_tokens_total)
+        stats.prefill_tokens_computed = (self.totals.prefill_tokens_computed
+                                         - base.prefill_tokens_computed)
+        stats.decode_gaps = list(self.totals.decode_gaps[
+            max(0, base.decode_gap_n - self._gaps_dropped):])
         if self.pool is not None:
             stats.kv_blocks_peak = self.pool.peak_used
             stats.kv_pool_util = self.pool.utilization
@@ -723,6 +935,9 @@ class MultiReplicaEngine:
             stats.prefill_compiles += sub.prefill_compiles
             stats.preemptions += sub.preemptions
             stats.prefix_shared_blocks += sub.prefix_shared_blocks
+            stats.prefill_tokens_total += sub.prefill_tokens_total
+            stats.prefill_tokens_computed += sub.prefill_tokens_computed
+            stats.decode_gaps.extend(sub.decode_gaps)
             if sub.kv_blocks_peak is not None:
                 stats.kv_blocks_peak = ((stats.kv_blocks_peak or 0)
                                         + sub.kv_blocks_peak)

@@ -11,7 +11,10 @@ and the slot bookkeeping: a fixed number of decode slots per replica, an
 admission queue feeding them, and thread-safe submit so a replica pull-loop
 (or a live traffic source) can admit requests mid-stream.  The moment a
 slot's request finishes, the next queued request is admitted into that slot
-— no lock-step waves, no length bucketing.
+— no lock-step waves, no length bucketing.  With the engine's chunked
+prefill a request may stay in PREFILL across several executor steps
+(its prompt prefills one chunk at a time between decode steps); only
+:meth:`ContinuousScheduler.decoding` slots join the batched decode.
 
 Admission is a **priority queue**, not FIFO: requests are ordered by
 ``priority`` (higher serves first), then by TTFT-SLO deadline
@@ -293,6 +296,16 @@ class ContinuousScheduler:
     def active(self) -> list[tuple[int, Request]]:
         with self._lock:
             return [(i, r) for i, r in enumerate(self.slots) if r is not None]
+
+    def decoding(self) -> list[tuple[int, Request]]:
+        """Slots whose request is past prefill — the only ones the batched
+        decode step samples and advances.  With chunked prefill a request
+        can sit in PREFILL across many executor steps while decode steps
+        run around it, so ``active`` (slot occupancy) and ``decoding``
+        (decode participation) are no longer the same set."""
+        with self._lock:
+            return [(i, r) for i, r in enumerate(self.slots)
+                    if r is not None and r.state is RequestState.DECODE]
 
     def release(self, slot: int) -> Request:
         """Free a slot whose request finished (state already DONE); drops

