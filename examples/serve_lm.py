@@ -4,15 +4,20 @@ multi-NCS pattern at LM scale) + tokens/s/W reporting.
 Each replica keeps a fixed-slot decode batch saturated: a finished slot is
 refilled by a chunked prefill of the next queued request (QUEUED -> PREFILL
 -> DECODE -> DONE lifecycle in `repro.serving.scheduler`).  With more than
-one replica, requests are dispatched individually to the least-loaded
-replica through `repro.core.offload`'s split-phase protocol and collected
-out of order, so one slow request never blocks the rest.  Admission is
+one replica, the `repro.serving.router.ReplicaRouter` dispatches requests
+individually — to the replica already holding the prompt's longest prefix
+(so cache-seeded prefill fires fleet-wide), falling back to block-aware
+load (free KV blocks + queued prefill tokens, not raw request count) —
+through `repro.core.offload`'s split-phase protocol, collected out of
+order; an idle replica steals queued requests off a backlogged peer
+(`--no-affinity` / `--no-steal` switch either mechanism off).  Admission is
 SLO-aware: every third request here carries `priority=1` and a TTFT SLO,
 so it is admitted ahead of the backlog (and, under KV-block pressure, may
 preempt a lower-priority decode).  Stats include TTFT p50/p99, TPOT, slot
 occupancy, SLO miss rate, and (paged) KV-pool peaks.
 
-  PYTHONPATH=src python examples/serve_lm.py [--replicas 2]
+  PYTHONPATH=src python examples/serve_lm.py [--replicas 2] [--no-affinity]
+      [--no-steal]
 """
 import argparse
 
@@ -22,7 +27,8 @@ import numpy as np
 from repro.configs import registry as arch_registry
 from repro.core.power import tpu_serving_report
 from repro.models.registry import fns_for
-from repro.serving.engine import MultiReplicaEngine, Request, ServingEngine
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.router import ReplicaRouter
 from repro.serving.sampler import greedy, temperature
 
 
@@ -31,6 +37,12 @@ def main():
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--replicas", type=int, default=2)
     ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--no-affinity", action="store_true",
+                    help="route by block-aware load alone (no fleet-wide "
+                         "prefix-affinity dispatch)")
+    ap.add_argument("--no-steal", action="store_true",
+                    help="idle replicas no longer steal queued requests "
+                         "from backlogged peers")
     args = ap.parse_args()
 
     cfg = arch_registry.smoke(args.arch)
@@ -53,10 +65,14 @@ def main():
     if args.replicas == 1:
         stats = replicas[0].serve(reqs)
     else:
-        stats = MultiReplicaEngine(replicas).serve(reqs)
+        stats = ReplicaRouter(replicas, affinity=not args.no_affinity,
+                              steal=not args.no_steal).serve(reqs)
     print(f"{stats.requests} requests -> {stats.tokens} tokens in "
           f"{stats.wall_s:.2f}s  ({stats.tokens_per_s:.1f} tok/s, "
           f"slot occupancy {stats.slot_occupancy:.2f})")
+    if args.replicas > 1:
+        print(f"router: affinity_hits={stats.router_affinity_hits}  "
+              f"steals={stats.router_steals}")
     if stats.slo_miss_rate is not None:
         print(f"slo miss rate {stats.slo_miss_rate:.2f}  "
               f"preemptions {stats.preemptions}  "

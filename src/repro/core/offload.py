@@ -14,8 +14,10 @@ NCSw (paper §3) maps onto this module as follows:
 Beyond the paper (1000+-node posture): deadline-based straggler reissue
 (a stuck device's item is re-dispatched to the next free target; first
 result wins), dynamic least-loaded scheduling as an alternative to static
-round-robin, and target groups so one engine can drive heterogeneous pools
-(the paper's "subset on a GPU, subsets on VPU groups").
+round-robin, a pluggable placement hook (``scheduler=callable``) so higher
+layers like the serving replica router can score targets themselves, and
+target groups so one engine can drive heterogeneous pools (the paper's
+"subset on a GPU, subsets on VPU groups").
 
 Two collection disciplines coexist:
 
@@ -207,9 +209,16 @@ class OffloadEngine:
     """Coordinates N targets with the paper's split-phase protocol."""
 
     def __init__(self, targets: Sequence[Target], *,
-                 scheduler: str = "round_robin",
+                 scheduler: str | Callable[[list[Target], Any], Target]
+                 = "round_robin",
                  deadline_s: float | None = None):
-        assert scheduler in ("round_robin", "least_loaded")
+        # ``scheduler`` may be a placement hook: callable(targets, payload)
+        # -> Target.  Higher layers (the serving ReplicaRouter) score
+        # placement themselves — prefix affinity, block-aware load — while
+        # riding this engine's split-phase submit/drain/reissue machinery
+        # unchanged.
+        assert callable(scheduler) or scheduler in ("round_robin",
+                                                    "least_loaded")
         self.targets = list(targets)
         self.scheduler = scheduler
         self.deadline_s = deadline_s
@@ -243,7 +252,9 @@ class OffloadEngine:
                 f"{len(errors)} targets failed to close: "
                 + "; ".join(repr(e) for e in errors)) from errors[0]
 
-    def _pick(self) -> Target:
+    def _pick(self, payload: Any) -> Target:
+        if callable(self.scheduler):
+            return self.scheduler(self.targets, payload)
         if self.scheduler == "round_robin":
             t = self.targets[self._rr % len(self.targets)]
             self._rr += 1
@@ -260,7 +271,7 @@ class OffloadEngine:
         """
         item = WorkItem(seq=self._seq, payload=payload, on_done=on_done)
         self._seq += 1
-        self._pick().load_tensor(item)
+        self._pick(payload).load_tensor(item)
         return item
 
     def submit_async(self, payload: Any) -> WorkItem:

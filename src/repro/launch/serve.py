@@ -14,6 +14,10 @@ Example:
       --prompt-len 96 --prefill-chunk 32
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
       --no-seeded-prefill
+  # replica-router policy A/B (multi-replica only): strip prefix-affinity
+  # routing and idle-replica work stealing back to least-loaded dispatch:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
+      --replicas 2 --no-affinity --no-steal
 """
 from __future__ import annotations
 
@@ -25,7 +29,8 @@ import numpy as np
 from repro.configs import registry as arch_registry
 from repro.core.power import tpu_serving_report
 from repro.models.registry import fns_for
-from repro.serving.engine import MultiReplicaEngine, Request, ServingEngine
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.router import ReplicaRouter
 from repro.serving.sampler import greedy, temperature
 
 
@@ -40,7 +45,20 @@ def main() -> int:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=8)
-    ap.add_argument("--replicas", type=int, default=1)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="replica count; >1 routes individual requests "
+                         "through the ReplicaRouter (prefix-affinity + "
+                         "block-aware placement, idle replicas steal "
+                         "queued work)")
+    ap.add_argument("--no-affinity", action="store_true",
+                    help="multi-replica only: disable prefix-affinity "
+                         "routing (requests place by block-aware load "
+                         "alone, so identical prefixes land on arbitrary "
+                         "replicas and seeded prefill only fires locally)")
+    ap.add_argument("--no-steal", action="store_true",
+                    help="multi-replica only: disable work stealing (an "
+                         "idle replica no longer pulls queued requests "
+                         "off a backlogged peer)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--contiguous-kv", action="store_true",
@@ -110,7 +128,9 @@ def main() -> int:
     if args.replicas > 1:
         replicas = [ServingEngine(cfg, params, **kw)
                     for _ in range(args.replicas)]
-        stats = MultiReplicaEngine(replicas).serve(reqs)
+        router = ReplicaRouter(replicas, affinity=not args.no_affinity,
+                               steal=not args.no_steal)
+        stats = router.serve(reqs)
     else:
         eng = ServingEngine(cfg, params, **kw)
         stats = (eng.serve_wave(reqs) if args.mode == "wave"
@@ -132,6 +152,9 @@ def main() -> int:
               f"/{stats.prefill_tokens_total} computed "
               f"({stats.prefill_compute_frac:.0%})  "
               f"decode_stall_p99={stall}")
+    if args.replicas > 1:
+        print(f"router: affinity_hits={stats.router_affinity_hits}  "
+              f"steals={stats.router_steals}")
     if stats.preemptions or stats.prefix_shared_blocks or stats.slo_tracked:
         miss = (f"{stats.slo_miss_rate:.2f}"
                 if stats.slo_miss_rate is not None else "n/a")

@@ -5,11 +5,12 @@ replica, possibly TP/EP-sharded over a submesh) plays the role of one NCS
 device.  Within a replica, :class:`ServingEngine` is the executor for a
 :class:`~repro.serving.scheduler.ContinuousScheduler`: it keeps a fixed-slot
 decode batch alive and refills a slot with a chunked prefill the moment its
-request finishes — no lock-step waves, no length bucketing.  Across
-replicas, :class:`MultiReplicaEngine` has each replica pull individual
-requests from a shared queue through `repro.core.offload`'s split-phase
-protocol (least-loaded dispatch, out-of-order collection), so a slow
-request on one replica never blocks completions elsewhere.
+request finishes — no lock-step waves, no length bucketing.  Cross-replica
+placement lives in `repro.serving.router`: :class:`~repro.serving.router.
+ReplicaRouter` dispatches individual requests with prefix-affinity +
+block-aware scoring and steals queued work back onto idle replicas
+(``MultiReplicaEngine`` / ``ReplicaTarget`` moved there; importing them
+from this module still works but warns).
 
 Request lifecycle: QUEUED -> PREFILL -> DECODE -> DONE (see scheduler.py).
 
@@ -51,18 +52,53 @@ from __future__ import annotations
 import hashlib
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, fields
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.offload import OffloadEngine, Target, WorkItem
 from repro.models.registry import fns_for
 from repro.serving.kv_pool import CapacityError, KVBlockPool
-from repro.serving.scheduler import ContinuousScheduler, Request, RequestState
+from repro.serving.scheduler import (ContinuousScheduler, LoadSnapshot,
+                                     Request, RequestState)
 from repro.serving.sampler import Sampler  # noqa: F401 (re-export)
+
+
+# Declarative multi-replica merge spec: every ServeStats field MUST have a
+# rule here — tests/test_router.py enforces the bijection — so a new field
+# can never silently vanish from fleet aggregation (the bug class behind
+# PR-3's "pool peaks never populated" fix, previously re-invitable by any
+# field added to ServeStats but not to the hand-written merge loop).
+#   sum      — additive counter
+#   max      — window-level maximum (wall clock)
+#   extend   — per-request / per-step sample lists, concatenated
+#   opt_sum  — None-aware sum: stays None only when every input is None
+#   derived  — recomputed by the merging caller from already-merged fields
+#              (never copied across: a ratio of sums is not a sum of ratios)
+MERGE_RULES: dict[str, str] = {
+    "requests": "sum",
+    "tokens": "sum",
+    "wall_s": "max",
+    "prefills": "sum",
+    "decode_steps": "sum",
+    "occupancy_sum": "sum",
+    "prefill_compiles": "sum",
+    "preemptions": "sum",
+    "prefix_shared_blocks": "sum",
+    "slo_tracked": "sum",
+    "slo_misses": "sum",
+    "prefill_tokens_total": "sum",
+    "prefill_tokens_computed": "sum",
+    "router_steals": "sum",
+    "router_affinity_hits": "sum",
+    "kv_blocks_peak": "opt_sum",
+    "kv_pool_util": "derived",      # merged peak / combined capacity
+    "ttft": "extend",
+    "tpot": "extend",
+    "decode_gaps": "extend",
+}
 
 
 @dataclass
@@ -80,6 +116,8 @@ class ServeStats:
     slo_misses: int = 0                 # ... whose TTFT exceeded it
     prefill_tokens_total: int = 0       # tokens a full recompute would run
     prefill_tokens_computed: int = 0    # tokens actually run (rest seeded)
+    router_steals: int = 0              # requests migrated to an idle replica
+    router_affinity_hits: int = 0       # requests routed onto their prefix
     kv_blocks_peak: int | None = None   # paged only: peak pool blocks in use
     kv_pool_util: float | None = None   # paged only: peak / capacity
     ttft: list = field(default_factory=list)    # per-request seconds
@@ -130,6 +168,35 @@ class ServeStats:
         return self.slo_misses / self.slo_tracked if self.slo_tracked \
             else None
 
+    def merge_from(self, sub: "ServeStats") -> "ServeStats":
+        """Fold another window's stats into this one, field by field, under
+        :data:`MERGE_RULES`.  Raises on a field without a rule, so adding a
+        ``ServeStats`` field without deciding its fleet semantics fails the
+        first multi-replica aggregation (and the rule-coverage test)
+        instead of silently dropping the field."""
+        for f in fields(self):
+            rule = MERGE_RULES.get(f.name)
+            if rule is None:
+                raise ValueError(
+                    f"ServeStats field {f.name!r} has no merge rule; add "
+                    f"it to MERGE_RULES (sum/max/extend/opt_sum/derived)")
+            a, b = getattr(self, f.name), getattr(sub, f.name)
+            if rule == "sum":
+                setattr(self, f.name, a + b)
+            elif rule == "max":
+                setattr(self, f.name, max(a, b))
+            elif rule == "extend":
+                a.extend(b)
+            elif rule == "opt_sum":
+                if b is not None:
+                    setattr(self, f.name, (a or 0) + b)
+            elif rule == "derived":
+                pass                     # recomputed by the caller post-merge
+            else:
+                raise ValueError(f"unknown merge rule {rule!r} "
+                                 f"for ServeStats.{f.name}")
+        return self
+
     def fill_request_metrics(self, requests: list[Request]) -> None:
         for r in requests:
             if r.ttft_s is not None:
@@ -159,6 +226,27 @@ class WindowBase(NamedTuple):
     decode_gap_n: int           # lifetime decode-gap count at window start
                                 # (incl. entries trimmed from the bounded
                                 # totals.decode_gaps list)
+
+
+def prefix_digests(tokens: np.ndarray, block_size: int) -> list[bytes]:
+    """One chained digest per *full* leading block of ``tokens``: digest
+    ``j`` covers the tokens of blocks 0..j.  Chaining keeps the whole key
+    list O(prompt) — slicing ``tokens[:(j+1)*bs]`` fresh per key would be
+    O(prompt^2) bytes hashed on the executor hot path.
+
+    This is the shared prefix-identity scheme: each engine's per-replica
+    prefix index and the :class:`~repro.serving.router.ReplicaRouter`'s
+    fleet-level affinity index key on the *same* digests, so "which replica
+    already holds this prefix" and "which pool block holds it there" are
+    answers to one question."""
+    bs = block_size
+    h = hashlib.sha1()
+    keys: list[bytes] = []
+    for j in range(len(tokens) // bs):
+        h.update(np.ascontiguousarray(tokens[j * bs:(j + 1) * bs],
+                                      dtype=np.int32).tobytes())
+        keys.append(h.digest())
+    return keys
 
 
 def _merge_slot(state, slot_state, slot: jax.Array):
@@ -380,18 +468,9 @@ class ServingEngine:
         return toks
 
     def _prefix_keys(self, tokens: np.ndarray) -> list[bytes]:
-        """One chained digest per *full* leading block: key ``j`` covers
-        the tokens of blocks 0..j.  Chaining keeps the whole key list
-        O(prompt) — slicing ``tokens[:(j+1)*bs]`` fresh per key would be
-        O(prompt^2) bytes hashed on the executor hot path."""
-        bs = self.block_size
-        h = hashlib.sha1()
-        keys: list[bytes] = []
-        for j in range(len(tokens) // bs):
-            h.update(np.ascontiguousarray(tokens[j * bs:(j + 1) * bs],
-                                          dtype=np.int32).tobytes())
-            keys.append(h.digest())
-        return keys
+        """Engine-local view of :func:`prefix_digests` at this engine's
+        block size (the router computes the same digests fleet-side)."""
+        return prefix_digests(tokens, self.block_size)
 
     def _lookup_prefix(self, keys: list[bytes]) -> list[int]:
         """Longest run of full leading blocks already resident in the pool
@@ -747,7 +826,7 @@ class ServingEngine:
             self._step()
         return self.collect_window(base, requests, time.monotonic() - t0)
 
-    # -- service mode (used by MultiReplicaEngine and live traffic) ------------
+    # -- service mode (used by the replica router and live traffic) ------------
 
     def start(self) -> None:
         if self._thread is not None:
@@ -789,6 +868,12 @@ class ServingEngine:
     @property
     def load(self) -> int:
         return self.scheduler.load
+
+    def load_snapshot(self) -> LoadSnapshot:
+        """Block-aware load triple (free slots, free KV blocks, queued
+        prefill tokens) the replica router places and steals on — the raw
+        request count in :attr:`load` hides pool starvation."""
+        return self.scheduler.load_snapshot()
 
     # -- legacy wave decode (seed behaviour, kept for A/B benchmarking) --------
 
@@ -846,104 +931,21 @@ class ServingEngine:
         return stats
 
 
-class ReplicaTarget(Target):
-    """Adapter: one continuous-batching replica as an offload Target.
+# -- moved to repro.serving.router (deprecation shim) --------------------------
 
-    `load_tensor` (the paper's mvncLoadTensor) admits a request clone into
-    the replica's scheduler and returns immediately; the replica's executor
-    thread plays the role of the per-NCS worker, and `WorkItem.complete`
-    fires when the request's last token is emitted.  `queue_depth` exposes
-    scheduler load (queued + occupied slots) so the offload engine's
-    least-loaded dispatch balances individual requests across replicas.
-    """
-
-    def __init__(self, engine: ServingEngine, name: str,
-                 tdp_watts: float = 1.0):
-        self.engine = engine
-        self.name = name
-        self.tdp_watts = tdp_watts
-
-    def open(self) -> None:
-        self.busy = False
-        self.engine.start()
-
-    def close(self) -> None:
-        self.engine.stop()
-
-    def load_tensor(self, item: WorkItem) -> WorkItem:
-        req = item.payload.clone()      # reissue-safe: first clone wins
-        self.engine.submit(req, on_finish=lambda r: item.complete(r, self.name))
-        return item
-
-    @property
-    def queue_depth(self) -> int:
-        return self.engine.load
+_MOVED_TO_ROUTER = ("MultiReplicaEngine", "ReplicaTarget")
 
 
-class MultiReplicaEngine:
-    """Replicas pull individual requests from a shared queue (paper's
-    multi-NCS, continuous-batching edition).
-
-    Each replica is a :class:`ServingEngine` wrapped in a
-    :class:`ReplicaTarget`; `repro.core.offload` provides the split-phase
-    submit, least-loaded dispatch, out-of-order completion drain, and
-    deadline-based straggler reissue (a request stuck on one replica is
-    re-admitted on the least-loaded one; first finish wins).
-    """
-
-    def __init__(self, replicas: list[ServingEngine], *,
-                 deadline_s: float | None = None):
-        self.replicas = replicas
-        self.targets = [ReplicaTarget(e, name=f"replica{i}")
-                        for i, e in enumerate(replicas)]
-        self.deadline_s = deadline_s
-
-    def serve(self, requests: list[Request], *,
-              group_size: int | None = None) -> ServeStats:
-        """Least-loaded dispatch of *individual* requests with out-of-order
-        collection.  ``group_size`` is deprecated (pre-chunked groups are
-        gone); when given it only scales the dispatch window."""
-        total_slots = sum(e.slots for e in self.replicas)
-        window = (group_size * len(self.replicas) if group_size
-                  else 2 * total_slots)
-        base = [e.begin_window() for e in self.replicas]
-        t0 = time.monotonic()
-        for r in requests:
-            # arrival = hand-off to the multi-replica engine; clones inherit
-            # it, so reissue across replicas keeps TTFT measured from here
-            if r.submitted_at is None:
-                r.submitted_at = t0
-        with OffloadEngine(self.targets, scheduler="least_loaded",
-                           deadline_s=self.deadline_s) as eng:
-            results, ostats = eng.run_unordered(requests, window=window)
-        stats = ServeStats(requests=len(requests),
-                           wall_s=time.monotonic() - t0)
-        for seq, done in results:      # copy the winning clone's results back
-            orig = requests[seq]
-            orig.output = done.output
-            orig.state = done.state
-            orig.first_token_at = done.first_token_at
-            orig.finished_at = done.finished_at
-            stats.tokens += len(done.output)
-        # per-replica windows keep the delta logic in one place
-        # (collect_window); only the cross-replica aggregation lives here
-        for e, b in zip(self.replicas, base):
-            sub = e.collect_window(b, [], 0.0)
-            stats.prefills += sub.prefills
-            stats.decode_steps += sub.decode_steps
-            stats.occupancy_sum += sub.occupancy_sum
-            stats.prefill_compiles += sub.prefill_compiles
-            stats.preemptions += sub.preemptions
-            stats.prefix_shared_blocks += sub.prefix_shared_blocks
-            stats.prefill_tokens_total += sub.prefill_tokens_total
-            stats.prefill_tokens_computed += sub.prefill_tokens_computed
-            stats.decode_gaps.extend(sub.decode_gaps)
-            if sub.kv_blocks_peak is not None:
-                stats.kv_blocks_peak = ((stats.kv_blocks_peak or 0)
-                                        + sub.kv_blocks_peak)
-        cap = sum(e.pool.capacity for e in self.replicas
-                  if e.pool is not None)
-        if stats.kv_blocks_peak is not None and cap:
-            stats.kv_pool_util = stats.kv_blocks_peak / cap
-        stats.fill_request_metrics(requests)
-        return stats
+def __getattr__(name: str):
+    """PEP-562 shim: the multi-replica classes live in
+    `repro.serving.router` now; importing them from here still works but
+    warns, so downstream callers migrate before the shim goes away."""
+    if name in _MOVED_TO_ROUTER:
+        import warnings
+        warnings.warn(
+            f"repro.serving.engine.{name} moved to repro.serving.router; "
+            f"update the import — this shim will be removed in a later PR",
+            DeprecationWarning, stacklevel=2)
+        from repro.serving import router
+        return getattr(router, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

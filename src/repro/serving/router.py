@@ -1,0 +1,375 @@
+"""Replica router: prefix-affinity dispatch, block-aware load, work stealing.
+
+The paper's headline result is a *multi-VPU* configuration — the fleet,
+not the single chip, is the unit of performance — and datacenter inference
+lives or dies on how requests are placed across accelerators (see the TPU
+datacenter analysis in PAPERS.md).  This module owns cross-replica
+placement policy for the continuous-batching serving stack; each replica
+is still one :class:`~repro.serving.engine.ServingEngine` driven through
+`repro.core.offload`'s split-phase protocol (non-blocking submit,
+out-of-order drain, deadline straggler reissue), exactly as before — only
+the *policy* deciding which replica gets a request changed:
+
+  * **prefix-affinity dispatch** — the router keeps a fleet-level index of
+    full-leading-block prompt digests (the same chained-digest scheme as
+    each engine's per-replica prefix index; see
+    :func:`~repro.serving.engine.prefix_digests`) mapping digest ->
+    replica.  A request routes to the replica already holding its longest
+    prompt prefix, so cache-seeded prefill fires *fleet-wide* instead of
+    only on whichever replica least-loaded luck assigned — without this,
+    the PR-3/PR-4 prefix-sharing and seeded-prefill wins evaporate the
+    moment a second replica exists.
+  * **block-aware load** — a replica's load is its
+    :class:`~repro.serving.scheduler.LoadSnapshot` (free decode slots,
+    free KV blocks, queued prefill tokens) rather than its raw request
+    count, so a blocks-starved replica stops winning placement ties.
+  * **work stealing** — a replica that goes idle (free slots + blocks,
+    empty queue) pulls still-QUEUED requests off the back of the most
+    backlogged peer's priority heap
+    (:meth:`~repro.serving.scheduler.ContinuousScheduler.steal`:
+    heap invariants, ``submitted_at``, priority, and SLO deadline all
+    preserved).  Affinity concentrates; stealing is the relief valve —
+    and the offload layer's ``WorkItem.complete`` first-wins commit keeps
+    a steal racing a deadline reissue safe: whichever copy finishes first
+    is the result, the other is discarded on completion.
+
+``MultiReplicaEngine`` (the PR-1 request-count least-loaded dispatcher)
+survives as the routing A/B baseline: a :class:`ReplicaRouter` with every
+mechanism switched off.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from itertools import islice
+
+from repro.core.offload import OffloadEngine, Target, WorkItem
+from repro.serving.engine import ServeStats, ServingEngine, prefix_digests
+from repro.serving.kv_pool import CapacityError
+from repro.serving.scheduler import LoadSnapshot, Request
+
+
+class ReplicaTarget(Target):
+    """Adapter: one continuous-batching replica as an offload Target.
+
+    `load_tensor` (the paper's mvncLoadTensor) admits a request clone into
+    the replica's scheduler and returns immediately; the replica's executor
+    thread plays the role of the per-NCS worker, and `WorkItem.complete`
+    fires when the request's last token is emitted.  `queue_depth` exposes
+    scheduler load (queued + occupied slots) for the offload layer's
+    generic least-loaded paths (straggler reissue picks by it); routed
+    placement scores on the richer :meth:`ServingEngine.load_snapshot`.
+    """
+
+    def __init__(self, engine: ServingEngine, name: str,
+                 tdp_watts: float = 1.0):
+        self.engine = engine
+        self.name = name
+        self.tdp_watts = tdp_watts
+
+    def open(self) -> None:
+        self.busy = False
+        self.engine.start()
+
+    def close(self) -> None:
+        self.engine.stop()
+
+    def load_tensor(self, item: WorkItem) -> WorkItem:
+        req = item.payload.clone()      # reissue-safe: first clone wins
+        self.engine.submit(req, on_finish=lambda r: item.complete(r, self.name))
+        return item
+
+    @property
+    def queue_depth(self) -> int:
+        return self.engine.load
+
+
+@dataclass
+class RouterStats:
+    """Lifetime placement counters (monotonic, like ``ServeStats`` totals);
+    :meth:`ReplicaRouter.serve` windows them into the returned stats."""
+    affinity_hits: int = 0      # requests routed onto a resident prefix
+    affinity_blocks: int = 0    # full prefix blocks those hits landed on
+    affinity_fallbacks: int = 0  # hits declined (owner overloaded)
+    steals: int = 0             # requests migrated to an idle replica
+
+
+class ReplicaRouter:
+    """Places individual requests across continuous-batching replicas.
+
+    Placement policy = affinity, then block-aware score:
+
+    1. With ``affinity`` on, look the prompt's chained block digests up in
+       the fleet prefix index, deepest first; the replica owning the
+       longest match wins — unless its queue has blown past
+       ``affinity_queue_cap`` (owner saturated: a cache hit is not worth
+       unbounded head-of-line wait; fall through to the load score).
+    2. Otherwise pick the replica with, in order: immediate capacity (a
+       free slot *and* enough free blocks for this request), the fewest
+       queued prefill tokens, the most free KV blocks.  With
+       ``block_aware=False`` this degrades to the PR-1 policy (raw
+       request count).
+
+    With ``steal`` on, a background rebalance thread runs while
+    :meth:`serve` is in flight: each tick, every idle replica (free slot,
+    empty queue) steals the lowest-ranked queued request it has block
+    headroom for from the most backlogged peer.  Dispatch, drain, and
+    straggler reissue ride `repro.core.offload` unchanged via its
+    placement hook (``scheduler=callable``).
+    """
+
+    def __init__(self, replicas: list[ServingEngine], *,
+                 affinity: bool = True, steal: bool = True,
+                 block_aware: bool = True,
+                 affinity_queue_cap: int | None = None,
+                 steal_interval_s: float = 0.005,
+                 deadline_s: float | None = None,
+                 prefix_index_cap: int = 65536):
+        assert replicas, "router needs at least one replica"
+        self.replicas = replicas
+        self.targets = [ReplicaTarget(e, name=f"replica{i}")
+                        for i, e in enumerate(replicas)]
+        # affinity needs every replica on one digest scheme: paged KV and
+        # a common block size (else "same prefix" means different blocks)
+        paged = all(e.pool is not None for e in replicas)
+        sizes = {e.block_size for e in replicas}
+        if affinity and paged and len(sizes) > 1:
+            raise ValueError(
+                f"prefix-affinity routing needs one block size fleet-wide, "
+                f"got {sorted(sizes)}; disable affinity or align the pools")
+        self.affinity = affinity and paged
+        self.block_size = sizes.pop() if len(sizes) == 1 else None
+        self.steal = steal
+        self.block_aware = block_aware
+        # default cap: 4x the owner's slots — deep enough that a shared-
+        # prefix burst stays co-located (the whole point), bounded enough
+        # that one hot prefix cannot wedge a replica while peers idle
+        # (and with stealing on, the queue drains from the back anyway)
+        self.affinity_queue_cap = affinity_queue_cap
+        self.steal_interval_s = steal_interval_s
+        self.deadline_s = deadline_s
+        self.stats = RouterStats()
+        # fleet prefix index: digest of blocks 0..j -> replica that last
+        # computed (or was routed) that prefix.  A *hint*, not truth: a
+        # replica may have evicted the blocks (its own index validates
+        # against the pool at admission), staleness only costs recompute.
+        self._prefix_owner: dict[bytes, int] = {}
+        self._prefix_cap = prefix_index_cap
+        self._steal_stop = threading.Event()
+        self._steal_thread: threading.Thread | None = None
+
+    # -- placement -------------------------------------------------------------
+
+    def _owner_cap(self, owner: int) -> int:
+        if self.affinity_queue_cap is not None:
+            return self.affinity_queue_cap
+        return 4 * self.replicas[owner].slots
+
+    def _select(self, req: Request) -> int:
+        """Replica index for ``req`` (affinity first, then load score).
+        The affinity fast path — the common case under shared-prefix
+        traffic — snapshots only the owner; the full fleet is snapshotted
+        lazily, on fallback to the load score, so dispatch never pays
+        R-1 wasted scheduler-lock rounds per hit."""
+        digests = (prefix_digests(req.prefill_tokens, self.block_size)
+                   if self.affinity else [])
+        if digests:
+            for j in range(len(digests) - 1, -1, -1):   # deepest match wins
+                owner = self._prefix_owner.get(digests[j])
+                if owner is None:
+                    continue
+                snap = self.replicas[owner].load_snapshot()
+                # queue depth alone trips the cap: a blocks-starved owner
+                # can back up a deep queue while a decode slot sits free
+                if snap.queued >= self._owner_cap(owner):
+                    self.stats.affinity_fallbacks += 1
+                    break               # owner saturated: place by load
+                self.stats.affinity_hits += 1
+                self.stats.affinity_blocks += j + 1
+                self._register(digests, owner)
+                return owner
+        snaps = [e.load_snapshot() for e in self.replicas]
+        choice = min(range(len(self.replicas)),
+                     key=lambda i: self._score(i, snaps[i], req))
+        if digests:
+            self._register(digests, choice)
+        return choice
+
+    def _score(self, i: int, snap: LoadSnapshot, req: Request):
+        """Placement cost (lower wins).  Block-aware: replicas that can
+        admit *right now* beat ones that cannot; ties break on queued
+        prefill tokens (the work ahead of this request), then free blocks
+        (KV headroom), then index (determinism)."""
+        if not self.block_aware:         # PR-1 policy: raw request count
+            e = self.replicas[i]
+            return (snap.queued + (e.slots - snap.free_slots), 0, 0, i)
+        e = self.replicas[i]
+        need = (e.pool.blocks_for(req.kv_rows)
+                if e.pool is not None else 0)
+        fits_now = (snap.free_slots > 0
+                    and (snap.free_blocks is None
+                         or snap.free_blocks >= need))
+        return (0 if fits_now else 1, snap.queued_tokens,
+                -(snap.free_blocks or 0), i)
+
+    def _register(self, digests: list[bytes], owner: int) -> None:
+        """Point every full-leading-block digest of a routed prompt at its
+        replica.  Re-insertion refreshes recency (dict order is insertion
+        order), so the cap drops the coldest prefixes first."""
+        for d in digests:
+            if d in self._prefix_owner:
+                del self._prefix_owner[d]
+            self._prefix_owner[d] = owner
+        over = len(self._prefix_owner) - self._prefix_cap
+        if over > 0:
+            # islice touches only the `over` oldest keys — materializing
+            # the whole cap-sized dict per routed request would put O(cap)
+            # work on the dispatch hot path once the index fills
+            for d in list(islice(iter(self._prefix_owner), over)):
+                del self._prefix_owner[d]
+
+    # -- dispatch --------------------------------------------------------------
+
+    def _place(self, targets: list[Target], payload: Request) -> Target:
+        return targets[self._select(payload)]
+
+    # -- work stealing ---------------------------------------------------------
+
+    @staticmethod
+    def _thief_can_take(thief: ServingEngine, snap: LoadSnapshot):
+        """Admission filter in the *thief's* geometry (its max_len, block
+        size, and free blocks — the donor pool's block math would be
+        wrong on a heterogeneous fleet): only steal what the thief could
+        admit right now, or the request ping-pongs between queues
+        instead of ever decoding."""
+        def ok(req: Request) -> bool:
+            if req.kv_rows > thief.max_len:      # per-slot KV capacity
+                return False
+            if thief.pool is not None:
+                need = thief.pool.blocks_for(req.kv_rows)
+                if need > min(snap.free_blocks, thief.pool.capacity):
+                    return False
+            return True
+        return ok
+
+    def _rebalance_once(self) -> int:
+        """One stealing pass: every idle replica takes the lowest-ranked
+        queued request it could admit right now from the most backlogged
+        peer (by queued prefill tokens).  Returns requests moved."""
+        moved = 0
+        snaps = [e.load_snapshot() for e in self.replicas]
+        for i, snap in enumerate(snaps):
+            if not snap.idle:
+                continue
+            donors = sorted(
+                (j for j in range(len(self.replicas))
+                 if j != i and snaps[j].queued > 0),
+                key=lambda j: (snaps[j].queued_tokens, snaps[j].queued),
+                reverse=True)
+            thief = self.replicas[i]
+            for j in donors:
+                got = self.replicas[j].scheduler.steal(
+                    max_items=1,
+                    can_take=self._thief_can_take(thief, snap))
+                took = 0
+                for req in got:
+                    try:
+                        # on_finish (WorkItem.complete) and submitted_at
+                        # ride along: TTFT spans the migration, and a
+                        # steal racing a reissue resolves first-wins
+                        thief.submit(req)
+                        took += 1
+                    except CapacityError:
+                        # defensive only (can_take pre-filters): hand the
+                        # request back to its donor
+                        self.replicas[j].submit(req)
+                moved += took
+                if took:                # thief's free slot is now spoken for
+                    break
+        self.stats.steals += moved
+        return moved
+
+    def _steal_loop(self) -> None:
+        while not self._steal_stop.wait(self.steal_interval_s):
+            self._rebalance_once()
+
+    def _start_stealing(self) -> None:
+        if not self.steal or self._steal_thread is not None:
+            return
+        self._steal_stop.clear()
+        self._steal_thread = threading.Thread(target=self._steal_loop,
+                                              daemon=True)
+        self._steal_thread.start()
+
+    def _stop_stealing(self) -> None:
+        if self._steal_thread is None:
+            return
+        self._steal_stop.set()
+        self._steal_thread.join(timeout=10.0)
+        if self._steal_thread.is_alive():
+            raise RuntimeError("rebalance thread did not stop within 10s")
+        self._steal_thread = None
+
+    # -- serving ---------------------------------------------------------------
+
+    def serve(self, requests: list[Request], *,
+              window: int | None = None) -> ServeStats:
+        """Routed dispatch of *individual* requests with out-of-order
+        collection and (optionally) live work stealing; blocks until every
+        request is DONE."""
+        window = window or 2 * sum(e.slots for e in self.replicas)
+        base = [e.begin_window() for e in self.replicas]
+        rbase = RouterStats(**vars(self.stats))
+        t0 = time.monotonic()
+        for r in requests:
+            # arrival = hand-off to the router; clones inherit it, so both
+            # reissue and stealing keep TTFT measured from here
+            if r.submitted_at is None:
+                r.submitted_at = t0
+        self._start_stealing()
+        try:
+            with OffloadEngine(self.targets, scheduler=self._place,
+                               deadline_s=self.deadline_s) as eng:
+                results, _ = eng.run_unordered(requests, window=window)
+        finally:
+            self._stop_stealing()
+        stats = ServeStats(requests=len(requests),
+                           wall_s=time.monotonic() - t0)
+        delivered = 0
+        for seq, done in results:      # copy the winning clone's results back
+            orig = requests[seq]
+            orig.output = done.output
+            orig.state = done.state
+            orig.first_token_at = done.first_token_at
+            orig.finished_at = done.finished_at
+            delivered += len(done.output)
+        # declarative fleet aggregation: every ServeStats field merges by
+        # its MERGE_RULES entry, so new fields cannot silently drop here
+        for e, b in zip(self.replicas, base):
+            stats.merge_from(e.collect_window(b, [], 0.0))
+        # replica windows count every decoded token, including the losing
+        # copy of a reissue/steal race; the fleet number is *delivered*
+        # tokens (winning clones only), so throughput never double-counts
+        stats.tokens = delivered
+        stats.router_steals = self.stats.steals - rbase.steals
+        stats.router_affinity_hits = (self.stats.affinity_hits
+                                      - rbase.affinity_hits)
+        cap = sum(e.pool.capacity for e in self.replicas
+                  if e.pool is not None)
+        if stats.kv_blocks_peak is not None and cap:
+            stats.kv_pool_util = stats.kv_blocks_peak / cap   # derived rule
+        stats.fill_request_metrics(requests)
+        return stats
+
+
+class MultiReplicaEngine(ReplicaRouter):
+    """The PR-1 dispatcher, kept as the routing A/B baseline and for
+    back-compat: request-count least-loaded placement, no prefix
+    affinity, no work stealing.  New code should construct
+    :class:`ReplicaRouter` directly."""
+
+    def __init__(self, replicas: list[ServingEngine], *,
+                 deadline_s: float | None = None):
+        super().__init__(replicas, affinity=False, steal=False,
+                         block_aware=False, deadline_s=deadline_s)

@@ -37,6 +37,14 @@ queue to be re-prefilled when space frees.  The executor learns about
 evictions via :meth:`ContinuousScheduler.drain_preempted` so it can retire
 the victim's block table before the freed blocks are reused.
 
+Across replicas, the scheduler is the work-stealing substrate: an idle
+peer pulls still-QUEUED requests off the back of this queue via
+:meth:`ContinuousScheduler.steal` (heap invariants and ``submitted_at``
+preserved), and :meth:`ContinuousScheduler.load_snapshot` exposes the
+block-aware load triple the :class:`~repro.serving.router.ReplicaRouter`
+places on — free slots, free KV blocks, queued prefill tokens — instead
+of the raw request count.
+
 The scheduler is pure bookkeeping: the :class:`~repro.serving.engine.
 ServingEngine` executor owns params, KV state, and the jitted decode step.
 """
@@ -48,7 +56,7 @@ import threading
 import time
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import numpy as np
 
@@ -134,6 +142,27 @@ class Request:
                        sampler=self.sampler, priority=self.priority,
                        slo_ttft_s=self.slo_ttft_s,
                        submitted_at=self.submitted_at)
+
+
+class LoadSnapshot(NamedTuple):
+    """One replica's load at a glance, for cross-replica placement.
+
+    Raw request count (the PR-1 dispatch metric) hides the resource that
+    actually gates admission: a replica with two queued requests and zero
+    free KV blocks is *worse* than one with four queued requests and half
+    its pool free.  The router scores replicas on this snapshot instead.
+    """
+    free_slots: int
+    free_blocks: int | None     # None for contiguous (pool-less) engines
+    queued: int                 # requests in the admission queue
+    queued_tokens: int          # prompt(+resume) tokens awaiting prefill
+
+    @property
+    def idle(self) -> bool:
+        """Nothing queued and at least one slot open — the work-stealing
+        trigger (block headroom is checked separately against the
+        candidate's actual need)."""
+        return self.queued == 0 and self.free_slots > 0
 
 
 class ContinuousScheduler:
@@ -326,7 +355,79 @@ class ContinuousScheduler:
             req.shared_blocks = 0
         return req
 
+    # -- cross-replica work stealing -------------------------------------------
+
+    def steal(self, max_items: int = 1, *,
+              can_take: Callable[[Request], bool] | None = None
+              ) -> list[Request]:
+        """Remove up to ``max_items`` still-QUEUED requests so an idle peer
+        scheduler can take them over (cross-replica work stealing).
+
+        Victims come from the *back* of the queue — the lowest-ranked
+        entries by (priority, SLO deadline, arrival), i.e. the requests
+        this replica would serve last — so the local heap's service order
+        for everything that stays is untouched.  While other entries are
+        queued, the head (the request this replica serves next, typically
+        with its prefix blocks already resident) is never stolen — a
+        ``can_take``-filtered scan cannot walk forward into it past
+        rejected candidates.  A *sole* queued request is fair game: the
+        donor has no capacity for it now (else it would be admitted), so
+        migrating it to an idle peer strictly helps its TTFT.  The
+        surviving heap is re-heapified, preserving its invariants.
+
+        Stolen requests keep their ``submitted_at`` stamp (TTFT spans the
+        migration: re-submission on the thief preserves a pre-stamped
+        arrival) plus priority and SLO; only the per-scheduler
+        ``arrival_seq`` is cleared, so the thief's heap assigns its own
+        tiebreak and never compares seqs minted by two schedulers.
+
+        ``can_take`` filters candidates by the *thief's* admission
+        capacity (its ``max_len``, block size, and free blocks — this
+        scheduler's own pool geometry says nothing about the thief's):
+        a request the thief could not admit must stay here, or it would
+        ping-pong between queues instead of ever decoding.
+        """
+        stolen: list[Request] = []
+        with self._lock:
+            take: set[int] = set()
+            # back of the queue first: largest heap key = served last;
+            # the final (smallest-key) index is the head — sliced off
+            # (when it has company) so a filtered scan can never walk
+            # forward into it
+            order = sorted(range(len(self._heap)),
+                           key=lambda i: self._heap[i][:3], reverse=True)
+            if len(order) > 1:
+                order = order[:-1]
+            for i in order:
+                if len(stolen) >= max_items:
+                    break
+                req = self._heap[i][3]
+                if can_take is not None and not can_take(req):
+                    continue
+                take.add(i)
+                stolen.append(req)
+            if take:
+                self._heap = [e for i, e in enumerate(self._heap)
+                              if i not in take]
+                heapq.heapify(self._heap)
+                for req in stolen:
+                    req.arrival_seq = None
+        return stolen
+
     # -- introspection ---------------------------------------------------------
+
+    def load_snapshot(self) -> LoadSnapshot:
+        """Block-aware load for cross-replica placement (racy by design:
+        the executor keeps running; the router treats it as a hint)."""
+        with self._lock:
+            free_slots = sum(r is None for r in self.slots)
+            queued = len(self._heap)
+            queued_tokens = sum(len(e[3].prompt) + len(e[3].output)
+                                for e in self._heap)
+        free_blocks = (self.pool.free_blocks if self.pool is not None
+                       else None)
+        return LoadSnapshot(free_slots=free_slots, free_blocks=free_blocks,
+                            queued=queued, queued_tokens=queued_tokens)
 
     @property
     def queued(self) -> int:

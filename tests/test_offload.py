@@ -55,6 +55,19 @@ def test_least_loaded_prefers_fast_target():
     assert stats.per_target.get("fast", 0) > stats.per_target.get("slow", 0)
 
 
+def test_callable_placement_hook():
+    """scheduler may be a placement hook callable(targets, payload) ->
+    Target — how the serving replica router scores placement itself while
+    riding the engine's submit/drain/reissue machinery unchanged."""
+    targets = [SimTarget("even", compute_s=0.002),
+               SimTarget("odd", compute_s=0.002)]
+    with OffloadEngine(targets,
+                       scheduler=lambda ts, payload: ts[payload % 2]) as eng:
+        results, stats = eng.run_unordered(list(range(10)))
+    assert sorted(seq for seq, _ in results) == list(range(10))
+    assert stats.per_target == {"even": 5, "odd": 5}
+
+
 def test_split_phase_overlap():
     """Non-blocking load: submit returns before the work completes."""
     t = SimTarget("t", compute_s=0.2)

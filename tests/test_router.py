@@ -1,0 +1,256 @@
+"""Replica router: prefix-affinity placement, block-aware load scoring,
+work stealing across replicas, declarative ServeStats fleet merge, and the
+engine-module deprecation shim."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import repro.serving.engine as engine_mod
+from repro.configs import registry as R
+from repro.models.registry import fns_for
+from repro.serving.engine import MERGE_RULES, Request, ServeStats, \
+    ServingEngine
+from repro.serving.router import MultiReplicaEngine, ReplicaRouter
+from repro.serving.scheduler import LoadSnapshot
+from repro.serving.sampler import greedy
+
+
+# -- ServeStats declarative merge ----------------------------------------------
+
+def test_merge_rules_cover_every_field():
+    """Bijection between ServeStats fields and MERGE_RULES: a new field
+    without a fleet-merge decision (or a stale rule for a removed field)
+    fails here instead of silently dropping from multi-replica stats."""
+    fields = {f.name for f in dataclasses.fields(ServeStats)}
+    assert set(MERGE_RULES) == fields, set(MERGE_RULES) ^ fields
+
+
+def test_merge_from_missing_rule_raises(monkeypatch):
+    monkeypatch.delitem(engine_mod.MERGE_RULES, "tokens")
+    with pytest.raises(ValueError, match="merge rule"):
+        ServeStats().merge_from(ServeStats())
+
+
+def test_merge_from_semantics():
+    a = ServeStats(requests=1, tokens=10, wall_s=2.0)
+    a.ttft.append(0.1)
+    b = ServeStats(requests=2, tokens=5, wall_s=1.0, kv_blocks_peak=7,
+                   kv_pool_util=0.5)
+    b.ttft.append(0.2)
+    a.merge_from(b)
+    assert a.requests == 3 and a.tokens == 15
+    assert a.wall_s == 2.0                     # max, not sum
+    assert a.ttft == [0.1, 0.2]                # extend
+    assert a.kv_blocks_peak == 7               # opt_sum: None counts as 0
+    assert a.kv_pool_util is None              # derived: never copied over
+    c = ServeStats()
+    c.merge_from(ServeStats())
+    assert c.kv_blocks_peak is None            # opt_sum: all-None stays None
+
+
+# -- placement policy (unit, fake replicas) ------------------------------------
+
+class _FakePool:
+    capacity = 64
+
+    def __init__(self, block_size=16):
+        self.block_size = block_size
+
+    def blocks_for(self, tokens):
+        return -(-tokens // self.block_size)
+
+
+class _FakeReplica:
+    """Just enough surface for ReplicaRouter placement: pool, slots,
+    block_size, load_snapshot."""
+    block_size = 16
+    slots = 4
+
+    def __init__(self, snap: LoadSnapshot):
+        self.pool = _FakePool()
+        self._snap = snap
+
+    def load_snapshot(self) -> LoadSnapshot:
+        return self._snap
+
+
+def _idle_snap():
+    return LoadSnapshot(free_slots=4, free_blocks=64, queued=0,
+                        queued_tokens=0)
+
+
+def _req(rid, prompt, n=4):
+    return Request(rid, np.asarray(prompt, np.int32), max_new_tokens=n,
+                   sampler=greedy())
+
+
+def test_affinity_routes_to_prefix_owner():
+    reps = [_FakeReplica(_idle_snap()), _FakeReplica(_idle_snap())]
+    router = ReplicaRouter(reps, steal=False)
+    prefix = np.arange(32, dtype=np.int32)              # 2 full blocks
+    owner = router._select(_req(0, prefix))
+    # same 2-block prefix, different tail -> the owner, not a load tie
+    follow = _req(1, np.concatenate([prefix,
+                                     np.arange(100, 108, dtype=np.int32)]))
+    assert router._select(follow) == owner
+    assert router.stats.affinity_hits == 1
+    assert router.stats.affinity_blocks == 2            # deepest digest won
+    # unrelated prompt: no hit, placed by load
+    router._select(_req(2, np.arange(200, 232, dtype=np.int32)))
+    assert router.stats.affinity_hits == 1
+
+
+def test_block_aware_score_beats_request_count():
+    """A blocks-starved replica must stop winning ties on raw request
+    count — the PR-1 policy picks it, the block-aware score does not."""
+    starved = _FakeReplica(LoadSnapshot(free_slots=2, free_blocks=0,
+                                        queued=0, queued_tokens=0))
+    healthy = _FakeReplica(LoadSnapshot(free_slots=1, free_blocks=32,
+                                        queued=2, queued_tokens=24))
+    req = _req(0, np.arange(16), n=16)                  # needs 2 blocks
+    router = ReplicaRouter([starved, healthy], affinity=False, steal=False)
+    assert router._select(req) == 1                     # blocks win
+    legacy = MultiReplicaEngine([starved, healthy])
+    assert legacy._select(req) == 0                     # count loses
+
+
+def test_affinity_falls_back_when_owner_saturated():
+    reps = [_FakeReplica(_idle_snap()), _FakeReplica(_idle_snap())]
+    router = ReplicaRouter(reps, steal=False, affinity_queue_cap=2)
+    prefix = np.arange(32, dtype=np.int32)
+    owner = router._select(_req(0, prefix))
+    reps[owner]._snap = LoadSnapshot(free_slots=0, free_blocks=64,
+                                     queued=2, queued_tokens=80)
+    assert router._select(_req(1, prefix)) != owner
+    assert router.stats.affinity_fallbacks == 1
+
+
+def test_affinity_fallback_trips_on_queue_depth_alone():
+    """A blocks-starved owner can back up a deep queue while a decode
+    slot sits free — the cap must trip on queue depth, not require
+    free_slots == 0 as well."""
+    reps = [_FakeReplica(_idle_snap()), _FakeReplica(_idle_snap())]
+    router = ReplicaRouter(reps, steal=False, affinity_queue_cap=3)
+    prefix = np.arange(32, dtype=np.int32)
+    owner = router._select(_req(0, prefix))
+    reps[owner]._snap = LoadSnapshot(free_slots=1, free_blocks=0,
+                                     queued=3, queued_tokens=120)
+    assert router._select(_req(1, prefix)) != owner
+    assert router.stats.affinity_fallbacks == 1
+
+
+def test_steal_filter_uses_thief_geometry():
+    """The steal admission filter is computed with the THIEF's max_len,
+    block size, and free blocks — a request the thief could never (or
+    cannot currently) admit is left on the donor instead of ping-ponging
+    between queues."""
+    thief = _FakeReplica(_idle_snap())
+    thief.max_len = 20
+    ok = ReplicaRouter._thief_can_take(thief, thief.load_snapshot())
+    assert ok(_req(0, np.arange(8), n=8))           # 15 rows <= max_len
+    assert not ok(_req(1, np.arange(16), n=16))     # 31 rows: never fits
+    thief2 = _FakeReplica(LoadSnapshot(free_slots=1, free_blocks=1,
+                                       queued=0, queued_tokens=0))
+    thief2.max_len = 64
+    ok2 = ReplicaRouter._thief_can_take(thief2, thief2.load_snapshot())
+    assert ok2(_req(2, np.arange(8), n=8))          # 15 rows -> 1 block
+    assert not ok2(_req(3, np.arange(16), n=16))    # 31 rows -> 2 blocks
+
+
+def test_mismatched_block_sizes_reject_affinity():
+    a, b = _FakeReplica(_idle_snap()), _FakeReplica(_idle_snap())
+    b.block_size = 32
+    with pytest.raises(ValueError, match="block size"):
+        ReplicaRouter([a, b])
+    ReplicaRouter([a, b], affinity=False)               # load-only is fine
+
+
+# -- real engines: fleet-wide seeding, stealing, shim --------------------------
+
+def _smoke():
+    cfg = R.smoke("qwen2.5-3b")
+    params = fns_for(cfg).init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prefix_reqs(cfg, n, seed, new_tokens=2, tail=8):
+    """n requests over one 2-block (32-token) common prefix with distinct
+    tails."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, size=32).astype(np.int32)
+    return [Request(i, np.concatenate(
+                    [prefix, rng.integers(0, cfg.vocab_size, size=tail)
+                     .astype(np.int32)]),
+                    max_new_tokens=new_tokens, sampler=greedy())
+            for i in range(n)]
+
+
+def test_router_affinity_seeds_fleet_wide_and_matches_single():
+    """Same-prefix requests land on one replica (affinity), seed its
+    prefix blocks instead of recomputing, and still produce exactly the
+    single-replica greedy outputs."""
+    cfg, params = _smoke()
+    mk = lambda: ServingEngine(cfg, params, max_len=43, batch_slots=3,  # noqa
+                               paged=True)
+    router = ReplicaRouter([mk(), mk()], steal=False)
+    reqs = _prefix_reqs(cfg, 3, seed=5)
+    stats = router.serve(reqs)
+    ref = _prefix_reqs(cfg, 3, seed=5)
+    mk().serve(ref)
+    assert [r.output for r in reqs] == [r.output for r in ref]
+    assert stats.router_affinity_hits >= 2              # followers hit
+    # fleet-wide seeding: followers' prefix tokens were read, not re-run
+    assert stats.prefill_tokens_computed < stats.prefill_tokens_total
+    assert len(stats.ttft) == 3 and stats.tokens == 6
+
+
+def test_rebalance_once_moves_backlog_to_idle():
+    """Deterministic steal path (no threads): an idle replica pulls
+    exactly one queued request from the backlogged peer; TTFT keeps
+    measuring from the original submission."""
+    cfg, params = _smoke()
+    mk = lambda: ServingEngine(cfg, params, max_len=43, batch_slots=1,  # noqa
+                               paged=True)
+    a, b = mk(), mk()
+    router = ReplicaRouter([a, b], steal=True)
+    reqs = _prefix_reqs(cfg, 3, seed=7)
+    for r in reqs:
+        a.scheduler.submit(r)
+    stamps = [r.submitted_at for r in reqs]
+    a.scheduler.admit()                     # head takes A's only slot
+    assert a.scheduler.queued == 2 and b.scheduler.queued == 0
+    assert router._rebalance_once() == 1
+    assert a.scheduler.queued == 1 and b.scheduler.queued == 1
+    assert router.stats.steals == 1
+    assert [r.submitted_at for r in reqs] == stamps
+    # B now has work -> not idle -> second pass steals for nobody
+    b.scheduler.admit()
+    assert router._rebalance_once() == 0
+
+
+def test_router_steals_under_live_backlog():
+    """End to end: affinity piles a shared-prefix burst onto one 1-slot
+    replica; the stealing thread migrates queued requests to the idle
+    peer and every request still completes with full output."""
+    cfg, params = _smoke()
+    mk = lambda: ServingEngine(cfg, params, max_len=43, batch_slots=1,  # noqa
+                               paged=True)
+    router = ReplicaRouter([mk(), mk()], steal=True, steal_interval_s=0.001)
+    reqs = _prefix_reqs(cfg, 6, seed=9, new_tokens=4)
+    stats = router.serve(reqs)
+    assert all(len(r.output) == 4 for r in reqs)
+    assert stats.router_steals >= 1
+    assert stats.tokens == 24 and len(stats.ttft) == 6
+
+
+def test_engine_module_shim_warns():
+    from repro.serving import router
+    with pytest.warns(DeprecationWarning, match="moved to"):
+        cls = engine_mod.MultiReplicaEngine
+    assert cls is router.MultiReplicaEngine
+    with pytest.warns(DeprecationWarning):
+        assert engine_mod.ReplicaTarget is router.ReplicaTarget
+    with pytest.raises(AttributeError):
+        engine_mod.not_a_thing

@@ -146,6 +146,155 @@ def test_property_admission_order():
     prop()
 
 
+# -- work stealing -------------------------------------------------------------
+
+def test_steal_takes_back_of_queue_and_preserves_order():
+    """Steal removes the lowest-ranked queued requests (the ones this
+    scheduler would serve last), never the head, and the surviving heap
+    drains in unchanged (priority, deadline, arrival) order."""
+    s = ContinuousScheduler(1)
+    reqs = [_req(0, priority=2), _req(1, priority=0), _req(2, priority=1),
+            _req(3, priority=0)]
+    for r in reqs:
+        s.submit(r)
+    got = s.steal(max_items=2)
+    # victims: both priority-0 requests, latest arrival first
+    assert [r.rid for r in got] == [3, 1]
+    assert all(r.arrival_seq is None for r in got)      # thief re-seqs
+    order = []
+    while s.has_work():
+        [(slot, r)] = s.admit()
+        r.state = RequestState.DONE
+        s.release(slot)
+        order.append(r.rid)
+    assert order == [0, 2]                              # head untouched
+
+
+def test_steal_respects_thief_admission_filter():
+    """``can_take`` filters candidates by the thief's admission capacity
+    (computed in the THIEF's geometry, not this scheduler's pool): a
+    request the thief could not admit must stay queued here instead of
+    ping-ponging between replicas — and a filtered scan must not walk
+    forward into the head of the queue."""
+    pool = KVBlockPool(16, block_size=4)
+    s = ContinuousScheduler(1, pool=pool)
+    head = _req(0, n=3)                         # 8 rows, first in = head
+    big = Request(1, np.arange(8, dtype=np.int32), max_new_tokens=17)
+    tail = _req(2, n=3)                         # 8 rows, back of queue
+    for r in (head, big, tail):                 # big: 24 rows
+        s.submit(r)
+    # thief with 1 free 4-token block: nothing fits (8 rows -> 2 blocks)
+    assert s.steal(max_items=3,
+                   can_take=lambda r: -(-r.kv_rows // 4) <= 1) == []
+    # thief with 2 free 4-token blocks: tail fits, big skipped, and the
+    # scan never reaches the (equally fitting) head
+    got = s.steal(max_items=3,
+                  can_take=lambda r: -(-r.kv_rows // 4) <= 2)
+    assert [r.rid for r in got] == [2]
+    # every remaining non-head candidate fails the filter: still no head
+    assert s.steal(max_items=1,
+                   can_take=lambda r: -(-r.kv_rows // 4) <= 2) == []
+    assert s.queued == 2                        # head + big stayed
+
+
+def test_steal_protects_head_unless_sole_entry():
+    """While other entries are queued the head is never shipped away; a
+    sole queued request (the donor has no capacity for it now) may
+    migrate to an idle peer."""
+    s = ContinuousScheduler(1)
+    s.submit(_req(0))
+    s.submit(_req(1))
+    assert [r.rid for r in s.steal(max_items=5)] == [1]
+    assert s.queued == 1                        # the head survived...
+    assert [r.rid for r in s.steal(max_items=5)] == [0]
+    assert s.queued == 0                        # ...until it stood alone
+
+
+def test_steal_preserves_submitted_at_for_ttft():
+    """A stolen request's TTFT keeps measuring from its *original*
+    submission: steal never clears ``submitted_at``, and the thief's
+    submit preserves a pre-stamped arrival."""
+    donor, thief = ContinuousScheduler(1), ContinuousScheduler(1)
+    donor.submit(_req(0))                       # head stays with the donor
+    r = _req(1)
+    donor.submit(r)
+    stamped = r.submitted_at
+    assert stamped is not None
+    time.sleep(0.02)
+    [stolen] = donor.steal()
+    assert stolen is r
+    thief.submit(stolen)
+    assert stolen.submitted_at == stamped       # migration is TTFT-neutral
+    stolen.first_token_at = stamped + 1.0
+    assert stolen.ttft_s == 1.0
+
+
+def test_property_steal_partitions_and_orders():
+    """Property: stealing k requests from a loaded scheduler into a second
+    one (with its own backlog) never duplicates or loses a request, and
+    both heaps still drain in (priority desc, SLO deadline, arrival)
+    order with ``submitted_at``, priority, and SLO preserved."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, strategies as st
+
+    spec = st.tuples(st.integers(0, 3),
+                     st.one_of(st.none(), st.floats(0.01, 10.0)))
+
+    @given(st.lists(spec, min_size=1, max_size=10),
+           st.lists(spec, min_size=0, max_size=6),
+           st.integers(0, 10))
+    def prop(donor_specs, thief_specs, k):
+        donor, thief = ContinuousScheduler(1), ContinuousScheduler(1)
+        all_reqs = {}
+        for i, (pri, slo) in enumerate(donor_specs):
+            r = _req(i, priority=pri, slo_ttft_s=slo)
+            r.submitted_at = float(i)           # deterministic deadlines
+            donor.submit(r)
+            all_reqs[i] = r
+        for i, (pri, slo) in enumerate(thief_specs):
+            r = _req(100 + i, priority=pri, slo_ttft_s=slo)
+            r.submitted_at = float(100 + i)
+            thief.submit(r)
+            all_reqs[100 + i] = r
+        stamps = {rid: r.submitted_at for rid, r in all_reqs.items()}
+        meta = {rid: (r.priority, r.slo_ttft_s)
+                for rid, r in all_reqs.items()}
+
+        stolen = donor.steal(max_items=k)
+        for r in stolen:
+            thief.submit(r)
+
+        def drain(s):
+            out = []
+            while s.has_work():
+                [(slot, r)] = s.admit()
+                r.state = RequestState.DONE
+                s.release(slot)
+                out.append(r)
+            return out
+
+        drained = drain(donor) + drain(thief)
+        # partition: every request served exactly once, none invented
+        assert sorted(r.rid for r in drained) == sorted(all_reqs)
+        for r in drained:                       # migration mutates nothing
+            assert r.submitted_at == stamps[r.rid]
+            assert (r.priority, r.slo_ttft_s) == meta[r.rid]
+
+        def key(r):
+            dl = (r.submitted_at + r.slo_ttft_s
+                  if r.slo_ttft_s is not None else math.inf)
+            return (-r.priority, dl)
+
+        # both heaps drained in sorted order (arrival seq is the only
+        # tiebreak hypothesis cannot see; compare the visible key)
+        n_donor = len(donor_specs) - len(stolen)
+        for part in (drained[:n_donor], drained[n_donor:]):
+            keys = [key(r) for r in part]
+            assert keys == sorted(keys)
+
+    prop()
+
+
 # -- preemption ----------------------------------------------------------------
 
 def _admit_and_decode(s, pool, prompt_blocks):

@@ -9,7 +9,8 @@ import numpy as np
 
 from repro.configs import registry as R
 from repro.models.registry import fns_for
-from repro.serving.engine import MultiReplicaEngine, Request, ServingEngine
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.router import MultiReplicaEngine
 from repro.serving.sampler import greedy, temperature
 
 
