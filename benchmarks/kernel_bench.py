@@ -42,14 +42,17 @@ from benchmarks.common import save_artifact
 
 RIDGE = TPU_V5E.peak_flops_bf16 / TPU_V5E.hbm_bandwidth   # flops/byte
 
-# registered kernel name -> the err key its smoke case produces; smoke()
-# fails if a kernel is registered in the dispatch table without a case here
+# registered kernel name -> the err key(s) its smoke cases produce (a tuple
+# lists every gated shape family); smoke() fails if a kernel is registered
+# in the dispatch table without a case here
 COVERAGE = {
     "matmul": "matmul_err",
     "flash_attention": "flash_err",
     "decode_attention": "decode_err",
     "paged_decode_attention": "paged_decode_err",
-    "paged_prefill_attention": "paged_prefill_err",
+    "paged_prefill_attention": ("paged_prefill_err",
+                                "paged_prefill_verify_err",
+                                "paged_prefill_verify_int8_err"),
     "ssm_scan": "ssm_err",
     "conv2d": "conv2d_err",
 }
@@ -131,6 +134,25 @@ def _kernel_errs(interpret: bool = True) -> dict:
         - paged_prefill_attention_ref(qc, kq, vq, tables, q_start, clens,
                                       k_scale=ksc, v_scale=vsc)).max())
 
+    # verify-shaped paged prefill (speculative decoding): a short k+1-token
+    # chunk starting mid-sequence against a short visible block table —
+    # the shape `_verify_step` issues every speculative round
+    qv = jax.random.normal(ks[5], (2, 4, 4, 64))
+    vtables = tables[:, :2]                       # mb=2: 32 visible rows
+    vq_start = jnp.array([9, 27], jnp.int32)      # mid-block / near-edge
+    vlens = vq_start + 4
+    out["paged_prefill_verify_err"] = float(jnp.abs(
+        paged_prefill_attention(qv, kp, vp, vtables, vq_start, vlens,
+                                interpret=interpret)
+        - paged_prefill_attention_ref(qv, kp, vp, vtables, vq_start,
+                                      vlens)).max())
+    out["paged_prefill_verify_int8_err"] = float(jnp.abs(
+        paged_prefill_attention(qv, kq, vq, vtables, vq_start, vlens,
+                                k_scale=ksc, v_scale=vsc,
+                                interpret=interpret)
+        - paged_prefill_attention_ref(qv, kq, vq, vtables, vq_start, vlens,
+                                      k_scale=ksc, v_scale=vsc)).max())
+
     ld = -jax.nn.softplus(jax.random.normal(ks[6], (1, 256, 4)))
     lg = 0.1 * jax.random.normal(ks[7], (1, 256, 4))
     qs = jax.random.normal(ks[2], (1, 256, 4, 16))
@@ -160,7 +182,9 @@ def smoke(verbose: bool = True) -> dict:
         sys.exit(1)
     interpret = jax.default_backend() != "tpu"
     errs = _kernel_errs(interpret=interpret)
-    stale = set(COVERAGE.values()) - set(errs)
+    needed = {key for v in COVERAGE.values()
+              for key in (v if isinstance(v, tuple) else (v,))}
+    stale = needed - set(errs)
     if stale:       # a COVERAGE entry whose case was deleted/renamed
         print(f"FAIL: smoke cases missing from _kernel_errs: "
               f"{sorted(stale)}", file=sys.stderr)

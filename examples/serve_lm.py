@@ -16,8 +16,17 @@ so it is admitted ahead of the backlog (and, under KV-block pressure, may
 preempt a lower-priority decode).  Stats include TTFT p50/p99, TPOT, slot
 occupancy, SLO miss rate, and (paged) KV-pool peaks.
 
+`--draft-model ARCH` turns on speculative decoding (paged KV only): a
+drafter model proposes `--spec-k` tokens per slot per step and the target
+scores all of them in one batched verify pass, committing the longest
+prefix that matches its own greedy argmax — so greedy outputs stay
+bit-identical while the target runs fewer steps.  Only greedy requests
+speculate; the temperature-sampled ones here keep using vanilla decode in
+the same batch.  Passing the target arch itself is self-speculation
+(drafter shares the target's weights — no second model needed to demo).
+
   PYTHONPATH=src python examples/serve_lm.py [--replicas 2] [--no-affinity]
-      [--no-steal]
+      [--no-steal] [--draft-model qwen2.5-3b] [--spec-k 3] [--no-spec]
 """
 import argparse
 
@@ -43,10 +52,29 @@ def main():
     ap.add_argument("--no-steal", action="store_true",
                     help="idle replicas no longer steal queued requests "
                          "from backlogged peers")
+    ap.add_argument("--draft-model", default=None, metavar="ARCH",
+                    help="speculative decoding drafter arch (same arch as "
+                         "--arch = self-speculation); greedy requests "
+                         "commit multiple tokens per target step, outputs "
+                         "stay bit-identical")
+    ap.add_argument("--spec-k", type=int, default=3, metavar="K",
+                    help="drafter tokens proposed per speculative round")
+    ap.add_argument("--no-spec", action="store_true",
+                    help="ignore --draft-model (vanilla-decode baseline)")
     args = ap.parse_args()
 
     cfg = arch_registry.smoke(args.arch)
     params = fns_for(cfg).init(cfg, jax.random.PRNGKey(0))
+    spec_kw = {}
+    if args.draft_model and not args.no_spec:
+        if args.draft_model == args.arch:
+            draft_cfg, draft_params = cfg, params
+        else:
+            draft_cfg = arch_registry.smoke(args.draft_model)
+            draft_params = fns_for(draft_cfg).init(draft_cfg,
+                                                   jax.random.PRNGKey(1))
+        spec_kw = dict(draft_cfg=draft_cfg, draft_params=draft_params,
+                       spec_k=args.spec_k)
     rng = np.random.default_rng(0)
     # mixed lengths on purpose: short requests finish early and their slots
     # are refilled immediately (no lock-step waves)
@@ -60,7 +88,8 @@ def main():
                     slo_ttft_s=2.0 if i % 3 == 0 else None)
             for i in range(args.requests)]
 
-    replicas = [ServingEngine(cfg, params, max_len=24, batch_slots=4)
+    replicas = [ServingEngine(cfg, params, max_len=24, batch_slots=4,
+                              **spec_kw)
                 for _ in range(args.replicas)]
     if args.replicas == 1:
         stats = replicas[0].serve(reqs)
@@ -73,6 +102,10 @@ def main():
     if args.replicas > 1:
         print(f"router: affinity_hits={stats.router_affinity_hits}  "
               f"steals={stats.router_steals}")
+    if stats.spec_proposed:
+        print(f"spec: accept_rate={stats.accept_rate:.2f}  "
+              f"verify_steps={stats.verify_steps}  "
+              f"decode_steps={stats.decode_steps}")
     if stats.slo_miss_rate is not None:
         print(f"slo miss rate {stats.slo_miss_rate:.2f}  "
               f"preemptions {stats.preemptions}  "

@@ -18,6 +18,10 @@ Example:
   # routing and idle-replica work stealing back to least-loaded dispatch:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
       --replicas 2 --no-affinity --no-steal
+  # speculative decoding: a drafter proposes k tokens per step, the target
+  # verifies them in one batched pass — greedy outputs stay bit-identical:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
+      --draft-model qwen2.5-3b --spec-k 3
 """
 from __future__ import annotations
 
@@ -91,6 +95,21 @@ def main() -> int:
     ap.add_argument("--slo-ttft-ms", type=float, default=None,
                     help="TTFT SLO attached to the high-priority requests "
                          "(reported as slo_miss_rate)")
+    ap.add_argument("--draft-model", default=None, metavar="ARCH",
+                    help="enable speculative decoding with this arch as "
+                         "the drafter (paged KV only); greedy requests "
+                         "propose --spec-k tokens per step and the target "
+                         "verifies them in one batched pass — outputs are "
+                         "bit-identical to vanilla greedy.  Same arch as "
+                         "--arch = self-speculation (shares the target's "
+                         "weights)")
+    ap.add_argument("--spec-k", type=int, default=3, metavar="K",
+                    help="drafter tokens proposed per speculative round "
+                         "(each verify pass scores K+1 positions and "
+                         "commits 1..K+1 tokens)")
+    ap.add_argument("--no-spec", action="store_true",
+                    help="ignore --draft-model: run vanilla decode (the "
+                         "A/B baseline for speculative decoding)")
     ap.add_argument("--mode", choices=("continuous", "wave"),
                     default="continuous",
                     help="wave = legacy lock-step decode (single replica "
@@ -125,6 +144,19 @@ def main() -> int:
               prefix_sharing=not args.no_prefix_sharing,
               prefill_chunk=args.prefill_chunk,
               seeded_prefill=not args.no_seeded_prefill)
+    if args.draft_model and not args.no_spec:
+        if args.contiguous_kv:
+            ap.error("--draft-model needs the paged KV pool; "
+                     "drop --contiguous-kv")
+        if args.draft_model == args.arch:
+            draft_cfg, draft_params = cfg, params   # self-speculation
+        else:
+            draft_cfg = (arch_registry.smoke(args.draft_model) if args.smoke
+                         else arch_registry.config(args.draft_model))
+            draft_params = fns_for(draft_cfg).init(draft_cfg,
+                                                   jax.random.PRNGKey(1))
+        kw.update(draft_cfg=draft_cfg, draft_params=draft_params,
+                  spec_k=args.spec_k)
     if args.replicas > 1:
         replicas = [ServingEngine(cfg, params, **kw)
                     for _ in range(args.replicas)]
@@ -155,6 +187,12 @@ def main() -> int:
     if args.replicas > 1:
         print(f"router: affinity_hits={stats.router_affinity_hits}  "
               f"steals={stats.router_steals}")
+    if stats.spec_proposed:
+        spt = (f"{stats.steps_per_token:.2f}"
+               if stats.steps_per_token is not None else "n/a")
+        print(f"spec: accept_rate={stats.accept_rate:.2f}  "
+              f"verify_steps={stats.verify_steps}  "
+              f"decode_steps={stats.decode_steps}  steps/token={spt}")
     if stats.preemptions or stats.prefix_shared_blocks or stats.slo_tracked:
         miss = (f"{stats.slo_miss_rate:.2f}"
                 if stats.slo_miss_rate is not None else "n/a")

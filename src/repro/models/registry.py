@@ -40,9 +40,14 @@ class ModelFns:
     #                 q_start, kv_len, last_idx) -> (logits, state) —
     #     one prompt chunk written directly into pool blocks, attending
     #     over already-seeded blocks (cache-seeded chunked prefill)
+    #   verify_paged(cfg, params, tokens, state, table, q_start, kv_len)
+    #     -> ((B, C, V) logits, state) — speculative-decode verify: score
+    #     k+1 candidate tokens per slot in one pass, row-scattering their
+    #     KV through the (provisionally grown) block tables
     init_paged_state: Callable[..., Any] = None
     scatter_prefill: Callable[..., Any] = None
     prefill_paged: Callable[..., Any] = None
+    verify_paged: Callable[..., Any] = None
 
 
 # --- decoder-only transformers (dense / moe / vlm) -------------------------
@@ -70,6 +75,13 @@ def _tf_prefill_paged(cfg, params, tokens, state, write_ids, table, *,
                                      last_idx=last_idx, chunk=chunk)
 
 
+def _tf_verify_paged(cfg, params, tokens, state, table, *, q_start, kv_len,
+                     chunk=1024):
+    return transformer.verify_paged(cfg, params, tokens, state, table,
+                                    q_start=q_start, kv_len=kv_len,
+                                    chunk=chunk)
+
+
 def _tf_state(cfg, batch, max_len, cache_dtype="bfloat16"):
     return transformer.make_cache(cfg, batch, max_len, cache_dtype,
                                   length=jnp.full((batch,), max_len - 1,
@@ -81,7 +93,8 @@ TRANSFORMER_FNS = ModelFns("dense", transformer.init, _tf_forward,
                            table=transformer.lm_table,
                            init_paged_state=transformer.make_paged_cache,
                            scatter_prefill=transformer.scatter_prefill_blocks,
-                           prefill_paged=_tf_prefill_paged)
+                           prefill_paged=_tf_prefill_paged,
+                           verify_paged=_tf_verify_paged)
 
 
 # --- hybrid (zamba2) --------------------------------------------------------

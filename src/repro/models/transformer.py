@@ -290,10 +290,43 @@ def _paged_prefill_attend(cfg, q, k_new, v_new, pool_k, pool_v, scales,
     kv_len: (1,) valid rows incl. this chunk.  Seeded blocks (shared
     prefix, resumed history) are attended without being recomputed —
     causality against absolute positions does the masking.
+
+    ``write_ids=None`` switches to the *verify* write layout (speculative
+    decoding): q/k_new/v_new are (B, C) candidate rows starting at an
+    arbitrary in-block offset ``q_start`` per sequence, so instead of
+    whole-block writes each row is scattered individually through
+    ``table`` — row ``q_start + j`` lands at block ``table[b, pos // bs]``
+    offset ``pos % bs``.  Padding sequences carry all-trash tables, so
+    their rows (and any duplicate trash hits) are harmless garbage.
     """
     from repro.kernels.prefill_attention.ops import paged_prefill_attention
     N, bs, K, D = pool_k.shape
     C = q.shape[1]
+    if write_ids is None:
+        B = q.shape[0]
+        mb = table.shape[1]
+        pos = q_start[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
+        bi = jnp.clip(pos // bs, 0, mb - 1)
+        bt = jnp.take_along_axis(table, bi, axis=1)     # (B, C) physical
+        off = pos % bs
+        if scales is not None:
+            k_scale, v_scale = scales
+            kq, ksc = quantize_kv(k_new)
+            vq, vsc = quantize_kv(v_new)
+            nk = pool_k.at[bt, off].set(kq)
+            nv = pool_v.at[bt, off].set(vq)
+            nks = k_scale.at[bt, off].set(ksc)
+            nvs = v_scale.at[bt, off].set(vsc)
+            out = paged_prefill_attention(
+                q, nk, nv, table, q_start, kv_len, k_scale=nks, v_scale=nvs,
+                softcap=cfg.attn_logit_softcap, chunk=chunk)
+            return out, (nk, nv, nks, nvs)
+        nk = pool_k.at[bt, off].set(k_new.astype(pool_k.dtype))
+        nv = pool_v.at[bt, off].set(v_new.astype(pool_v.dtype))
+        out = paged_prefill_attention(q, nk, nv, table, q_start, kv_len,
+                                      softcap=cfg.attn_logit_softcap,
+                                      chunk=chunk)
+        return out, (nk, nv)
     kb = k_new[0].reshape(C // bs, bs, K, D)
     vb = v_new[0].reshape(C // bs, bs, K, D)
     if scales is not None:
@@ -584,6 +617,40 @@ def prefill_paged(cfg, params, tokens, cache, write_ids, table, *,
     lg = lm_logits(params["embed"], last, cfg.tie_embeddings,
                    cfg.final_logit_softcap)
     return lg[:, 0], new_cache
+
+
+def verify_paged(cfg, params, tokens, cache, table, *, q_start, kv_len,
+                 chunk=1024):
+    """Speculative-decode verify pass: score ``k + 1`` candidate tokens per
+    sequence in one batched target-model call.
+
+    tokens: (B, C) per-slot ``[t_0, d_1 .. d_k]`` — the pending greedy
+    token plus the drafter's proposals; cache: Paged/QuantPagedKVCache;
+    table: (B, max_blocks) per-slot read tables (provisionally grown to
+    cover the candidate rows; padding slots all-trash); q_start: (B,)
+    committed rows per slot (candidate row ``j`` sits at absolute position
+    ``q_start + j``); kv_len: (B,) ``q_start + C`` for live slots.
+
+    Unlike :func:`prefill_paged` this returns logits at *every* candidate
+    position — ``(B, C, V)`` with row ``j`` giving the target distribution
+    after ``t_0, d_1 .. d_j`` — so greedy acceptance can take the longest
+    drafter prefix matching the target's argmax chain.  Candidate KV rows
+    are row-scattered through ``table`` (``write_ids=None`` layout), so
+    accepted rows are already in place and the rejected tail sits in
+    blocks the engine hands back via ``release_provisional``.
+    """
+    B, C = tokens.shape
+    pos = q_start[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
+    pos = jnp.broadcast_to(pos, (B, C))
+    if cfg.m_rope:
+        pos = jnp.broadcast_to(pos[None], (3, B, C))
+    x, _, new_cache = _apply_backbone(
+        cfg, params, tokens, pos, remat=False, cache=cache, chunk=chunk,
+        paged_prefill=dict(write_ids=None, table=table,
+                           q_start=q_start, kv_len=kv_len))
+    lg = lm_logits(params["embed"], x, cfg.tie_embeddings,
+                   cfg.final_logit_softcap)
+    return lg, new_cache
 
 
 def decode_step(cfg, params, tokens, cache, *, chunk=2048):

@@ -64,6 +64,7 @@ from repro.serving.kv_pool import CapacityError, KVBlockPool
 from repro.serving.scheduler import (ContinuousScheduler, LoadSnapshot,
                                      Request, RequestState)
 from repro.serving.sampler import Sampler  # noqa: F401 (re-export)
+from repro.serving.sampler import greedy_accept_prefix
 
 
 # Declarative multi-replica merge spec: every ServeStats field MUST have a
@@ -75,14 +76,16 @@ from repro.serving.sampler import Sampler  # noqa: F401 (re-export)
 #   max      — window-level maximum (wall clock)
 #   extend   — per-request / per-step sample lists, concatenated
 #   opt_sum  — None-aware sum: stays None only when every input is None
-#   derived  — recomputed by the merging caller from already-merged fields
-#              (never copied across: a ratio of sums is not a sum of ratios)
+#   derived  — a ratio recomputed inside merge_from from already-merged
+#              numerators/denominators via _DERIVED (never copied or
+#              averaged across: a ratio of sums is not a sum of ratios)
 MERGE_RULES: dict[str, str] = {
     "requests": "sum",
     "tokens": "sum",
     "wall_s": "max",
     "prefills": "sum",
     "decode_steps": "sum",
+    "verify_steps": "sum",
     "occupancy_sum": "sum",
     "prefill_compiles": "sum",
     "preemptions": "sum",
@@ -93,11 +96,29 @@ MERGE_RULES: dict[str, str] = {
     "prefill_tokens_computed": "sum",
     "router_steals": "sum",
     "router_affinity_hits": "sum",
+    "spec_proposed": "sum",
+    "spec_accepted": "sum",
+    "accept_rate": "derived",       # merged accepted / merged proposed
     "kv_blocks_peak": "opt_sum",
+    "kv_pool_capacity": "opt_sum",
     "kv_pool_util": "derived",      # merged peak / combined capacity
     "ttft": "extend",
     "tpot": "extend",
     "decode_gaps": "extend",
+}
+
+# Recompute functions for every "derived" rule above, applied by
+# merge_from after the field-by-field fold (tests enforce the bijection
+# with MERGE_RULES).  Historically the *caller* was expected to recompute
+# these post-merge; the one caller that remembered (the router) only knew
+# about kv_pool_util, so any other merge path kept the first window's
+# stale ratio — hence: derive inside the merge, from merged parts.
+_DERIVED: dict[str, Callable[["ServeStats"], float | None]] = {
+    "kv_pool_util": lambda s: (
+        s.kv_blocks_peak / s.kv_pool_capacity
+        if s.kv_blocks_peak is not None and s.kv_pool_capacity else None),
+    "accept_rate": lambda s: (
+        s.spec_accepted / s.spec_proposed if s.spec_proposed else None),
 }
 
 
@@ -108,7 +129,9 @@ class ServeStats:
     wall_s: float = 0.0
     prefills: int = 0
     decode_steps: int = 0
-    occupancy_sum: float = 0.0          # sum over decode steps of active/slots
+    verify_steps: int = 0               # speculative multi-token target passes
+    occupancy_sum: float = 0.0          # sum over decode-cadence steps
+                                        # (decode + verify) of active/slots
     prefill_compiles: int = 0           # distinct jitted prefill signatures
     preemptions: int = 0                # decode evictions under queue pressure
     prefix_shared_blocks: int = 0       # table entries mapped to shared blocks
@@ -118,7 +141,11 @@ class ServeStats:
     prefill_tokens_computed: int = 0    # tokens actually run (rest seeded)
     router_steals: int = 0              # requests migrated to an idle replica
     router_affinity_hits: int = 0       # requests routed onto their prefix
+    spec_proposed: int = 0              # drafter tokens offered to verify
+    spec_accepted: int = 0              # ... committed (matched target argmax)
+    accept_rate: float | None = None    # spec only: accepted / proposed
     kv_blocks_peak: int | None = None   # paged only: peak pool blocks in use
+    kv_pool_capacity: int | None = None  # paged only: pool size in blocks
     kv_pool_util: float | None = None   # paged only: peak / capacity
     ttft: list = field(default_factory=list)    # per-request seconds
     tpot: list = field(default_factory=list)    # per-request seconds/token
@@ -130,9 +157,19 @@ class ServeStats:
 
     @property
     def slot_occupancy(self) -> float:
-        """Mean fraction of decode slots doing useful work per decode step."""
-        return self.occupancy_sum / self.decode_steps if self.decode_steps \
-            else 0.0
+        """Mean fraction of decode slots doing useful work per decode-
+        cadence step (vanilla decode or speculative verify)."""
+        steps = self.decode_steps + self.verify_steps
+        return self.occupancy_sum / steps if steps else 0.0
+
+    @property
+    def steps_per_token(self) -> float | None:
+        """Batched target-model passes (decode + verify) per generated
+        token — the raw-speed number speculative decoding moves: a verify
+        pass can commit several tokens per slot, so spec pushes this below
+        the vanilla value for the same workload."""
+        steps = self.decode_steps + self.verify_steps
+        return steps / self.tokens if self.tokens else None
 
     @property
     def ttft_p50_s(self) -> float | None:
@@ -191,10 +228,15 @@ class ServeStats:
                 if b is not None:
                     setattr(self, f.name, (a or 0) + b)
             elif rule == "derived":
-                pass                     # recomputed by the caller post-merge
+                pass                     # recomputed below from merged parts
             else:
                 raise ValueError(f"unknown merge rule {rule!r} "
                                  f"for ServeStats.{f.name}")
+        # derived ratios recompute from the merged numerators/denominators
+        # (copying or averaging per-window ratios would weight every window
+        # equally regardless of size)
+        for name, fn in _DERIVED.items():
+            setattr(self, name, fn(self))
         return self
 
     def fill_request_metrics(self, requests: list[Request]) -> None:
@@ -217,6 +259,9 @@ class WindowBase(NamedTuple):
     tokens: int
     prefills: int
     decode_steps: int
+    verify_steps: int
+    spec_proposed: int
+    spec_accepted: int
     occupancy_sum: float
     prefill_compiles: int
     preemptions: int
@@ -280,6 +325,145 @@ class _PrefillJob:
                                 # not yet materialized
 
 
+class _Drafter:
+    """The drafter side of speculative decoding: a small model with its own
+    paged KV pool, mirrored per engine slot.
+
+    The drafter's pool is sized worst-case (every slot at ``max_len`` plus
+    the speculative overhang), so drafter allocation can never fail and
+    never interacts with the target pool's admission control — the drafter
+    is an accelerator, not a tenant.  Per-slot state mirrors the engine's:
+    host block tables and valid-row counts, re-injected before every
+    batched drafter step.  The drafter lags the target by at most one
+    committed token (only after a step that accepted all ``k`` drafts was
+    the last committed token never fed to it), and :meth:`propose` feeds
+    that gap before the pending token, so drafter KV stays a prefix of
+    the committed stream at all times.
+    """
+
+    def __init__(self, cfg, params, *, slots: int, max_len: int,
+                 block_size: int, spec_k: int, chunk: int, cache_dtype: str):
+        self.cfg = cfg
+        self.params = params
+        self.fns = fns_for(cfg)
+        if self.fns.init_paged_state is None or self.fns.prefill_paged is None:
+            raise ValueError(f"draft family {cfg.family!r} has no paged-KV "
+                             f"support; speculative decoding needs it")
+        self.slots = slots
+        self.block_size = block_size
+        self.spec_k = spec_k
+        self.max_blocks = -(-(max_len + spec_k + 1) // block_size)
+        self.pool = KVBlockPool(slots * self.max_blocks, block_size)
+        self._tables = np.zeros((slots, self.max_blocks), np.int32)
+        self._lens = np.zeros((slots,), np.int32)
+        self._blocks: dict[int, list[int]] = {}
+        self._state = self.fns.init_paged_state(
+            cfg, self.pool.total_blocks, block_size, slots, self.max_blocks,
+            cache_dtype)
+        self._decode = jax.jit(
+            lambda p, t, s: self.fns.decode(cfg, p, t, s, chunk=chunk))
+        self._prefill = jax.jit(
+            lambda p, t, s, w, tb, qs, kl, li: self.fns.prefill_paged(
+                cfg, p, t, s, w, tb, q_start=qs, kv_len=kl, last_idx=li,
+                chunk=chunk))
+
+    def seed(self, slot: int, tokens: np.ndarray, rows: int) -> None:
+        """(Re-)prefill the drafter's mirror of a slot: allocate blocks for
+        ``rows`` worst-case KV rows (committed budget + overhang) and run
+        the prompt — called when the target's prefill completes, including
+        after a preemption resume (``tokens`` then carries the folded
+        output, exactly like the target's re-prefill)."""
+        self.drop(slot)
+        bs = self.block_size
+        nb = self.pool.blocks_for(rows)
+        took = self.pool.reserve(nb)
+        assert took, "drafter pool is sized worst-case; reserve cannot fail"
+        ids = self.pool.alloc_reserved(nb)
+        self._blocks[slot] = ids
+        self._tables[slot] = 0
+        self._tables[slot, :nb] = ids
+        P = len(tokens)
+        bucket = bs
+        while bucket < P:
+            bucket *= 2
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :P] = tokens
+        nbp = self.pool.blocks_for(P)
+        wids = np.zeros((bucket // bs,), np.int32)
+        wids[:nbp] = ids[:nbp]              # padding blocks write to trash
+        mb_eff = 1
+        while mb_eff < nbp:
+            mb_eff *= 2
+        mb_eff = min(mb_eff, self.max_blocks)
+        tbl = np.zeros((1, mb_eff), np.int32)
+        tbl[0, :min(nbp, mb_eff)] = ids[:min(nbp, mb_eff)]
+        _, self._state = self._prefill(
+            self.params, jnp.asarray(toks), self._state,
+            jnp.asarray(wids), jnp.asarray(tbl),
+            jnp.asarray([0], jnp.int32), jnp.asarray([P], jnp.int32),
+            jnp.int32(P - 1))
+        self._lens[slot] = P
+
+    def drop(self, slot: int) -> None:
+        """Release a slot's drafter blocks (finish, preemption, re-seed).
+        Idempotent: a slot preempted while the target was still prefilling
+        was never seeded."""
+        ids = self._blocks.pop(slot, None)
+        if ids:
+            self.pool.free(ids)
+        self._tables[slot] = 0
+        self._lens[slot] = 0
+
+    def set_len(self, slot: int, rows: int) -> None:
+        """Post-acceptance bookkeeping: ``rows`` drafter KV rows now hold
+        committed-stream tokens (the rejected drafter tail past them is
+        simply overwritten by the next propose round)."""
+        self._lens[slot] = rows
+
+    def length(self, slot: int) -> int:
+        return int(self._lens[slot])
+
+    def propose(self, jobs: list[tuple[int, list[int]]]) -> dict[int, list[int]]:
+        """Batched greedy proposal: for each ``(slot, queue)`` job — the
+        queue being any committed tokens the drafter has not seen yet plus
+        the slot's pending token ``t_0`` — feed the queue, then feed the
+        drafter its own argmax continuations until ``k`` proposals exist.
+        All jobs advance in lock-step batched (slots, 1) decode steps;
+        slots that finish early (shorter queues) write to the trash block.
+        """
+        k = self.spec_k
+        queues = {slot: list(q) for slot, q in jobs}
+        drafts: dict[int, list[int]] = {slot: [] for slot, _ in jobs}
+        write_pos = {slot: int(self._lens[slot]) for slot, _ in jobs}
+        steps = max(len(q) for _, q in jobs) + k - 1
+        for _ in range(steps):
+            feed = np.zeros((self.slots,), np.int32)
+            tbl = np.zeros_like(self._tables)
+            lens = np.zeros((self.slots,), np.int32)
+            live = []
+            for slot, _ in jobs:
+                if queues[slot]:
+                    tok = queues[slot].pop(0)
+                elif len(drafts[slot]) < k:
+                    tok = drafts[slot][-1]
+                else:
+                    continue                 # done: stays trash-targeted
+                feed[slot] = tok
+                tbl[slot] = self._tables[slot]
+                lens[slot] = write_pos[slot]
+                write_pos[slot] += 1
+                live.append(slot)
+            self._state = self._state._replace(
+                block_tables=jnp.asarray(tbl), length=jnp.asarray(lens))
+            last, self._state = self._decode(
+                self.params, jnp.asarray(feed)[:, None], self._state)
+            last = np.asarray(last)
+            for slot in live:
+                if not queues[slot] and len(drafts[slot]) < k:
+                    drafts[slot].append(int(np.argmax(last[slot])))
+        return drafts
+
+
 class ServingEngine:
     """One replica: continuous batching over a fixed-slot decode batch.
 
@@ -299,7 +483,8 @@ class ServingEngine:
                  cache_dtype: str = "bfloat16",
                  preemption: bool = True, prefix_sharing: bool = True,
                  prefill_chunk: int | None = None,
-                 seeded_prefill: bool = True):
+                 seeded_prefill: bool = True,
+                 draft_cfg=None, draft_params=None, spec_k: int = 3):
         self.cfg = cfg
         self.params = params
         self.fns = fns_for(cfg)
@@ -312,6 +497,24 @@ class ServingEngine:
             raise ValueError(f"family {cfg.family!r} has no paged-KV "
                              f"support (ModelFns.init_paged_state is None)")
         self.paged = paged
+        # speculative decoding: on iff a drafter model is given.  Greedy
+        # slots then run a multi-token verify step instead of the vanilla
+        # decode; non-greedy slots (and spec-off engines) are untouched.
+        spec = draft_cfg is not None
+        if spec:
+            if not paged:
+                raise ValueError("speculative decoding needs the paged KV "
+                                 "engine (candidate rows are provisional "
+                                 "pool blocks)")
+            if spec_k < 1:
+                raise ValueError(f"spec_k={spec_k} must be >= 1")
+            if self.fns.verify_paged is None:
+                raise ValueError(f"family {cfg.family!r} has no verify pass "
+                                 f"(ModelFns.verify_paged is None)")
+        self.spec_k = spec_k if spec else 0
+        # worst-case provisional rows a verify step may write past a slot's
+        # committed length: the pending token plus k draft candidates
+        self.spec_rows = (spec_k + 1) if spec else 0
         self.block_size = block_size
         self.cache_dtype = cache_dtype
         self.prefix_sharing = prefix_sharing and paged
@@ -348,9 +551,13 @@ class ServingEngine:
                 f"{cfg.sliding_window}, which the paged KV attention "
                 f"paths do not mask — serve it with paged=False")
         if paged:
-            worst = batch_slots * -(-max_len // block_size)
+            worst = batch_slots * -(-(max_len + self.spec_rows)
+                                    // block_size)
             self.pool = KVBlockPool(pool_blocks or worst, block_size)
-            self.max_blocks = self.pool.blocks_for(max_len)
+            # table width covers the speculative overhang: a verify pass
+            # provisionally writes up to spec_rows rows past max_len-ish
+            # committed lengths before acceptance trims them back
+            self.max_blocks = self.pool.blocks_for(max_len + self.spec_rows)
             self._prefix_cap = 8 * self.pool.capacity
             # host mirrors of the device block tables / lengths: growth and
             # slot retirement are numpy writes, re-injected every step
@@ -368,8 +575,20 @@ class ServingEngine:
                     last_idx=li, chunk=chunk))
         else:
             self.pool = None
+        if spec:
+            self._drafter = _Drafter(
+                draft_cfg, draft_params, slots=batch_slots, max_len=max_len,
+                block_size=block_size, spec_k=spec_k, chunk=chunk,
+                cache_dtype=cache_dtype)
+            self._verify = jax.jit(
+                lambda p, t, s, tb, qs, kl: self.fns.verify_paged(
+                    cfg, p, t, s, tb, q_start=qs, kv_len=kl, chunk=chunk))
+        else:
+            self._drafter = None
+        self._spec_on: set = set()           # slots decoding speculatively
         self.scheduler = ContinuousScheduler(batch_slots, pool=self.pool,
-                                             preemption=preemption)
+                                             preemption=preemption,
+                                             spec_rows=self.spec_rows)
         self._decode = jax.jit(
             lambda p, t, s: self.fns.decode(cfg, p, t, s, chunk=chunk))
         # jitted prefill, shape-keyed: one compile per (batch, prompt-len)
@@ -406,7 +625,7 @@ class ServingEngine:
                 f"max_new_tokens {req.max_new_tokens} exceeds KV capacity "
                 f"max_len={self.max_len}")
         if self.pool is not None:
-            self.pool.validate_rows(req.kv_rows, req.rid)
+            self.pool.validate_rows(req.kv_rows + self.spec_rows, req.rid)
 
     def _batch_for(self, prompts: np.ndarray) -> dict:
         """prompts: (W, S) -> model batch dict (positions/frames as needed)."""
@@ -625,8 +844,22 @@ class ServingEngine:
         if job.pos == P:                     # logits of the last real token
             del self._prefilling[slot]
             self._tables[slot] = 0
-            self._tables[slot, :job.nb] = req.block_ids
-            self._lengths[slot] = P
+            if slot in self._spec_on:
+                # speculative slots never join the batched vanilla decode:
+                # their batched-state table row stays at trash (the decode
+                # step's write for this slot must keep landing nowhere) and
+                # the verify pass addresses the real blocks through its own
+                # per-step table argument.  Seed the drafter's mirror now —
+                # after a preemption resume ``job.tokens`` carries the
+                # folded committed output, so the drafter re-prefills the
+                # same history the target just did.
+                self._lengths[slot] = 0
+                self._drafter.seed(
+                    slot, job.tokens,
+                    len(req.prompt) + req.max_new_tokens + self.spec_k)
+            else:
+                self._tables[slot, :job.nb] = req.block_ids
+                self._lengths[slot] = P
             self._set_last(slot, np.asarray(last[0]))
             if self.prefix_sharing:
                 self._register_prefix(job.keys, req)
@@ -681,10 +914,22 @@ class ServingEngine:
             for slot, _ in self.scheduler.drain_preempted():
                 self._retire_slot(slot)
                 self._prefilling.pop(slot, None)
+                if self._drafter is not None:
+                    # the victim's drafter mirror dies with its target KV;
+                    # a resume re-seeds it from the folded committed output
+                    self._drafter.drop(slot)
+                    self._spec_on.discard(slot)
         for slot, req in admitted:
             self.totals.prefills += 1
             if self._state is None:
                 self._state = self._init_state()
+            if self._drafter is not None:
+                # speculation is per-slot: only greedy samplers have the
+                # argmax-chain acceptance that keeps outputs bit-identical
+                if req.sampler.batch_key == "greedy":
+                    self._spec_on.add(slot)
+                else:
+                    self._spec_on.discard(slot)
             if self.paged:
                 self._admit_paged(slot, req)
                 if self.prefill_chunk is None:
@@ -722,6 +967,15 @@ class ServingEngine:
             self._last_decode_end = None
             return bool(self._prefilling)
 
+        spec = ([(s, r) for s, r in active if s in self._spec_on]
+                if self._drafter is not None else [])
+        spec_slots = {s for s, _ in spec}
+        if spec:
+            self._verify_step(spec)
+        active = [(s, r) for s, r in active if s not in spec_slots]
+        if not active:
+            return True
+
         toks = self._sample_active(active)
         now = time.monotonic()
         feed = np.zeros((self.slots,), np.int32)
@@ -741,27 +995,151 @@ class ServingEngine:
                 if req.on_finish is not None:
                     req.on_finish(req)
 
-        still = self.scheduler.decoding()
+        still = [(s, r) for s, r in self.scheduler.decoding()
+                 if s not in self._spec_on]
         if still:        # someone needs next-token logits
             if self.paged:
                 self._grow_paged(still)
             last, self._state = self._decode(
                 self.params, jnp.asarray(feed)[:, None], self._state)
-            self._last = np.asarray(last)
-            now = time.monotonic()
-            if self._last_decode_end is not None:
-                gaps = self.totals.decode_gaps
-                gaps.append(now - self._last_decode_end)
-                if len(gaps) > 65536:        # bound the lifetime list: a
-                    drop = len(gaps) // 2    # service-mode engine decodes
-                    del gaps[:drop]          # indefinitely
-                    self._gaps_dropped += drop
-            self._last_decode_end = now
+            last = np.asarray(last)
+            if self._spec_on:
+                # speculative slots fed 0 against trash tables: their rows
+                # of this batched decode are garbage, and their real next-
+                # token logits (set by the verify pass) must survive it
+                keep = sorted(self._spec_on)
+                last = last.copy()
+                last[keep] = self._last[keep]
+            self._last = last
+            self._note_decode_cadence()
             self.totals.decode_steps += 1
             self.totals.occupancy_sum += len(still) / self.slots
         else:
             self._last_decode_end = None     # cadence broken, not stalled
         return True
+
+    def _note_decode_cadence(self) -> None:
+        """Record the wall-clock gap since the previous decode-cadence step
+        (vanilla decode or speculative verify) — chunked-prefill stalls
+        surface here as ``decode_gaps`` outliers."""
+        now = time.monotonic()
+        if self._last_decode_end is not None:
+            gaps = self.totals.decode_gaps
+            gaps.append(now - self._last_decode_end)
+            if len(gaps) > 65536:            # bound the lifetime list: a
+                drop = len(gaps) // 2        # service-mode engine decodes
+                del gaps[:drop]              # indefinitely
+                self._gaps_dropped += drop
+        self._last_decode_end = now
+
+    def _verify_step(self, spec: list[tuple[int, Request]]) -> None:
+        """One speculative draft-and-verify round for every speculative
+        decoding slot: propose ``k`` drafter tokens per slot, score the
+        pending greedy token plus all drafts in one batched target pass,
+        commit the longest prefix of drafts matching the target's argmax
+        chain, and roll back the rejected tail's provisional blocks.
+
+        Engine invariant (identical to vanilla decode): entering with
+        ``n`` committed output tokens, KV rows ``0 .. P+n-1`` are written
+        and ``self._last[slot]`` holds the target distribution after the
+        committed stream.  The verify feeds ``[t_0, d_1 .. d_k]`` with
+        ``t_0 = argmax(_last)`` at ``q_start = P+n``, so row ``j``'s
+        logits condition on exactly the tokens vanilla greedy would have
+        committed — acceptance can only reproduce the vanilla stream, and
+        every committed token's KV row was already written by the pass
+        that scored it.  Each round commits at least one token (``t_0``),
+        so ``verify_steps <= `` the baseline's decode steps, strictly
+        fewer as soon as any draft is accepted.
+        """
+        k = self.spec_k
+        C = k + 1
+        bs = self.block_size
+        # 1. drafter proposals, seeded with any committed tokens the
+        # drafter has not ingested yet (lag <= 1 after an all-accept round)
+        pending: dict[int, int] = {}
+        jobs: list[tuple[int, list[int]]] = []
+        for slot, req in spec:
+            P = len(req.prompt)
+            t0 = int(req.sampler.sample(self._last[slot][None])[0])
+            pending[slot] = t0
+            dlen = self._drafter.length(slot)
+            gap = [int(t) for t in req.output[dlen - P:]]
+            jobs.append((slot, gap + [t0]))
+        drafts = self._drafter.propose(jobs)
+        # 2. provisional growth + batched verify over all spec slots
+        tokens = np.zeros((self.slots, C), np.int32)
+        qs = np.zeros((self.slots,), np.int32)
+        kl = np.full((self.slots,), C, np.int32)  # padding rows see only
+        mb_need = 1                               # trash-block garbage
+        for slot, req in spec:
+            q0 = len(req.prompt) + len(req.output)
+            nb_need = -(-(q0 + C) // bs)
+            grow = nb_need - len(req.block_ids)
+            if grow > 0:
+                # materialize provisional blocks out of the admission
+                # reservation (which budgeted +spec_rows for exactly this)
+                req.block_ids.extend(self.pool.alloc_reserved(grow))
+                req.blocks_reserved -= grow
+            tokens[slot, 0] = pending[slot]
+            tokens[slot, 1:] = drafts[slot]
+            qs[slot] = q0
+            kl[slot] = q0 + C
+            mb_need = max(mb_need, nb_need)
+        mb_eff = 1
+        while mb_eff < mb_need:
+            mb_eff *= 2
+        mb_eff = min(mb_eff, self.max_blocks)
+        tbl = np.zeros((self.slots, mb_eff), np.int32)
+        for slot, req in spec:
+            tbl[slot, :len(req.block_ids)] = req.block_ids
+        self._prefill_shapes.add((self.slots, C, mb_eff))
+        logits, self._state = self._verify(
+            self.params, jnp.asarray(tokens), self._state,
+            jnp.asarray(tbl), jnp.asarray(qs), jnp.asarray(kl))
+        logits = np.asarray(logits)              # (slots, C, V)
+        # 3. vectorized longest-prefix acceptance
+        rows = np.array([s for s, _ in spec])
+        accepted, _ = greedy_accept_prefix(
+            logits[rows], np.array([drafts[s] for s, _ in spec]))
+        now = time.monotonic()
+        for (slot, req), m in zip(spec, accepted):
+            commit = [pending[slot]] + drafts[slot][:int(m)]
+            commit = commit[:req.max_new_tokens - len(req.output)]
+            self.totals.spec_proposed += k
+            self.totals.spec_accepted += len(commit) - 1
+            if req.first_token_at is None:
+                req.first_token_at = now
+            req.output.extend(commit)
+            self.totals.tokens += len(commit)
+            # next-token logits after the last committed token: verify row
+            # j conditions on commits[0..j], so row len(commit)-1 is it
+            self._set_last(slot, logits[slot, len(commit) - 1])
+            # trim the rejected tail's blocks back into the reservation
+            nb_keep = -(-(len(req.prompt) + len(req.output)) // bs)
+            tail = req.block_ids[nb_keep:]
+            if tail:
+                self.pool.release_provisional(tail)
+                req.blocks_reserved += len(tail)
+                del req.block_ids[nb_keep:]
+            if len(req.output) >= req.max_new_tokens:
+                req.state = RequestState.DONE
+                req.finished_at = time.monotonic()
+                self.scheduler.release(slot)
+                self._retire_slot(slot)
+                self._drafter.drop(slot)
+                self._spec_on.discard(slot)
+                if req.on_finish is not None:
+                    req.on_finish(req)
+            else:
+                # drafter rows holding committed-stream tokens: the fed
+                # t_0 plus accepted drafts d_1..d_{m} occupy rows up to
+                # q_start + min(len(commit), k) - 1 (d_k is proposed but
+                # never fed back)
+                q0 = int(qs[slot])
+                self._drafter.set_len(slot, q0 + min(len(commit), k))
+        self._note_decode_cadence()
+        self.totals.verify_steps += 1
+        self.totals.occupancy_sum += len(spec) / self.slots
 
     # -- measurement windows ---------------------------------------------------
 
@@ -776,6 +1154,9 @@ class ServingEngine:
         return WindowBase(
             tokens=self.totals.tokens, prefills=self.totals.prefills,
             decode_steps=self.totals.decode_steps,
+            verify_steps=self.totals.verify_steps,
+            spec_proposed=self.totals.spec_proposed,
+            spec_accepted=self.totals.spec_accepted,
             occupancy_sum=self.totals.occupancy_sum,
             prefill_compiles=self.prefill_compiles,
             preemptions=self.scheduler.preemptions,
@@ -793,6 +1174,11 @@ class ServingEngine:
         stats.tokens = self.totals.tokens - base.tokens
         stats.prefills = self.totals.prefills - base.prefills
         stats.decode_steps = self.totals.decode_steps - base.decode_steps
+        stats.verify_steps = self.totals.verify_steps - base.verify_steps
+        stats.spec_proposed = self.totals.spec_proposed - base.spec_proposed
+        stats.spec_accepted = self.totals.spec_accepted - base.spec_accepted
+        if stats.spec_proposed:
+            stats.accept_rate = stats.spec_accepted / stats.spec_proposed
         stats.occupancy_sum = self.totals.occupancy_sum - base.occupancy_sum
         stats.prefill_compiles = self.prefill_compiles - base.prefill_compiles
         stats.preemptions = self.scheduler.preemptions - base.preemptions
@@ -806,6 +1192,7 @@ class ServingEngine:
             max(0, base.decode_gap_n - self._gaps_dropped):])
         if self.pool is not None:
             stats.kv_blocks_peak = self.pool.peak_used
+            stats.kv_pool_capacity = self.pool.capacity
             stats.kv_pool_util = self.pool.utilization
         stats.fill_request_metrics(requests)
         return stats

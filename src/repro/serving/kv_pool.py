@@ -183,6 +183,38 @@ class KVBlockPool:
                     released.append(b)
         return released
 
+    def release_provisional(self, ids: list[int]) -> None:
+        """Return *provisionally grown* blocks — the rejected tail of a
+        speculative verify step — and re-promise them to the caller.
+
+        This is the rollback half of a grow-then-reject cycle: the engine
+        ``alloc_reserved``s blocks for candidate KV rows before the verify
+        pass, then hands back the ones past the accepted prefix.  Unlike
+        :meth:`free`, the cycle must be *invisible*: each block's generation
+        tag is rolled back to its pre-grow value (a provisional block never
+        held published rows, so no prefix-index entry can alias it) and the
+        blocks go back to being reserved rather than free, so another
+        request can't race in and shrink the caller's worst-case budget.
+
+        Provisional blocks are by construction unshared; passing a block
+        with refcount != 1 (or a free block) raises without mutating.
+        """
+        with self._lock:
+            for b in ids:
+                refs = self._refs.get(b)
+                if refs is None:
+                    raise ValueError(
+                        f"release_provisional of unallocated KV block {b}")
+                if refs != 1:
+                    raise ValueError(
+                        f"release_provisional of shared KV block {b} "
+                        f"(refcount {refs})")
+            for b in ids:
+                del self._refs[b]
+                self._gen[b] -= 1
+                self._free.append(b)
+            self._reserved += len(ids)
+
     # -- prefix-index support ----------------------------------------------------
 
     def refcount(self, block_id: int) -> int:

@@ -205,7 +205,7 @@ class ReplicaRouter:
             e = self.replicas[i]
             return (snap.queued + (e.slots - snap.free_slots), 0, 0, i)
         e = self.replicas[i]
-        need = (e.pool.blocks_for(req.kv_rows)
+        need = (e.pool.blocks_for(req.kv_rows + e.spec_rows)
                 if e.pool is not None else 0)
         fits_now = (snap.free_slots > 0
                     and (snap.free_blocks is None
@@ -247,7 +247,10 @@ class ReplicaRouter:
             if req.kv_rows > thief.max_len:      # per-slot KV capacity
                 return False
             if thief.pool is not None:
-                need = thief.pool.blocks_for(req.kv_rows)
+                # the thief's own speculative overhang rides on top of the
+                # request's worst case, exactly as its admission will charge
+                need = thief.pool.blocks_for(req.kv_rows
+                                             + thief.spec_rows)
                 if need > min(snap.free_blocks, thief.pool.capacity):
                     return False
             return True
@@ -355,10 +358,9 @@ class ReplicaRouter:
         stats.router_steals = self.stats.steals - rbase.steals
         stats.router_affinity_hits = (self.stats.affinity_hits
                                       - rbase.affinity_hits)
-        cap = sum(e.pool.capacity for e in self.replicas
-                  if e.pool is not None)
-        if stats.kv_blocks_peak is not None and cap:
-            stats.kv_pool_util = stats.kv_blocks_peak / cap   # derived rule
+        # derived ratios (kv_pool_util, accept_rate) were recomputed by
+        # merge_from itself from the merged peaks/capacities/counters —
+        # no caller-side fixup to forget here
         stats.fill_request_metrics(requests)
         return stats
 

@@ -177,11 +177,16 @@ class ContinuousScheduler:
     """
 
     def __init__(self, num_slots: int, pool: KVBlockPool | None = None, *,
-                 preemption: bool = True):
+                 preemption: bool = True, spec_rows: int = 0):
         assert num_slots >= 1
         self.num_slots = num_slots
         self.pool = pool
         self.preemption = preemption
+        # speculative decoding: each slot may hold up to ``spec_rows``
+        # provisional candidate KV rows past its committed length during a
+        # verify pass, so worst-case reservations must budget for them —
+        # otherwise a verify-time grow could exceed the admission promise
+        self.spec_rows = spec_rows
         self.slots: list[Request | None] = [None] * num_slots
         # heap of (-priority, slo deadline, arrival seq, request); the seq
         # is unique per scheduler so requests themselves are never compared
@@ -196,7 +201,7 @@ class ContinuousScheduler:
 
     def submit(self, req: Request) -> None:
         if self.pool is not None:
-            self.pool.validate_rows(req.kv_rows, req.rid)
+            self.pool.validate_rows(req.kv_rows + self.spec_rows, req.rid)
         with self._work:
             if req.submitted_at is None:     # stamp at submission, not at
                 req.submitted_at = time.monotonic()  # Request construction
@@ -237,7 +242,7 @@ class ContinuousScheduler:
                 req = self._heap[0][3]
                 slot = next((i for i, r in enumerate(self.slots)
                              if r is None), None)
-                need = (self.pool.blocks_for(req.kv_rows)
+                need = (self.pool.blocks_for(req.kv_rows + self.spec_rows)
                         if self.pool is not None else 0)
                 # NB: reserve only once a slot exists, so a blocked head
                 # never strands a reservation it cannot use yet

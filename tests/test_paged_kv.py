@@ -83,6 +83,35 @@ def test_pool_refcount_share_free_and_double_free():
         pool.share([ids[0]])
 
 
+def test_pool_release_provisional_grow_then_reject_is_invisible():
+    """The speculative grow-then-reject cycle leaves every observable pool
+    facet — free list, reservation ledger, refcounts, generation tags —
+    exactly as it started, so a fully-rejected verify round is a no-op."""
+    pool = KVBlockPool(6, block_size=8)
+    pool.reserve(2)
+    held = pool.alloc_reserved(2)                # a request's committed KV
+    pool.reserve(2)                              # the +spec_rows budget
+    before = (pool.free_blocks, pool.used_blocks, pool.reserved_blocks,
+              [pool.generation(b) for b in range(pool.total_blocks)],
+              {b: pool.refcount(b) for b in range(pool.total_blocks)})
+    grown = pool.alloc_reserved(2)               # provisional verify rows
+    assert pool.used_blocks == 4 and pool.reserved_blocks == 0
+    pool.release_provisional(grown)              # verify rejected them all
+    after = (pool.free_blocks, pool.used_blocks, pool.reserved_blocks,
+             [pool.generation(b) for b in range(pool.total_blocks)],
+             {b: pool.refcount(b) for b in range(pool.total_blocks)})
+    assert after == before
+    # the returned blocks are reserved again: re-growing cannot fail
+    assert pool.alloc_reserved(2) and pool.reserved_blocks == 0
+    # misuse raises without mutating: free blocks and shared blocks
+    pool.share([held[0]])
+    with pytest.raises(ValueError, match="shared"):
+        pool.release_provisional([held[0]])
+    with pytest.raises(ValueError, match="unallocated"):
+        pool.release_provisional([KVBlockPool.TRASH])
+    assert pool.refcount(held[0]) == 2           # nothing was mutated
+
+
 def test_pool_generation_invalidates_stale_prefix_entries():
     """A (block, generation) tag goes dead on free and stays dead when the
     block is re-allocated for different contents — the prefix index can

@@ -50,6 +50,34 @@ def test_merge_from_semantics():
     assert c.kv_blocks_peak is None            # opt_sum: all-None stays None
 
 
+def test_every_derived_rule_has_a_recompute():
+    """Bijection between 'derived' MERGE_RULES entries and the _DERIVED
+    recompute table: a derived field without a recompute would silently
+    keep replica-0's stale ratio after a fleet merge."""
+    derived = {k for k, v in MERGE_RULES.items() if v == "derived"}
+    assert derived == set(engine_mod._DERIVED), \
+        derived ^ set(engine_mod._DERIVED)
+
+
+def test_merge_recomputes_derived_ratios_from_merged_counters():
+    """Fleet ratios are ratio-of-sums, not average-of-ratios: an idle
+    replica with a big pool must drag fleet utilization down, and a
+    replica that proposed nothing must not dilute accept_rate as a 0."""
+    a = ServeStats(kv_blocks_peak=5, kv_pool_capacity=10, kv_pool_util=0.5,
+                   spec_proposed=10, spec_accepted=9, accept_rate=0.9)
+    b = ServeStats(kv_blocks_peak=1, kv_pool_capacity=30, kv_pool_util=1 / 30,
+                   spec_proposed=30, spec_accepted=0, accept_rate=0.0)
+    a.merge_from(b)
+    assert a.kv_blocks_peak == 6 and a.kv_pool_capacity == 40
+    assert a.kv_pool_util == 6 / 40            # not (0.5 + 1/30) / 2
+    assert a.spec_proposed == 40 and a.spec_accepted == 9
+    assert a.accept_rate == 9 / 40             # not (0.9 + 0.0) / 2
+    # and a merge with no data nulls the ratios instead of inventing them
+    c = ServeStats(kv_pool_util=0.7, accept_rate=0.9)
+    c.merge_from(ServeStats())
+    assert c.kv_pool_util is None and c.accept_rate is None
+
+
 # -- placement policy (unit, fake replicas) ------------------------------------
 
 class _FakePool:
@@ -64,9 +92,10 @@ class _FakePool:
 
 class _FakeReplica:
     """Just enough surface for ReplicaRouter placement: pool, slots,
-    block_size, load_snapshot."""
+    block_size, spec_rows, load_snapshot."""
     block_size = 16
     slots = 4
+    spec_rows = 0        # non-speculative: no per-request verify overhang
 
     def __init__(self, snap: LoadSnapshot):
         self.pool = _FakePool()

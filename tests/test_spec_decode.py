@@ -1,0 +1,261 @@
+"""Speculative decoding on the paged pool: bit-identical greedy acceptance.
+
+Edge cases use a deterministic drafter stub (oracle / adversary) swapped in
+for the engine's real drafter, so accept-all and accept-zero are exact; the
+real shared-weights drafter is covered separately (its accept rate is high
+but not guaranteed 1.0 — drafter decode and target verify reduce in
+different orders, so argmax near-ties can flip).
+"""
+import jax
+import numpy as np
+
+from repro.configs import registry as R
+from repro.models.registry import fns_for
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.sampler import greedy, greedy_accept_prefix
+
+
+def _smoke():
+    cfg = R.smoke("qwen2.5-3b")
+    params = fns_for(cfg).init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(cfg, n, size, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=size).astype(np.int32)
+            for _ in range(n)]
+
+
+def _vanilla(cfg, params, prompts, max_new, **kw):
+    """Non-speculative paged greedy baseline: (outputs per rid, stats)."""
+    eng = ServingEngine(cfg, params, paged=True, **kw)
+    reqs = [Request(i, p.copy(), max_new_tokens=max_new, sampler=greedy())
+            for i, p in enumerate(prompts)]
+    st = eng.serve(reqs)
+    return {r.rid: list(r.output) for r in reqs}, st
+
+
+def _spec_serve(cfg, params, prompts, max_new, *, drafter=None, **kw):
+    """Speculative run; optionally swap the real drafter for a stub."""
+    eng = ServingEngine(cfg, params, paged=True, draft_cfg=cfg,
+                        draft_params=params, **kw)
+    if drafter is not None:
+        eng._drafter = drafter(eng)
+    reqs = [Request(i, p.copy(), max_new_tokens=max_new, sampler=greedy())
+            for i, p in enumerate(prompts)]
+    st = eng.serve(reqs)
+    return {r.rid: list(r.output) for r in reqs}, st, eng
+
+
+class _StubDrafter:
+    """Drafter-protocol stub with scripted proposals.
+
+    mode="oracle": proposes the exact vanilla continuation (accept-all-k).
+    mode="adversary": proposes tokens guaranteed to miss the target argmax
+    (accept-zero — every verify round commits only the pending token).
+    """
+
+    def __init__(self, eng, continuations, k, vocab, mode):
+        self.eng = eng
+        self.cont = continuations        # rid -> full vanilla output
+        self.k = k
+        self.vocab = vocab
+        self.mode = mode
+        self._lens: dict[int, int] = {}
+
+    def seed(self, slot, tokens, rows):
+        self._lens[slot] = len(tokens)
+
+    def drop(self, slot):
+        self._lens.pop(slot, None)
+
+    def set_len(self, slot, rows):
+        self._lens[slot] = rows
+
+    def length(self, slot):
+        return self._lens.get(slot, 0)
+
+    def propose(self, jobs):
+        out = {}
+        for slot, queue in jobs:
+            req = self.eng.scheduler.slots[slot]
+            seq = self.cont[req.rid]
+            n = len(req.output)          # t_0 = seq[n]; drafts score rows
+            want = [int(t) for t in seq[n + 1:n + 1 + self.k]]
+            while len(want) < self.k:
+                want.append(0)
+            if self.mode == "adversary":
+                want = [(t + 1) % self.vocab for t in want]
+            self._lens[slot] = self._lens.get(slot, 0) + len(queue)
+            out[slot] = want
+        return out
+
+    @property
+    def pool(self):                      # engine never touches it; tests do
+        return None
+
+
+def test_greedy_accept_prefix_unit():
+    V = 5
+    logits = np.full((3, 4, V), -1.0)
+    # row j's argmax is the target for draft d_{j+1}: drafts [2, 3, 1]
+    chains = [[2, 3, 1, 4],              # all three match     -> accept 3
+              [0, 3, 1, 4],              # first draft misses  -> accept 0
+              [2, 3, 0, 4]]              # third draft misses  -> accept 2
+    for b, chain in enumerate(chains):
+        for j, t in enumerate(chain):
+            logits[b, j, t] = 1.0
+    drafts = np.array([[2, 3, 1]] * 3)
+    accepted, targets = greedy_accept_prefix(logits, drafts)
+    assert accepted.tolist() == [3, 0, 2]
+    assert targets.tolist() == chains
+
+
+def test_oracle_drafter_accepts_all_k():
+    """An oracle drafter makes every round commit k+1 tokens: max_new=8
+    with k=3 finishes in exactly 2 verify passes at accept_rate 1.0."""
+    cfg, params = _smoke()
+    prompts = _prompts(cfg, 3, 9, seed=3)
+    kw = dict(max_len=32, batch_slots=2, block_size=8, spec_k=3)
+    base, st0 = _vanilla(cfg, params, prompts, 8,
+                         **{k: v for k, v in kw.items() if k != "spec_k"})
+    out, st, eng = _spec_serve(
+        cfg, params, prompts, 8,
+        drafter=lambda e: _StubDrafter(e, base, 3, cfg.vocab_size, "oracle"),
+        **kw)
+    assert out == base
+    # two waves (2 reqs then 1 on 2 slots), 2 batched rounds each
+    assert st.verify_steps == 4 and st.decode_steps == 0
+    assert st.accept_rate == 1.0
+    assert st.spec_proposed == st.spec_accepted == 3 * 2 * 3  # slot-rounds*k
+    # vanilla: first token comes from prefill logits, so max_new-1 decode
+    # steps per wave, two waves on 2 slots
+    assert st0.decode_steps == 2 * 7
+    assert st.steps_per_token < st0.steps_per_token
+    assert eng.pool.used_blocks == 0 and eng.pool.reserved_blocks == 0
+
+
+def test_adversarial_drafter_accepts_zero():
+    """Every draft misses: each round commits only the pending greedy
+    token — output still bit-identical, one verify round per token (one
+    more than vanilla's max_new-1 decode steps, since vanilla gets its
+    first token free from the prefill logits), accept_rate exactly 0."""
+    cfg, params = _smoke()
+    prompts = _prompts(cfg, 2, 9, seed=4)
+    kw = dict(max_len=32, batch_slots=2, block_size=8, spec_k=3)
+    base, st0 = _vanilla(cfg, params, prompts, 6,
+                         **{k: v for k, v in kw.items() if k != "spec_k"})
+    out, st, eng = _spec_serve(
+        cfg, params, prompts, 6,
+        drafter=lambda e: _StubDrafter(e, base, 3, cfg.vocab_size,
+                                       "adversary"),
+        **kw)
+    assert out == base
+    assert st.verify_steps == 6 and st0.decode_steps == 5
+    assert st.spec_accepted == 0 and st.accept_rate == 0.0
+    # every round grew provisional blocks for rejected rows and rolled
+    # them back; nothing may leak
+    assert eng.pool.used_blocks == 0 and eng.pool.reserved_blocks == 0
+
+
+def test_real_drafter_shared_weights_bit_identical():
+    """Self-speculation (drafter == target weights): outputs match vanilla
+    greedy exactly and the accept rate is high enough to save steps."""
+    cfg, params = _smoke()
+    prompts = _prompts(cfg, 3, 9, seed=5)
+    kw = dict(max_len=32, batch_slots=2, block_size=8)
+    base, st0 = _vanilla(cfg, params, prompts, 10, **kw)
+    out, st, eng = _spec_serve(cfg, params, prompts, 10, spec_k=3, **kw)
+    assert out == base
+    assert st.accept_rate is not None and st.accept_rate > 0.5
+    assert st.decode_steps + st.verify_steps < st0.decode_steps
+    assert eng.pool.used_blocks == 0 and eng.pool.reserved_blocks == 0
+    assert (eng._drafter.pool.used_blocks == 0
+            and eng._drafter.pool.reserved_blocks == 0)
+
+
+def test_acceptance_crosses_block_boundary_mid_verify():
+    """Prompt of 6 rows with block_size 8: the first verify writes rows
+    6..9, spanning the block-0/block-1 boundary, and the accepted commit
+    lands tokens on both sides of it."""
+    cfg, params = _smoke()
+    prompts = _prompts(cfg, 2, 6, seed=6)
+    kw = dict(max_len=32, batch_slots=2, block_size=8, spec_k=3)
+    base, _ = _vanilla(cfg, params, prompts, 8,
+                       **{k: v for k, v in kw.items() if k != "spec_k"})
+    out, st, eng = _spec_serve(
+        cfg, params, prompts, 8,
+        drafter=lambda e: _StubDrafter(e, base, 3, cfg.vocab_size, "oracle"),
+        **kw)
+    assert out == base
+    assert st.accept_rate == 1.0
+    assert eng.pool.used_blocks == 0 and eng.pool.reserved_blocks == 0
+
+
+def test_spec_slot_preempted_folds_only_committed_tokens():
+    """A speculative decode evicted by a higher-priority request resumes
+    from its committed stream only — no provisional verify rows leak into
+    the fold — and still finishes with the un-preempted greedy output."""
+    cfg, params = _smoke()
+    bs = 8
+    rng = np.random.default_rng(17)
+    prefix = rng.integers(0, cfg.vocab_size, size=2 * bs).astype(np.int32)
+    anchor_prompt = np.concatenate([prefix, rng.integers(
+        0, cfg.vocab_size, size=4).astype(np.int32)])
+    victim_prompt = np.concatenate([prefix, rng.integers(
+        0, cfg.vocab_size, size=4).astype(np.int32)])
+    vanilla, _ = _vanilla(cfg, params, [victim_prompt], 24, max_len=44,
+                          batch_slots=1, block_size=bs)
+    expect = vanilla[0]
+    anchor = Request(0, anchor_prompt, max_new_tokens=16,
+                     sampler=greedy(), priority=1)
+    victim = Request(1, victim_prompt, max_new_tokens=24,
+                     sampler=greedy(), priority=0)
+    # anchor 5 blocks + victim 6 fill the pool; the high-priority arrival
+    # needs 2 more and a slot -> the scheduler must evict the victim
+    eng = ServingEngine(cfg, params, max_len=44, batch_slots=2, paged=True,
+                        block_size=bs, pool_blocks=11, draft_cfg=cfg,
+                        draft_params=params, spec_k=3)
+    resumes = []
+    orig_mat = eng._materialize_blocks
+
+    def spy(job):
+        orig_mat(job)
+        resumes.append((job.req.rid, list(job.tokens)))
+    eng._materialize_blocks = spy
+
+    eng.scheduler.submit(anchor)
+    eng.scheduler.submit(victim)
+    for _ in range(2):                   # both slots mid-flight (spec is
+        eng._step()                      # fast: don't let the victim finish)
+    high = Request(2, np.arange(8, dtype=np.int32), max_new_tokens=2,
+                   sampler=greedy(), priority=2)
+    eng.scheduler.submit(high)           # pool full -> evicts the victim
+    while eng.scheduler.has_work():
+        eng._step()
+    assert victim.preempted_count >= 1
+    assert victim.output == expect
+    assert len(anchor.output) == 16 and len(high.output) == 2
+    # the resume's prefill folded prompt + a committed vanilla prefix —
+    # never a provisional (unaccepted) verify token
+    rid1 = [toks for rid, toks in resumes if rid == 1]
+    assert len(rid1) >= 2
+    folded = rid1[-1][len(victim_prompt):]
+    assert folded == expect[:len(folded)]
+    assert eng.pool.used_blocks == 0 and eng.pool.reserved_blocks == 0
+    assert (eng._drafter.pool.used_blocks == 0
+            and eng._drafter.pool.reserved_blocks == 0)
+
+
+def test_int8_pool_spec_matches_int8_vanilla():
+    """Bit-identicality holds under int8 KV quantization: both arms see
+    the same quantized cache, so outputs agree token-for-token."""
+    cfg, params = _smoke()
+    prompts = _prompts(cfg, 3, 9, seed=8)
+    kw = dict(max_len=32, batch_slots=2, block_size=8, cache_dtype="int8")
+    base, st0 = _vanilla(cfg, params, prompts, 8, **kw)
+    out, st, eng = _spec_serve(cfg, params, prompts, 8, spec_k=3, **kw)
+    assert out == base
+    assert st.decode_steps + st.verify_steps < st0.decode_steps
+    assert eng.pool.used_blocks == 0 and eng.pool.reserved_blocks == 0
