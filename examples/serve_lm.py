@@ -25,8 +25,15 @@ speculate; the temperature-sampled ones here keep using vanilla decode in
 the same batch.  Passing the target arch itself is self-speculation
 (drafter shares the target's weights — no second model needed to demo).
 
+`--host-blocks N` turns on the tiered KV cache: cold pool blocks (idle
+shared prefixes, preemption victims' histories) spill to an N-block host
+tier over the split-phase offload protocol and are restored — not
+recomputed — when a later request (or the victim's resume) needs them;
+`--kv-pool-blocks` shrinks the device pool so the tier actually engages.
+
   PYTHONPATH=src python examples/serve_lm.py [--replicas 2] [--no-affinity]
       [--no-steal] [--draft-model qwen2.5-3b] [--spec-k 3] [--no-spec]
+      [--host-blocks 32 --kv-pool-blocks 8]
 """
 import argparse
 
@@ -61,6 +68,16 @@ def main():
                     help="drafter tokens proposed per speculative round")
     ap.add_argument("--no-spec", action="store_true",
                     help="ignore --draft-model (vanilla-decode baseline)")
+    ap.add_argument("--host-blocks", type=int, default=0, metavar="N",
+                    help="tiered KV: N-block host tier for spilled cold "
+                         "blocks (0 = untiered)")
+    ap.add_argument("--kv-pool-blocks", type=int, default=None,
+                    help="device pool size in blocks (shrink it to make "
+                         "the host tier earn its keep)")
+    ap.add_argument("--prefill-chunk", type=int, default=None, metavar="C",
+                    help="prefill prompts in C-token chunks interleaved "
+                         "with decode steps (C must be a multiple of the "
+                         "16-token block size)")
     args = ap.parse_args()
 
     cfg = arch_registry.smoke(args.arch)
@@ -89,7 +106,9 @@ def main():
             for i in range(args.requests)]
 
     replicas = [ServingEngine(cfg, params, max_len=24, batch_slots=4,
-                              **spec_kw)
+                              pool_blocks=args.kv_pool_blocks,
+                              host_blocks=args.host_blocks,
+                              prefill_chunk=args.prefill_chunk, **spec_kw)
                 for _ in range(args.replicas)]
     if args.replicas == 1:
         stats = replicas[0].serve(reqs)
@@ -106,6 +125,10 @@ def main():
         print(f"spec: accept_rate={stats.accept_rate:.2f}  "
               f"verify_steps={stats.verify_steps}  "
               f"decode_steps={stats.decode_steps}")
+    if stats.kv_spills or stats.kv_fetches:
+        print(f"tiering: spills={stats.kv_spills}  "
+              f"fetches={stats.kv_fetches}  "
+              f"host_hits={stats.prefix_hits_host}")
     if stats.slo_miss_rate is not None:
         print(f"slo miss rate {stats.slo_miss_rate:.2f}  "
               f"preemptions {stats.preemptions}  "

@@ -162,6 +162,43 @@ class JaxTarget(Target):
             lambda x: np.asarray(x) if hasattr(x, "shape") else x, out)
 
 
+class KVBlockTarget(Target):
+    """KV-block transfer endpoint: the serving tier hierarchy's host tier
+    driven as a split-phase offload device (paper Fig-4 applied to KV
+    cache blocks instead of weight tensors).
+
+    ``tier`` is duck-typed (`repro.serving.kv_pool.HostTier` in practice)
+    so the core layer stays free of serving imports.  Payloads:
+
+      ``("spill", key, leaves)`` — materialize one block's device slices
+          (a dict of per-leaf jax arrays, captured immutably by the engine
+          before the block id was freed) into host numpy and store them
+          under ``key``; result = bytes moved.  The device->host copy —
+          the blocking part — runs here on the worker, overlapped with
+          the engine's decode steps.
+      ``("fetch", key)`` — load ``key``'s payload (dict of numpy arrays),
+          or None if the tier has since evicted it (the engine falls back
+          to recompute).
+
+    One worker drains the queue FIFO, so a fetch submitted behind its own
+    spill always finds the stored payload.
+    """
+
+    def __init__(self, tier, name: str = "kv_host", tdp_watts: float = 0.0):
+        self.tier = tier
+        self.name = name
+        self.tdp_watts = tdp_watts
+
+    def execute(self, staged):
+        if staged[0] == "spill":
+            _, key, leaves = staged
+            host = {k: np.asarray(v) for k, v in leaves.items()}
+            self.tier.store(key, host)
+            return sum(int(a.nbytes) for a in host.values())
+        _, key = staged
+        return self.tier.load(key)
+
+
 class SimTarget(Target):
     """Latency-calibrated stand-in for a paper device.
 
@@ -283,11 +320,18 @@ class OffloadEngine:
         return item
 
     def next_done(self, timeout: float | None = None) -> WorkItem | None:
-        """Pop the next completed async item (any order); None on timeout."""
+        """Pop the next completed async item (any order); None on timeout.
+
+        Retires the item from the async-pending set here (``drain``'s own
+        pop is then a no-op), so a consumer loop that collects via
+        ``next_done`` directly — the serving engine's KV-tier drain —
+        cannot leak pending entries."""
         try:
-            return self._done_q.get(timeout=timeout)
+            item = self._done_q.get(timeout=timeout)
         except queue.Empty:
             return None
+        self._async_pending.pop(item.seq, None)
+        return item
 
     def drain(self, n: int, *, deadline_s: float | None = None):
         """Yield ``n`` completed async items as they finish (out of order).

@@ -83,6 +83,15 @@ def main() -> int:
                          "multiple of the 16-token block size; default: "
                          "whole prompt in one go, stalling active decodes "
                          "for its full prefill)")
+    ap.add_argument("--host-blocks", type=int, default=0, metavar="N",
+                    help="tiered KV cache: spill cold pool blocks (idle "
+                         "shared prefixes, preemption victims' histories) "
+                         "to an N-block host tier and restore them "
+                         "asynchronously through the split-phase offload "
+                         "protocol instead of recomputing (0 = untiered)")
+    ap.add_argument("--no-kv-tiering", action="store_true",
+                    help="ignore --host-blocks: run the untiered pool "
+                         "(the recompute A/B baseline for tiering)")
     ap.add_argument("--no-seeded-prefill", action="store_true",
                     help="recompute baseline: shared prefix blocks are "
                          "still mapped, but every prompt token is re-run "
@@ -143,7 +152,8 @@ def main() -> int:
               preemption=not args.no_preemption,
               prefix_sharing=not args.no_prefix_sharing,
               prefill_chunk=args.prefill_chunk,
-              seeded_prefill=not args.no_seeded_prefill)
+              seeded_prefill=not args.no_seeded_prefill,
+              host_blocks=0 if args.no_kv_tiering else args.host_blocks)
     if args.draft_model and not args.no_spec:
         if args.contiguous_kv:
             ap.error("--draft-model needs the paged KV pool; "
@@ -193,6 +203,13 @@ def main() -> int:
         print(f"spec: accept_rate={stats.accept_rate:.2f}  "
               f"verify_steps={stats.verify_steps}  "
               f"decode_steps={stats.decode_steps}  steps/token={spt}")
+    if stats.kv_spills or stats.kv_fetches:
+        hit = (f"{stats.kv_hit_rate:.2f}"
+               if stats.kv_hit_rate is not None else "n/a")
+        print(f"tiering: spills={stats.kv_spills}  "
+              f"fetches={stats.kv_fetches}  "
+              f"host_hits={stats.prefix_hits_host}  "
+              f"spill_bytes={stats.spill_bytes}  kv_hit_rate={hit}")
     if stats.preemptions or stats.prefix_shared_blocks or stats.slo_tracked:
         miss = (f"{stats.slo_miss_rate:.2f}"
                 if stats.slo_miss_rate is not None else "n/a")

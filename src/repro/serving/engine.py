@@ -99,6 +99,12 @@ MERGE_RULES: dict[str, str] = {
     "spec_proposed": "sum",
     "spec_accepted": "sum",
     "accept_rate": "derived",       # merged accepted / merged proposed
+    "kv_spills": "sum",
+    "kv_fetches": "sum",
+    "prefix_hits_host": "sum",
+    "prefix_lookups": "sum",
+    "spill_bytes": "sum",
+    "kv_hit_rate": "derived",       # merged (device + host hits) / lookups
     "kv_blocks_peak": "opt_sum",
     "kv_pool_capacity": "opt_sum",
     "kv_pool_util": "derived",      # merged peak / combined capacity
@@ -119,6 +125,9 @@ _DERIVED: dict[str, Callable[["ServeStats"], float | None]] = {
         if s.kv_blocks_peak is not None and s.kv_pool_capacity else None),
     "accept_rate": lambda s: (
         s.spec_accepted / s.spec_proposed if s.spec_proposed else None),
+    "kv_hit_rate": lambda s: (
+        (s.prefix_shared_blocks + s.prefix_hits_host) / s.prefix_lookups
+        if s.prefix_lookups else None),
 }
 
 
@@ -144,6 +153,12 @@ class ServeStats:
     spec_proposed: int = 0              # drafter tokens offered to verify
     spec_accepted: int = 0              # ... committed (matched target argmax)
     accept_rate: float | None = None    # spec only: accepted / proposed
+    kv_spills: int = 0                  # tiered: blocks demoted to host tier
+    kv_fetches: int = 0                 # tiered: host blocks restored to pool
+    prefix_hits_host: int = 0           # tiered: prefix blocks seeded via fetch
+    prefix_lookups: int = 0             # full prompt blocks probed in the index
+    spill_bytes: int = 0                # tiered: bytes moved device -> host
+    kv_hit_rate: float | None = None    # (device + host prefix hits) / lookups
     kv_blocks_peak: int | None = None   # paged only: peak pool blocks in use
     kv_pool_capacity: int | None = None  # paged only: pool size in blocks
     kv_pool_util: float | None = None   # paged only: peak / capacity
@@ -271,6 +286,11 @@ class WindowBase(NamedTuple):
     decode_gap_n: int           # lifetime decode-gap count at window start
                                 # (incl. entries trimmed from the bounded
                                 # totals.decode_gaps list)
+    kv_spills: int = 0          # tiering lifetime counters (0 when untiered)
+    kv_fetches: int = 0
+    prefix_hits_host: int = 0
+    prefix_lookups: int = 0
+    spill_bytes: int = 0
 
 
 def prefix_digests(tokens: np.ndarray, block_size: int) -> list[bytes]:
@@ -322,7 +342,17 @@ class _PrefillJob:
     nb: int                     # prompt blocks in the request's table
     keys: list                  # prefix digests, published at completion
     pos: int = -1               # rows already in the pool; -1 = blocks
-                                # not yet materialized
+                                # not yet materialized; -2 = materialized
+                                # but host-tier fetches still inbound (the
+                                # slot is skipped, like a mid-prefill slot,
+                                # until _drain_tier commits the last one)
+    slot: int = -1              # engine slot (fetch commits validate the
+                                # job is still this slot's live prefill)
+    prefetch: dict = field(default_factory=dict)   # key -> WorkItem
+    pending_n: int = 0          # registered fetches not yet committed
+    fetched_ok: set = field(default_factory=set)   # logical blocks restored
+    seed_base: int = 0          # device-shared leading blocks (fetch run
+                                # extends the seed window past this)
 
 
 class _Drafter:
@@ -483,7 +513,7 @@ class ServingEngine:
                  cache_dtype: str = "bfloat16",
                  preemption: bool = True, prefix_sharing: bool = True,
                  prefill_chunk: int | None = None,
-                 seeded_prefill: bool = True,
+                 seeded_prefill: bool = True, host_blocks: int = 0,
                  draft_cfg=None, draft_params=None, spec_k: int = 3):
         self.cfg = cfg
         self.params = params
@@ -522,6 +552,15 @@ class ServingEngine:
         # token; off = the recompute baseline (shared blocks still mapped,
         # but every prompt token re-run, its rows discarded into trash)
         self.seeded_prefill = seeded_prefill and paged
+        # tiered KV: cold blocks spill to a host tier and restore through
+        # the split-phase offload protocol instead of being recomputed
+        if host_blocks > 0 and not paged:
+            raise ValueError("KV tiering (host_blocks > 0) needs the paged "
+                             "KV engine")
+        if host_blocks > 0 and not self.prefix_sharing:
+            raise ValueError("KV tiering keys host-resident blocks by the "
+                             "prefix digests; it needs prefix_sharing=True")
+        self.tiered = paged and host_blocks > 0
         if prefill_chunk is not None:
             if not paged:
                 raise ValueError("prefill_chunk needs the paged KV engine")
@@ -553,7 +592,8 @@ class ServingEngine:
         if paged:
             worst = batch_slots * -(-(max_len + self.spec_rows)
                                     // block_size)
-            self.pool = KVBlockPool(pool_blocks or worst, block_size)
+            self.pool = KVBlockPool(pool_blocks or worst, block_size,
+                                    host_blocks=host_blocks)
             # table width covers the speculative overhang: a verify pass
             # provisionally writes up to spec_rows rows past max_len-ish
             # committed lengths before acceptance trims them back
@@ -575,6 +615,21 @@ class ServingEngine:
                     last_idx=li, chunk=chunk))
         else:
             self.pool = None
+        if self.tiered:
+            # host tier driven as a split-phase offload device: one FIFO
+            # worker (spill-before-fetch ordering for a given key is free),
+            # spills fire-and-forget via submit(), fetches via submit_async
+            # so _drain_tier collects them out of order between decode steps
+            from repro.core.offload import KVBlockTarget, OffloadEngine
+            self._kv_io = OffloadEngine([KVBlockTarget(self.pool.host)])
+            self._kv_io.__enter__()           # daemon worker; engine-lifetime
+            self.pool.on_demote = self._on_demote
+            self._held_digests: dict[int, bytes] = {}   # held bid -> key
+            self._fetch_refs: dict[int, tuple] = {}     # seq -> commit ref
+            self._staged: dict[int, object] = {}        # early unclaimed done
+            self._claimed: set[int] = set()             # consumed pre-drain
+        else:
+            self._kv_io = None
         if spec:
             self._drafter = _Drafter(
                 draft_cfg, draft_params, slots=batch_slots, max_len=max_len,
@@ -706,6 +761,10 @@ class ServingEngine:
                 del self._prefix_index[key]
                 break
             shared.append(bid)
+        if self.tiered and shared:
+            # a hit refreshes demotion LRU: blocks just seeded from are
+            # the worst possible eviction victims
+            self.pool.touch(shared)
         return shared
 
     def _register_prefix(self, keys: list[bytes], req: Request) -> None:
@@ -724,6 +783,21 @@ class ServingEngine:
                 continue
             bid = req.block_ids[j]
             self._prefix_index[keys[j]] = (bid, self.pool.generation(bid))
+            if self.tiered and bid not in self._held_digests:
+                # the index itself holds the block: when its requests all
+                # leave it turns *demotable* (spill-then-free on demand)
+                # instead of vanishing into the free list
+                self.pool.hold(bid)
+                self._held_digests[bid] = keys[j]
+        if self.tiered:
+            # tiered mode un-caps the index by recency: live entries are
+            # bounded by pool capacity (each holds a distinct block) and
+            # dead ones are just tombstones — prune those, keep the rest
+            if len(self._prefix_index) > self._prefix_cap:
+                self._prefix_index = {
+                    k: e for k, e in self._prefix_index.items()
+                    if self.pool.block_live(*e)}
+            return
         if len(self._prefix_index) > self._prefix_cap:
             # two-phase trim: stale-generation entries go first, and only
             # if that is not enough are *live* entries capped —
@@ -735,6 +809,131 @@ class ServingEngine:
             for k in list(live)[:max(0, len(live) - self._prefix_cap)]:
                 del live[k]
             self._prefix_index = live
+
+    # -- KV tiering: host-offloaded blocks over the split-phase protocol ------
+
+    def _read_block_slices(self, bid: int) -> dict:
+        """Immutable per-leaf device slices of one pool block, captured on
+        the executor thread *before* the block id can be reused: jax
+        arrays are immutable, so a later functional update to the pool
+        leaves this capture reading the pre-update buffer — the offload
+        worker can materialize it to host numpy at its leisure."""
+        leaves = {}
+        for name in ("k", "v", "k_scale", "v_scale"):
+            arr = getattr(self._state, name, None)
+            if arr is not None:
+                leaves[name] = arr[:, bid]
+        return leaves
+
+    def _write_block(self, bid: int, payload: dict) -> None:
+        """Restore one fetched block's rows into pool block ``bid`` (a
+        functional update; the in-flight decode step keeps reading the
+        old buffers, exactly like a prefill chunk write)."""
+        repl = {}
+        for name, host in payload.items():
+            arr = getattr(self._state, name)
+            repl[name] = arr.at[:, bid].set(
+                jnp.asarray(host).astype(arr.dtype))
+        self._state = self._state._replace(**repl)
+
+    def _spill_block(self, bid: int, key: bytes) -> bool:
+        """Queue one block's device->host copy under ``key`` unless the
+        tier already holds (or is receiving) it; returns True if queued.
+        The copy itself runs on the offload worker, overlapped with
+        decode steps — only the O(1) slice capture happens here."""
+        host = self.pool.host
+        if key in host:
+            return False
+        host.begin_store(key)           # pin: tier eviction skips pendings
+        leaves = self._read_block_slices(bid)
+        self._kv_io.submit(("spill", key, leaves))
+        self.totals.kv_spills += 1
+        self.totals.spill_bytes += sum(int(v.nbytes)
+                                       for v in leaves.values())
+        return True
+
+    def _on_demote(self, ids: list[int]) -> None:
+        """Pool demotion hook (runs under the pool lock — must not
+        re-enter the pool): an idle index-held block is about to return
+        to the free list, so its content spills to the host tier first.
+        The slice capture above makes the free race-safe."""
+        for bid in ids:
+            key = self._held_digests.pop(bid, None)
+            if key is not None:
+                self._spill_block(bid, key)
+
+    def _spill_victim(self, req: Request) -> None:
+        """Preemption demote-on-evict: the victim's freed history blocks
+        (prompt + generated, folded) spill keyed by the same chained
+        digests re-admission will look up — resume then *restores* the
+        history instead of recomputing it.  Runs in the drain_preempted
+        handler, before any post-eviction prefill can write the freed
+        ids, and the capture keeps even that ordering a non-issue."""
+        ids, req.evicted_block_ids = req.evicted_block_ids, []
+        if not self.tiered or not ids:
+            return
+        keys = self._prefix_keys(req.prefill_tokens)
+        for j in range(min(len(keys), len(ids))):
+            ent = self._prefix_index.get(keys[j])
+            if ent is not None and self.pool.block_live(*ent):
+                continue                # still device-resident via the index
+            self._spill_block(ids[j], keys[j])
+
+    def _seed_pos(self, job: _PrefillJob) -> int:
+        """First unseeded row once fetches settle: the device-shared run
+        plus the contiguous restored run after it (a failed fetch caps
+        the run; recompute overwrites the own blocks past it)."""
+        if not self.seeded_prefill:
+            return 0
+        j = job.seed_base
+        while j in job.fetched_ok:
+            j += 1
+        return j * self.block_size
+
+    def _drain_tier(self, timeout: float | None = 0.0) -> None:
+        """Collect completed host-tier fetches and commit them into their
+        jobs' pool blocks.  Runs on the executor thread between decode
+        steps (and blocking briefly when a prefill has nothing else to
+        do).  A commit is guarded three ways: the job must still be its
+        slot's live prefill (not preempted since), the target block must
+        still be this allocation (generation tag — the spill->free->
+        realloc->fetch race), and the payload non-None (the tier may
+        have evicted the key after the prefetch probe)."""
+        if not self.tiered:
+            return
+        while True:
+            item = self._kv_io.next_done(timeout=timeout)
+            if item is None:
+                return
+            timeout = 0.0                # only block for the first item
+            if item.seq in self._claimed:
+                self._claimed.discard(item.seq)
+                continue
+            ref = self._fetch_refs.pop(item.seq, None)
+            if ref is None:
+                # prefetch finished before its job materialized blocks:
+                # park it — _materialize_blocks consumes it from here
+                self._staged[item.seq] = item
+                continue
+            job, j, bid, gen = ref
+            job.pending_n -= 1
+            alive = self._prefilling.get(job.slot) is job
+            if (item.result is not None and alive
+                    and self.pool.block_live(bid, gen)):
+                self._write_block(bid, item.result)
+                job.fetched_ok.add(j)
+                self.totals.kv_fetches += 1
+                self.totals.prefix_hits_host += 1
+            if alive and job.pending_n == 0 and job.pos == -2:
+                job.pos = self._seed_pos(job)
+
+    def _discard_fetch(self, item) -> None:
+        """Drop an unused fetch item (prefetch past the seed window, or a
+        dead job's leftovers) without leaking drain-side state."""
+        if item.seq in self._staged:
+            del self._staged[item.seq]   # already popped from the done-q
+        else:
+            self._claimed.add(item.seq)  # done-q will deliver; drain drops
 
     def _admit_paged(self, slot: int, req: Request) -> None:
         """Queue an admitted request's cache-seeded chunked prefill
@@ -751,9 +950,20 @@ class ServingEngine:
         keys = self._prefix_keys(toks) if self.prefix_sharing else []
         self._tables[slot] = 0
         self._lengths[slot] = 0
-        self._prefilling[slot] = _PrefillJob(req=req, tokens=toks,
-                                             nb=nb, keys=keys)
+        job = _PrefillJob(req=req, tokens=toks, nb=nb, keys=keys, slot=slot)
+        self._prefilling[slot] = job
         self.totals.prefill_tokens_total += P
+        if self.tiered and self.seeded_prefill:
+            # prefetch-at-admission: fetches for the host-resident run
+            # past the device-resident run start moving now, overlapped
+            # with everything between admission and this job's first
+            # chunk (materialization claims or re-probes them)
+            host = self.pool.host
+            ndev = len(self._lookup_prefix(keys))
+            for key in keys[ndev:]:
+                if key not in host:
+                    break
+                job.prefetch[key] = self._kv_io.submit_async(("fetch", key))
 
     def _materialize_blocks(self, job: _PrefillJob) -> None:
         """First-chunk block materialization: map shared prefix blocks
@@ -776,7 +986,44 @@ class ServingEngine:
         req.block_ids = shared + own
         req.shared_blocks = ns
         req.blocks_reserved -= job.nb       # remaining = decode-growth tail
-        job.pos = ns * bs if self.seeded_prefill else 0
+        self.totals.prefix_lookups += len(job.keys)
+        job.seed_base = ns
+        if not (self.tiered and self.seeded_prefill):
+            job.pos = ns * bs if self.seeded_prefill else 0
+            return
+        # host-restorable run: own blocks past the device-shared run whose
+        # content the host tier holds — claim the admission prefetches (or
+        # probe late for keys that demoted since), committing into the
+        # just-allocated blocks as each fetch lands
+        host = self.pool.host
+        used: set[int] = set()
+        for j in range(ns, (P - 1) // bs):
+            key = job.keys[j]
+            item = job.prefetch.get(key)
+            if item is None:
+                if key not in host:
+                    break
+                item = self._kv_io.submit_async(("fetch", key))
+                job.prefetch[key] = item
+            used.add(item.seq)
+            bid, gen = req.block_ids[j], self.pool.generation(req.block_ids[j])
+            if item.done.is_set():           # landed before materialization
+                if item.result is None:
+                    break                    # evicted since the probe: the
+                                             # seed run caps here, recompute
+                                             # overwrites the blocks past it
+                self._write_block(bid, item.result)
+                job.fetched_ok.add(j)
+                self.totals.kv_fetches += 1
+                self.totals.prefix_hits_host += 1
+                self._discard_fetch(item)    # retire its drain-side state
+            else:
+                self._fetch_refs[item.seq] = (job, j, bid, gen)
+                job.pending_n += 1
+        for item in job.prefetch.values():   # prefetches past the run/cap
+            if item.seq not in used and item.seq not in self._fetch_refs:
+                self._discard_fetch(item)
+        job.pos = -2 if job.pending_n else self._seed_pos(job)
 
     def _advance_prefill(self, slot: int, budget: int | None = None) -> int:
         """Run one chunk of a slot's prefill straight into its pool blocks;
@@ -795,8 +1042,15 @@ class ServingEngine:
         """
         job = self._prefilling[slot]
         req = job.req
-        if job.pos < 0:
+        if job.pos == -1:
             self._materialize_blocks(job)
+        if job.pos == -2:
+            # host-tier fetches still inbound: try a non-blocking drain,
+            # then skip this slot for the step (like a mid-prefill slot)
+            # rather than stall the batch on the transfer
+            self._drain_tier(timeout=0.0)
+            if job.pos == -2:
+                return 0
         P = len(job.tokens)
         start = job.pos
         remaining = P - start
@@ -864,6 +1118,9 @@ class ServingEngine:
             if self.prefix_sharing:
                 self._register_prefix(job.keys, req)
             req.state = RequestState.DECODE
+            # a PREFILL slot just became DECODE — i.e. preemptible — so a
+            # queue head blocked on pool pressure is worth re-checking
+            self.scheduler.notify_capacity()
         return real
 
     def _set_last(self, slot: int, last1: np.ndarray) -> None:
@@ -911,8 +1168,9 @@ class ServingEngine:
             # trash the tables of any slots admit() preempted *before*
             # prefilling new prompts into the freed blocks: the victim slot
             # keeps writing its (discarded) decode row to the trash block
-            for slot, _ in self.scheduler.drain_preempted():
+            for slot, victim in self.scheduler.drain_preempted():
                 self._retire_slot(slot)
+                self._spill_victim(victim)
                 self._prefilling.pop(slot, None)
                 if self._drafter is not None:
                     # the victim's drafter mirror dies with its target KV;
@@ -935,9 +1193,13 @@ class ServingEngine:
                 if self.prefill_chunk is None:
                     # un-chunked: finish this prompt before admitting the
                     # next, so its published prefix blocks are sharable
-                    # (and seedable) by the very next admission
+                    # (and seedable) by the very next admission; a zero
+                    # advance means the job is waiting on host-tier
+                    # fetches — block briefly on the drain, there is
+                    # nothing else to overlap them with here
                     while slot in self._prefilling:
-                        self._advance_prefill(slot)
+                        if self._advance_prefill(slot) == 0:
+                            self._drain_tier(timeout=0.005)
             else:
                 last1, state1 = self._prefill_one(req)
                 self.totals.prefill_tokens_total += len(req.prefill_tokens)
@@ -955,16 +1217,30 @@ class ServingEngine:
             # decodes instead of stalling them for its whole length.  The
             # remaining budget caps each chunk, so finishing one job and
             # starting the next can never overspend the step.
+            self._drain_tier(timeout=0.0)    # commit landed fetches first
             budget = self.prefill_chunk
-            while budget >= self.block_size and self._prefilling:
-                budget -= self._advance_prefill(
-                    next(iter(self._prefilling)), budget)
+            while budget >= self.block_size:
+                # oldest admission first, skipping slots whose blocks are
+                # still inbound from the host tier (skip-while-inbound:
+                # the fetch overlaps the chunks and decode steps below)
+                job = next((j for j in self._prefilling.values()
+                            if j.pos != -2), None)
+                if job is None:
+                    break
+                budget -= self._advance_prefill(job.slot, budget)
 
         active = self.scheduler.decoding()
         if not active:
             # no decodes to stall — a prefill-only period is not a decode
             # gap, so the cadence anchor resets either way
             self._last_decode_end = None
+            if (self._prefilling
+                    and all(j.pos == -2
+                            for j in self._prefilling.values())):
+                # every job is waiting on inbound blocks and there is no
+                # decode to overlap with: block briefly on the drain
+                # instead of spinning the executor
+                self._drain_tier(timeout=0.005)
             return bool(self._prefilling)
 
         spec = ([(s, r) for s, r in active if s in self._spec_on]
@@ -1163,7 +1439,12 @@ class ServingEngine:
             prefix_shared=self.prefix_shared_total,
             prefill_tokens_total=self.totals.prefill_tokens_total,
             prefill_tokens_computed=self.totals.prefill_tokens_computed,
-            decode_gap_n=self._gaps_dropped + len(self.totals.decode_gaps))
+            decode_gap_n=self._gaps_dropped + len(self.totals.decode_gaps),
+            kv_spills=self.totals.kv_spills,
+            kv_fetches=self.totals.kv_fetches,
+            prefix_hits_host=self.totals.prefix_hits_host,
+            prefix_lookups=self.totals.prefix_lookups,
+            spill_bytes=self.totals.spill_bytes)
 
     def collect_window(self, base: "WindowBase", requests: list[Request],
                        wall_s: float) -> ServeStats:
@@ -1188,6 +1469,17 @@ class ServingEngine:
                                       - base.prefill_tokens_total)
         stats.prefill_tokens_computed = (self.totals.prefill_tokens_computed
                                          - base.prefill_tokens_computed)
+        stats.kv_spills = self.totals.kv_spills - base.kv_spills
+        stats.kv_fetches = self.totals.kv_fetches - base.kv_fetches
+        stats.prefix_hits_host = (self.totals.prefix_hits_host
+                                  - base.prefix_hits_host)
+        stats.prefix_lookups = (self.totals.prefix_lookups
+                                - base.prefix_lookups)
+        stats.spill_bytes = self.totals.spill_bytes - base.spill_bytes
+        if stats.prefix_lookups:
+            stats.kv_hit_rate = ((stats.prefix_shared_blocks
+                                  + stats.prefix_hits_host)
+                                 / stats.prefix_lookups)
         stats.decode_gaps = list(self.totals.decode_gaps[
             max(0, base.decode_gap_n - self._gaps_dropped):])
         if self.pool is not None:

@@ -28,14 +28,180 @@ alias a block that was freed and re-allocated with different contents.
 ``CapacityError`` is the shared typed error for requests that can *never*
 fit (engine ``_check_fits`` and scheduler admission both raise it), as
 opposed to transient fullness, which just defers admission.
+
+**Tiered mode** (``host_blocks > 0``) turns the device pool into the hot
+tier of a cache hierarchy.  The engine's prefix index takes a refcounted
+*hold* on every block it publishes (:meth:`KVBlockPool.hold`), so a shared
+prefix stays device-resident — still seedable at zero copy — after its
+last request releases it.  A held block whose only remaining holder is the
+index is **demotable**: when :meth:`reserve` cannot be satisfied from the
+free list alone, the pool demotes least-recently-idle demotable blocks
+(the ``on_demote`` callback lets the engine spill their rows to the
+:class:`HostTier` first), so admission counts ``free + demotable`` as
+headroom (:attr:`available_blocks`).  The pinned set is implicit: blocks
+held by live block tables have refcount > 1 and are never demotable, and
+an in-flight spill captures immutable jax slices before the id is freed,
+so reuse can never corrupt it.  Generation tags keep their existing
+contract — a demoted id leaves ``_refs`` without bumping its generation,
+so ``block_live`` goes False immediately and the next allocation bumps it,
+which is what makes a stale fetch commit detectable.
+
+The transfer state machine lives one layer up (the engine tracks pending
+fetches per prefill job); the pool owns *placement* truth: which ids are
+held, which are demotable and in what LRU order, and the host tier's
+digest-keyed payload store.
+
+``avail_epoch`` is a monotonic counter bumped whenever admission headroom
+may have *grown* (a free, an unreserve, a block turning demotable).  The
+scheduler uses it to cache a blocked queue head's failed admission check
+and skip re-evaluating it until something actually changed.
 """
 from __future__ import annotations
 
 import threading
+from typing import Any, Callable
 
 
 class CapacityError(ValueError):
     """Request exceeds KV capacity (per-request table or whole pool)."""
+
+
+class Tier:
+    """A KV-block payload store below the device pool.
+
+    Keys are the engine's chained prefix digests (`bytes`); payloads are
+    opaque to the tier (in practice a dict of per-leaf numpy arrays for
+    one block: k/v rows plus quantization scales when present).  ``load``
+    returns ``None`` for a missing key instead of raising — a tier may
+    evict under its own capacity pressure, and the engine falls back to
+    recompute for whatever a fetch no longer finds.
+    """
+
+    name = "tier"
+    capacity: int = 0
+
+    def store(self, key: bytes, payload: Any) -> None:
+        raise NotImplementedError
+
+    def load(self, key: bytes) -> Any:
+        raise NotImplementedError
+
+    def drop(self, key: bytes) -> None:
+        raise NotImplementedError
+
+    def __contains__(self, key: bytes) -> bool:
+        raise NotImplementedError
+
+    @property
+    def used(self) -> int:
+        raise NotImplementedError
+
+
+class HostTier(Tier):
+    """Pinned host-memory tier: digest-keyed block payloads, LRU-evicted.
+
+    ``begin_store`` marks a key *pending* the moment a spill is submitted
+    (on the engine thread), so a concurrent lookup already counts it as
+    resident and a fetch submitted behind it collects the real payload —
+    the single transfer worker drains FIFO, so the store always lands
+    first.  Pending entries are pinned (never LRU-evicted) until the
+    worker fills them.  Thread-safe: the engine thread probes/marks while
+    the transfer worker stores/loads.
+    """
+
+    name = "host"
+    _PENDING = object()
+
+    def __init__(self, capacity: int):
+        assert capacity >= 1
+        self.capacity = capacity
+        self._lock = threading.Lock()
+        self._data: dict[bytes, Any] = {}    # insertion order == LRU order
+        self.stores = 0
+        self.loads = 0
+        self.evictions = 0
+        self.misses = 0
+
+    def begin_store(self, key: bytes) -> None:
+        """Reserve ``key`` for an in-flight spill (pinned placeholder)."""
+        with self._lock:
+            if key not in self._data:
+                self._data[key] = self._PENDING
+                self._evict_over_capacity()
+
+    def store(self, key: bytes, payload: Any) -> None:
+        with self._lock:
+            self._data.pop(key, None)        # refresh LRU position
+            self._data[key] = payload
+            self.stores += 1
+            self._evict_over_capacity()
+
+    def _evict_over_capacity(self) -> None:
+        # called under the lock; oldest non-pending entries go first
+        over = len(self._data) - self.capacity
+        if over <= 0:
+            return
+        for k in [k for k, v in self._data.items()
+                  if v is not self._PENDING][:over]:
+            del self._data[k]
+            self.evictions += 1
+
+    def load(self, key: bytes) -> Any:
+        with self._lock:
+            payload = self._data.get(key)
+            if payload is None or payload is self._PENDING:
+                self.misses += 1
+                return None
+            del self._data[key]              # move-to-end = LRU touch
+            self._data[key] = payload
+            self.loads += 1
+            return payload
+
+    def drop(self, key: bytes) -> None:
+        with self._lock:
+            self._data.pop(key, None)
+
+    def __contains__(self, key: bytes) -> bool:
+        with self._lock:
+            return key in self._data         # pending counts as resident
+
+    @property
+    def used(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+
+class DiskTierStub(Tier):
+    """Interface placeholder for a third tier below host memory.
+
+    Exists so the tier stack has a named next rung (device -> host ->
+    disk) without this PR committing to a file format or an eviction
+    policy for it; any attempt to actually move payloads through it
+    raises, which is the honest behaviour for a stub.
+    """
+
+    name = "disk"
+    capacity = 0
+
+    def store(self, key: bytes, payload: Any) -> None:
+        raise NotImplementedError(
+            "DiskTierStub is an interface placeholder: the disk tier has "
+            "no storage backend yet (host tier is the only real tier)")
+
+    def load(self, key: bytes) -> Any:
+        raise NotImplementedError(
+            "DiskTierStub is an interface placeholder: the disk tier has "
+            "no storage backend yet (host tier is the only real tier)")
+
+    def drop(self, key: bytes) -> None:
+        pass
+
+    def __contains__(self, key: bytes) -> bool:
+        return False
+
+    @property
+    def used(self) -> int:
+        return 0
 
 
 class KVBlockPool:
@@ -48,17 +214,36 @@ class KVBlockPool:
 
     TRASH = 0
 
-    def __init__(self, num_blocks: int, block_size: int = 16):
+    def __init__(self, num_blocks: int, block_size: int = 16, *,
+                 host_blocks: int = 0):
         assert num_blocks >= 1 and block_size >= 1
         self.num_blocks = num_blocks
         self.block_size = block_size
         self._lock = threading.Lock()
+        # Hot-path structures are all O(1) per block: a LIFO list stack
+        # (append/pop), dict refcounts, a dense generation list, and
+        # insertion-ordered dict-sets for the held/demotable tracking —
+        # no free-list or refcount scan anywhere in alloc/grow/free
+        # (serving_bench's pool micro-bench pins this: per-op cost is
+        # flat across pool sizes).
         # LIFO free stack of usable ids (1..num_blocks); 0 is trash.
         self._free: list[int] = list(range(num_blocks, 0, -1))
         self._refs: dict[int, int] = {}      # allocated id -> holder count
         self._gen = [0] * (num_blocks + 1)   # bumped on every allocation
         self._reserved = 0
         self.peak_used = 0
+        # tiering (see module docstring): index-held ids, the demotable
+        # subset in least-recently-idle order, and the host payload tier
+        self._held: dict[int, None] = {}
+        self._demotable: dict[int, None] = {}  # insertion order == LRU
+        self.host: HostTier | None = \
+            HostTier(host_blocks) if host_blocks > 0 else None
+        # engine hook: spill these ids' rows to the host tier before the
+        # pool frees them.  Called under the pool lock — the callback
+        # must not call back into the pool.
+        self.on_demote: Callable[[list[int]], None] | None = None
+        self.demotions = 0
+        self._avail_epoch = 0
 
     # -- sizing ----------------------------------------------------------------
 
@@ -116,10 +301,39 @@ class KVBlockPool:
         with self._lock:
             self.peak_used = len(self._refs)
 
+    @property
+    def demotable_count(self) -> int:
+        """Blocks held only by the prefix index — freeable on demand (the
+        scheduler's *restorable* headroom, and the router's)."""
+        with self._lock:
+            return len(self._demotable)
+
+    @property
+    def held_count(self) -> int:
+        with self._lock:
+            return len(self._held)
+
+    @property
+    def available_blocks(self) -> int:
+        """What :meth:`reserve` can actually satisfy: strictly free blocks
+        plus index-held blocks it may demote on demand."""
+        with self._lock:
+            return len(self._free) - self._reserved + len(self._demotable)
+
+    @property
+    def avail_epoch(self) -> int:
+        """Monotonic headroom-growth counter (see module docstring); the
+        scheduler's blocked-head admission cache keys on it."""
+        with self._lock:
+            return self._avail_epoch
+
     # -- lifecycle -------------------------------------------------------------
 
     def reserve(self, n: int) -> bool:
-        """Promise ``n`` blocks to a request being admitted.
+        """Promise ``n`` blocks to a request being admitted, demoting
+        least-recently-idle index-held blocks if the free list alone
+        cannot cover it (their rows spill to the host tier via the
+        ``on_demote`` hook first).
 
         Returns False when the pool is transiently too full (caller defers
         admission); raises :class:`CapacityError` when ``n`` exceeds the
@@ -130,15 +344,42 @@ class KVBlockPool:
                 f"request needs {n} KV blocks but the pool only has "
                 f"{self.num_blocks} (block_size={self.block_size})")
         with self._lock:
-            if len(self._free) - self._reserved < n:
+            shortfall = n - (len(self._free) - self._reserved)
+            if shortfall > len(self._demotable):
                 return False
+            if shortfall > 0:
+                self._demote_locked(shortfall)
             self._reserved += n
             return True
+
+    def _demote_locked(self, k: int) -> None:
+        """Free the ``k`` least-recently-idle demotable blocks (spilling
+        their rows first via ``on_demote``).  Caller holds the lock; the
+        callback must not re-enter the pool.  Generations are *not*
+        bumped here — ``block_live`` goes False because the id leaves
+        ``_refs``, and the next allocation bumps the generation, exactly
+        like a normal free."""
+        ids = []
+        it = iter(self._demotable)
+        for _ in range(k):
+            ids.append(next(it))
+        if self.on_demote is not None:
+            self.on_demote(ids)
+        for b in ids:
+            assert self._refs.get(b) == 1, \
+                f"demotable block {b} has refcount {self._refs.get(b)}"
+            del self._refs[b]
+            del self._held[b]
+            del self._demotable[b]
+            self._free.append(b)
+        self.demotions += len(ids)
 
     def unreserve(self, n: int) -> None:
         with self._lock:
             assert self._reserved >= n, (self._reserved, n)
             self._reserved -= n
+            if n:
+                self._avail_epoch += 1
 
     def alloc_reserved(self, n: int) -> list[int]:
         """Materialize ``n`` previously reserved blocks as physical ids
@@ -158,17 +399,22 @@ class KVBlockPool:
     def share(self, ids: list[int]) -> None:
         """Add one holder to each (already allocated) block — the prefix-
         sharing path: a new request maps its leading table entries to
-        blocks another request allocated."""
+        blocks another request allocated.  A demotable block gaining a
+        holder is hot again and leaves the demotion candidates."""
         with self._lock:
             for b in ids:
                 if b not in self._refs:
                     raise ValueError(f"share of unallocated KV block {b}")
                 self._refs[b] += 1
+                self._demotable.pop(b, None)
 
     def free(self, ids: list[int]) -> list[int]:
         """Drop one holder per block; blocks whose last holder left return
         to the free list.  Returns the ids actually released (refcount hit
-        zero).  Freeing an unallocated id raises."""
+        zero).  Freeing an unallocated id raises.  An index-held block
+        whose last *request* holder left (refcount back to the hold alone)
+        becomes demotable instead of free — it stays device-resident and
+        seedable until pool pressure demotes it."""
         released: list[int] = []
         with self._lock:
             for b in ids:
@@ -177,11 +423,48 @@ class KVBlockPool:
                     raise ValueError(f"double free of KV block {b}")
                 if refs > 1:
                     self._refs[b] = refs - 1
+                    if refs == 2 and b in self._held:
+                        # idle now: last-touched order == demotable order
+                        self._demotable.pop(b, None)
+                        self._demotable[b] = None
+                        self._avail_epoch += 1
                 else:
                     del self._refs[b]
+                    self._held.pop(b, None)      # defensive; a held block
+                    self._demotable.pop(b, None)  # normally demotes instead
                     self._free.append(b)
                     released.append(b)
+            if ids:
+                # Any refcount decrement is a capacity event: even a
+                # 2->1 drop on an unheld block raises the preemption
+                # *gain* (reclaimable_count), so a blocked queue head
+                # cached against the old epoch must be re-checked.
+                self._avail_epoch += 1
         return released
+
+    # -- tiering ---------------------------------------------------------------
+
+    def hold(self, block_id: int) -> None:
+        """The prefix index takes a holder on a just-published block, so
+        it survives its requests' releases device-resident (demotable
+        under pressure) instead of returning to the free list."""
+        with self._lock:
+            if block_id not in self._refs:
+                raise ValueError(f"hold of unallocated KV block {block_id}")
+            if block_id in self._held:
+                raise ValueError(f"double hold of KV block {block_id}")
+            self._refs[block_id] += 1
+            self._held[block_id] = None
+
+    def touch(self, ids: list[int]) -> None:
+        """Refresh LRU position of any demotable ids among ``ids`` — a
+        prefix lookup that seeds from an idle shared block makes it the
+        *most* recently useful demotion candidate, not the next victim."""
+        with self._lock:
+            for b in ids:
+                if b in self._demotable:
+                    del self._demotable[b]
+                    self._demotable[b] = None
 
     def release_provisional(self, ids: list[int]) -> None:
         """Return *provisionally grown* blocks — the rejected tail of a
@@ -228,6 +511,19 @@ class KVBlockPool:
         gain estimate for a victim whose blocks may be shared out."""
         with self._lock:
             return sum(self._refs.get(b, 0) == 1 for b in ids)
+
+    def reclaimable_count(self, ids: list[int]) -> int:
+        """Tier-aware preemption gain: blocks a victim's free would return
+        to the free list (refcount 1) *plus* blocks it would turn
+        demotable (refcount 2 with one holder being the prefix index) —
+        either way the pool can hand them to the preemptor."""
+        with self._lock:
+            out = 0
+            for b in ids:
+                refs = self._refs.get(b, 0)
+                if refs == 1 or (refs == 2 and b in self._held):
+                    out += 1
+            return out
 
     def generation(self, block_id: int) -> int:
         """Allocation generation of ``block_id`` (bumped per allocation)."""

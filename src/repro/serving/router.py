@@ -207,11 +207,15 @@ class ReplicaRouter:
         e = self.replicas[i]
         need = (e.pool.blocks_for(req.kv_rows + e.spec_rows)
                 if e.pool is not None else 0)
+        # restorable blocks (idle index-held, spill-then-free on demand)
+        # are admission headroom just like strictly free ones — a tiered
+        # replica full of idle shared prefixes is not "full"
+        avail = ((snap.free_blocks + (snap.restorable_blocks or 0))
+                 if snap.free_blocks is not None else None)
         fits_now = (snap.free_slots > 0
-                    and (snap.free_blocks is None
-                         or snap.free_blocks >= need))
+                    and (avail is None or avail >= need))
         return (0 if fits_now else 1, snap.queued_tokens,
-                -(snap.free_blocks or 0), i)
+                -(avail or 0), i)
 
     def _register(self, digests: list[bytes], owner: int) -> None:
         """Point every full-leading-block digest of a routed prompt at its
@@ -251,7 +255,8 @@ class ReplicaRouter:
                 # request's worst case, exactly as its admission will charge
                 need = thief.pool.blocks_for(req.kv_rows
                                              + thief.spec_rows)
-                if need > min(snap.free_blocks, thief.pool.capacity):
+                avail = snap.free_blocks + (snap.restorable_blocks or 0)
+                if need > min(avail, thief.pool.capacity):
                     return False
             return True
         return ok

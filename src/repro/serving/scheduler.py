@@ -93,6 +93,11 @@ class Request:
     block_ids: list = field(default_factory=list)
     blocks_reserved: int = 0
     shared_blocks: int = 0
+    # eviction leaves the freed ids here (block_ids is cleared) so the
+    # engine can spill the victim's still-intact rows to the host tier
+    # before any new prefill overwrites them; the engine consumes and
+    # clears it in its drain_preempted handler
+    evicted_block_ids: list = field(default_factory=list)
     arrival_seq: int | None = None  # per-scheduler heap tiebreak (private)
 
     @property
@@ -156,6 +161,12 @@ class LoadSnapshot(NamedTuple):
     free_blocks: int | None     # None for contiguous (pool-less) engines
     queued: int                 # requests in the admission queue
     queued_tokens: int          # prompt(+resume) tokens awaiting prefill
+    # hot vs restorable: free_blocks is immediately-free device headroom;
+    # restorable_blocks counts index-held blocks the pool can demote to
+    # the host tier on demand — admission capacity is their sum, but a
+    # replica serving out of restorable headroom pays spill traffic, so
+    # the router sees both rather than one blurred number
+    restorable_blocks: int | None = None
 
     @property
     def idle(self) -> bool:
@@ -194,6 +205,15 @@ class ContinuousScheduler:
         self._seq = 0
         self._preempted: list[tuple[int, Request]] = []
         self.preemptions = 0                 # lifetime counter (monotonic)
+        # blocked-head admission cache: (head arrival_seq, capacity
+        # version) of the last admit() that found the queue head unfit.
+        # While the version is unchanged, re-running the slot scan /
+        # reserve / preemption probe is provably the same answer, so
+        # admit() returns immediately — the executor no longer re-prices
+        # a blocked head every step of a long decode.
+        self._blocked_sig: tuple | None = None
+        self._event_epoch = 0                # slot/queue capacity events
+        self.head_checks_skipped = 0         # lifetime counter (monotonic)
         self._lock = threading.RLock()
         self._work = threading.Condition(self._lock)
 
@@ -207,6 +227,7 @@ class ContinuousScheduler:
                 req.submitted_at = time.monotonic()  # Request construction
             req.state = RequestState.QUEUED
             self._push(req)
+            self._event_epoch += 1           # a new head may outrank
             self._work.notify_all()
 
     def _push(self, req: Request) -> None:
@@ -222,6 +243,24 @@ class ContinuousScheduler:
                        (-req.priority, deadline, req.arrival_seq, req))
 
     # -- executor side ---------------------------------------------------------
+
+    def _capacity_version(self) -> tuple[int, int]:
+        """Changes iff admission capacity may have grown since last read:
+        scheduler events (submit / release / steal / notify_capacity) and
+        pool headroom growth (free / unreserve / newly demotable).
+        Capacity-*shrinking* events (reserve, alloc) are deliberately
+        excluded — a cached "head does not fit" stays correct through
+        them."""
+        return (self._event_epoch,
+                self.pool.avail_epoch if self.pool is not None else 0)
+
+    def notify_capacity(self) -> None:
+        """Executor hint that admission prospects changed outside the
+        scheduler's own bookkeeping — e.g. a PREFILL request turned
+        DECODE and is now preemption-eligible.  Invalidates the
+        blocked-head cache."""
+        with self._lock:
+            self._event_epoch += 1
 
     def admit(self) -> list[tuple[int, Request]]:
         """Fill free slots from the admission queue; the returned
@@ -240,6 +279,12 @@ class ContinuousScheduler:
         with self._lock:
             while self._heap:
                 req = self._heap[0][3]
+                if self._blocked_sig is not None and self._blocked_sig == \
+                        (req.arrival_seq, self._capacity_version()):
+                    # same head, no capacity-growing event since it last
+                    # failed: the full check would fail identically
+                    self.head_checks_skipped += 1
+                    break
                 slot = next((i for i, r in enumerate(self.slots)
                              if r is None), None)
                 need = (self.pool.blocks_for(req.kv_rows + self.spec_rows)
@@ -253,10 +298,16 @@ class ContinuousScheduler:
                     # priority head may evict lower-priority decodes
                     if not (self.preemption and self.pool is not None
                             and self._preempt_for(req, need)):
-                        break               # wait for capacity to free
+                        # wait for capacity to free; cache the verdict
+                        # against the current capacity version
+                        self._blocked_sig = (req.arrival_seq,
+                                             self._capacity_version())
+                        break
                     slot = next((i for i, r in enumerate(self.slots)
                                  if r is None), None)
                     if slot is None or not self.pool.reserve(need):
+                        self._blocked_sig = (req.arrival_seq,
+                                             self._capacity_version())
                         break               # defensive; _preempt_for holds
                 if self.pool is not None:
                     req.blocks_reserved = need
@@ -264,6 +315,7 @@ class ContinuousScheduler:
                 req.state = RequestState.PREFILL
                 self.slots[slot] = req
                 out.append((slot, req))
+                self._blocked_sig = None     # progress: cache is moot
         return out
 
     def _preempt_for(self, req: Request, need: int) -> bool:
@@ -284,20 +336,22 @@ class ContinuousScheduler:
                             -len(ir[1].block_ids)))
         if not victims:
             return False
-        # gain: a victim's block only returns to the free list if no other
-        # request shares it (refcount 1); the reservation tail always
-        # returns.  Conservative when two victims share a block (counted
-        # for neither) — declining is always safe, evicting-for-nothing
-        # is not.
-        gain = sum(self.pool.releasable_count(r.block_ids)
+        # gain: a victim's block comes back to the preemptor if no other
+        # *request* shares it — either straight to the free list
+        # (refcount 1) or as a demotable index-held block (refcount 2
+        # with the prefix index's hold; reserve() demotes it on demand).
+        # The reservation tail always returns.  Conservative when two
+        # victims share a block (counted for neither) — declining is
+        # always safe, evicting-for-nothing is not.
+        gain = sum(self.pool.reclaimable_count(r.block_ids)
                    + r.blocks_reserved for _, r in victims)
-        if self.pool.free_blocks + gain < need:
+        if self.pool.available_blocks + gain < need:
             return False
         for slot, victim in victims:
             self._evict(slot, victim)
-            if self.pool.free_blocks >= need:
+            if self.pool.available_blocks >= need:
                 return True
-        return self.pool.free_blocks >= need
+        return self.pool.available_blocks >= need
 
     def _evict(self, slot: int, victim: Request) -> None:
         """Recompute-style preemption of one active decode: free its
@@ -307,6 +361,12 @@ class ContinuousScheduler:
         blocks — it learns the slot via :meth:`drain_preempted`."""
         self.slots[slot] = None
         if victim.block_ids:
+            # Leave the freed ids on the victim so a tiered engine can
+            # spill their contents to the host tier before the pool
+            # re-scatters them (the engine consumes and clears this list
+            # in its drain_preempted handler, which runs before any
+            # post-eviction allocation touches the device state).
+            victim.evicted_block_ids = list(victim.block_ids)
             self.pool.free(victim.block_ids)
         if victim.blocks_reserved:
             self.pool.unreserve(victim.blocks_reserved)
@@ -350,6 +410,7 @@ class ContinuousScheduler:
             req = self.slots[slot]
             assert req is not None, f"release of empty slot {slot}"
             self.slots[slot] = None
+            self._event_epoch += 1  # a slot opened: blocked head may now fit
         if self.pool is not None:
             if req.block_ids:
                 self.pool.free(req.block_ids)
@@ -417,6 +478,7 @@ class ContinuousScheduler:
                 heapq.heapify(self._heap)
                 for req in stolen:
                     req.arrival_seq = None
+                self._event_epoch += 1  # queue shrank: head identity/rank moved
         return stolen
 
     # -- introspection ---------------------------------------------------------
@@ -431,8 +493,11 @@ class ContinuousScheduler:
                                 for e in self._heap)
         free_blocks = (self.pool.free_blocks if self.pool is not None
                        else None)
+        restorable = (self.pool.demotable_count if self.pool is not None
+                      else None)
         return LoadSnapshot(free_slots=free_slots, free_blocks=free_blocks,
-                            queued=queued, queued_tokens=queued_tokens)
+                            queued=queued, queued_tokens=queued_tokens,
+                            restorable_blocks=restorable)
 
     @property
     def queued(self) -> int:

@@ -1,0 +1,200 @@
+"""Tiered KV cache: host-tier semantics (LRU, pending pins), the pool's
+hold/demote lifecycle, the KVBlockTarget spill/fetch round trip, and
+end-to-end restore paths — prefix churn and preemption resume — asserted
+bit-identical to recompute."""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry as R
+from repro.core.offload import KVBlockTarget, OffloadEngine
+from repro.models.registry import fns_for
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.kv_pool import DiskTierStub, HostTier, KVBlockPool
+from repro.serving.sampler import greedy
+
+
+def _smoke():
+    cfg = R.smoke("qwen2.5-3b")
+    return cfg, fns_for(cfg).init(cfg, jax.random.PRNGKey(0))
+
+
+# -- tier semantics -----------------------------------------------------------
+
+def test_host_tier_store_load_lru_eviction():
+    tier = HostTier(2)
+    tier.store(b"a", 1)
+    tier.store(b"b", 2)
+    assert b"a" in tier and tier.used == 2
+    assert tier.load(b"a") == 1                 # load refreshes LRU position
+    tier.store(b"c", 3)                         # capacity 2: evicts b, not a
+    assert b"b" not in tier and b"a" in tier and b"c" in tier
+    assert tier.evictions == 1
+    assert tier.load(b"b") is None and tier.misses == 1
+    tier.drop(b"a")
+    assert b"a" not in tier and tier.used == 1
+
+
+def test_host_tier_pending_placeholder_pins_and_reads_as_resident():
+    tier = HostTier(1)
+    tier.begin_store(b"k")
+    assert b"k" in tier                         # in-flight spill counts as
+    assert tier.load(b"k") is None              # resident, but has no bytes
+    tier.store(b"other", 0)                     # pending is never the victim:
+    assert b"k" in tier and b"other" not in tier    # the newcomer bounces
+    tier.store(b"k", 42)                        # worker fills the placeholder
+    assert tier.load(b"k") == 42
+
+
+def test_disk_tier_stub_is_an_honest_placeholder():
+    disk = DiskTierStub()
+    with pytest.raises(NotImplementedError):
+        disk.store(b"k", 0)
+    with pytest.raises(NotImplementedError):
+        disk.load(b"k")
+    assert b"k" not in disk and disk.used == 0
+    disk.drop(b"k")                             # drop is a no-op, not an error
+
+
+# -- pool hold / demote lifecycle ---------------------------------------------
+
+def test_pool_hold_demote_lifecycle_and_generation_guard():
+    demoted = []
+    pool = KVBlockPool(4, block_size=8, host_blocks=4)
+    pool.on_demote = demoted.extend
+    pool.reserve(2)
+    a, b = pool.alloc_reserved(2)
+    pool.hold(a)                                # prefix index takes a holder
+    with pytest.raises(ValueError, match="double hold"):
+        pool.hold(a)
+    gen = pool.generation(a)
+    assert pool.free([a, b]) == [b]             # held block stays resident
+    assert pool.demotable_count == 1 and pool.held_count == 1
+    assert pool.free_blocks == 3 and pool.available_blocks == 4
+    assert pool.block_live(a, gen)              # demotable = still seedable
+    pool.share([a])                             # a lookup hit makes it hot
+    assert pool.demotable_count == 0
+    pool.free([a])
+    assert pool.demotable_count == 1
+    # a reservation the free list can't cover demotes least-recently-idle
+    epoch = pool.avail_epoch
+    assert pool.reserve(4)
+    assert demoted == [a] and pool.demotions == 1
+    assert pool.held_count == 0 and pool.demotable_count == 0
+    assert not pool.block_live(a, gen)          # the fetch-commit guard dies
+    pool.unreserve(4)
+    assert pool.avail_epoch > epoch             # capacity events re-check the
+    assert pool.available_blocks == 4           # scheduler's blocked head
+
+
+# -- split-phase transfer protocol --------------------------------------------
+
+def test_kv_block_target_spill_then_fetch_roundtrip():
+    tier = HostTier(4)
+    payload = {"k": np.arange(6, dtype=np.float32)}
+    with OffloadEngine([KVBlockTarget(tier)]) as io:
+        tier.begin_store(b"key")                # pin before the async spill
+        io.submit(("spill", b"key", payload))
+        item = io.submit_async(("fetch", b"key"))
+        assert io.next_done(timeout=5.0) is item
+        # single FIFO worker: the fetch behind the spill finds its bytes
+        np.testing.assert_array_equal(item.result["k"], payload["k"])
+    assert b"key" in tier
+    with OffloadEngine([KVBlockTarget(tier)]) as io:
+        miss = io.submit_async(("fetch", b"missing"))
+        assert io.next_done(timeout=5.0) is miss
+        assert miss.result is None              # tier miss = recompute signal
+
+
+# -- engine gating ------------------------------------------------------------
+
+def test_tiering_requires_paged_pool_and_prefix_sharing():
+    cfg, params = _smoke()
+    with pytest.raises(ValueError, match="tier"):
+        ServingEngine(cfg, params, max_len=16, batch_slots=1, paged=False,
+                      host_blocks=4)
+    with pytest.raises(ValueError, match="tier"):
+        ServingEngine(cfg, params, max_len=16, batch_slots=1, paged=True,
+                      prefix_sharing=False, host_blocks=4)
+
+
+# -- end to end: churn restore ------------------------------------------------
+
+def _churn_reqs(cfg, seed=5):
+    """3 distinct 2-block prefixes revisited with fresh tails: the second
+    visit finds its prefix demoted out of a 5-block pool."""
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+                for _ in range(3)]
+    reqs = []
+    for v in range(2):
+        for g, p in enumerate(prefixes):
+            tail = rng.integers(0, cfg.vocab_size, size=4).astype(np.int32)
+            reqs.append(Request(v * 3 + g, np.concatenate([p, tail]),
+                                max_new_tokens=3, sampler=greedy()))
+    return reqs
+
+
+def test_churn_restores_from_host_bit_identical_to_recompute():
+    cfg, params = _smoke()
+    outs, computed = {}, {}
+    for tiered in (True, False):
+        eng = ServingEngine(cfg, params, max_len=24, batch_slots=1,
+                            paged=True, block_size=8, pool_blocks=5,
+                            host_blocks=16 if tiered else 0)
+        reqs = _churn_reqs(cfg)
+        eng.serve(reqs)
+        outs[tiered] = [r.output for r in reqs]
+        computed[tiered] = eng.totals.prefill_tokens_computed
+        if tiered:
+            assert eng.totals.kv_spills > 0 and eng.totals.spill_bytes > 0
+            assert eng.totals.kv_fetches > 0
+            assert eng.totals.prefix_hits_host > 0
+            # bookkeeping balanced: only index-held blocks stay resident
+            assert eng.pool.used_blocks == eng.pool.demotable_count
+            assert eng.pool.reserved_blocks == 0
+        else:
+            assert eng.totals.kv_spills == 0 == eng.totals.kv_fetches
+    assert outs[True] == outs[False]            # restore is the exact bytes
+    assert computed[True] < computed[False]     # ...and it saved compute
+
+
+# -- end to end: preemption resume --------------------------------------------
+
+def test_preemption_resume_restores_history_from_host_tier():
+    """A preempted decode's history blocks spill to the host tier; its
+    resume *restores* them instead of re-running the folded prompt, and
+    still lands exactly the un-preempted greedy stream."""
+    cfg, params = _smoke()
+    prompt = (np.arange(8, dtype=np.int32) * 7) % cfg.vocab_size
+    ref_eng = ServingEngine(cfg, params, max_len=33, batch_slots=1,
+                            paged=True, block_size=4, pool_blocks=9)
+    ref = Request(0, prompt, max_new_tokens=24, sampler=greedy())
+    ref_eng.serve([ref])
+
+    eng = ServingEngine(cfg, params, max_len=33, batch_slots=1, paged=True,
+                        block_size=4, pool_blocks=9, host_blocks=32)
+    low = Request(0, prompt, max_new_tokens=24, sampler=greedy())
+    high = Request(1, np.arange(4, dtype=np.int32), max_new_tokens=2,
+                   sampler=greedy(), priority=1)
+    ev_low, ev_high = threading.Event(), threading.Event()
+    eng.start()
+    try:
+        eng.submit(low, on_finish=lambda r: ev_low.set())
+        deadline = time.monotonic() + 60
+        while len(low.output) < 8:      # enough history for full blocks
+            assert time.monotonic() < deadline, "low request never started"
+            time.sleep(0.005)
+        eng.submit(high, on_finish=lambda r: ev_high.set())
+        assert ev_high.wait(60) and ev_low.wait(60)
+    finally:
+        eng.stop()
+    assert low.preempted_count >= 1
+    assert eng.totals.kv_spills > 0             # victim history spilled...
+    assert eng.totals.prefix_hits_host > 0      # ...and restored on resume
+    assert len(high.output) == 2
+    assert low.output == ref.output             # restore-resume is exact
+    assert eng.pool.reserved_blocks == 0

@@ -130,6 +130,54 @@ def test_pool_generation_invalidates_stale_prefix_entries():
     assert pool.block_live(b2, pool.generation(b2))
 
 
+def test_property_generation_tags_across_spill_free_realloc_cycles():
+    """Property: through any interleaving of alloc / free / spill (hold +
+    idle + demote-under-pressure) / realloc, a (block, generation) tag
+    recorded at allocation reads live iff that exact allocation still owns
+    the block — the guard that makes an async host-tier fetch safe to
+    commit after the spill->free->realloc race."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, strategies as st
+
+    @given(st.lists(st.tuples(st.sampled_from(["alloc", "free", "spill"]),
+                              st.integers(0, 7)),
+                    min_size=1, max_size=40))
+    def check(ops):
+        pool = KVBlockPool(4, block_size=8, host_blocks=8)
+        demoted: list[int] = []
+        pool.on_demote = demoted.extend
+        tags: list[tuple[int, int]] = []     # (bid, gen) at alloc time
+        alive: list[bool] = []               # shadow truth per tag
+        owner: dict[int, int] = {}           # request-owned bid -> tag idx
+        idle: dict[int, int] = {}            # demotable bid -> tag idx
+        for op, pick in ops:
+            if op == "alloc":
+                if not pool.reserve(1):      # full even after demotions
+                    continue
+                for b in demoted:            # demote = spill + free: the
+                    alive[idle.pop(b)] = False   # fetch guard must die
+                demoted.clear()
+                [b] = pool.alloc_reserved(1)
+                owner[b] = len(tags)
+                tags.append((b, pool.generation(b)))
+                alive.append(True)
+            elif op == "free" and owner:
+                b = sorted(owner)[pick % len(owner)]
+                pool.free([b])
+                alive[owner.pop(b)] = False
+            elif op == "spill" and owner:
+                b = sorted(owner)[pick % len(owner)]
+                pool.hold(b)                 # published to the prefix index
+                pool.free([b])               # ...then its request lets go:
+                idle[b] = owner.pop(b)       # demotable, still seedable
+            for i, (b, g) in enumerate(tags):
+                assert pool.block_live(b, g) == alive[i]
+        assert pool.demotable_count == len(idle)
+        assert pool.used_blocks == len(owner) + len(idle)
+
+    check()
+
+
 # -- paged attention vs dense oracle ------------------------------------------
 
 def _ragged_case(seed, B=3, mb=4, bs=8, K=2, H=4, D=16):

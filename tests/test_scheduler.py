@@ -384,6 +384,37 @@ def test_preemption_gain_ignores_shared_out_blocks():
     assert s.preemptions == 1
 
 
+def test_blocked_head_admission_check_cached_until_capacity_event():
+    """An unfit queue head is re-priced only after a capacity event (slot
+    release, pool headroom growth, submit), not every executor step — the
+    cached verdict is provably identical in between."""
+    pool = KVBlockPool(4, block_size=4)
+    s = ContinuousScheduler(1, pool=pool)
+    r0 = _req(0, n=3)                           # 8 rows -> 2 blocks
+    s.submit(r0)
+    [(slot, _)] = _admit_and_decode(s, pool, 2)
+    big = _req(1, n=11)                         # 16 rows -> 4 blocks
+    s.submit(big)
+    assert s.admit() == []                      # full check, verdict cached
+    base = s.head_checks_skipped
+    for _ in range(5):
+        assert s.admit() == []                  # cached: no slot scan, no
+    assert s.head_checks_skipped == base + 5    # reserve, no preempt probe
+    # pool headroom growth alone invalidates the cache: the next admit()
+    # re-checks for real (still blocked on the slot) and re-caches
+    pool.free(r0.block_ids)
+    r0.block_ids = []
+    assert s.admit() == []
+    assert s.head_checks_skipped == base + 5
+    assert s.admit() == []
+    assert s.head_checks_skipped == base + 6
+    # a slot opening is a capacity event: the head admits immediately
+    r0.state = RequestState.DONE
+    s.release(slot)
+    [(_, got)] = s.admit()
+    assert got is big and s.queued == 0
+
+
 def test_preemption_declined_when_gain_cannot_cover_need():
     """A doomed eviction (even all eligible victims' blocks would not fit
     the head) must not happen — completed decode work is never thrown away
