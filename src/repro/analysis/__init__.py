@@ -1,0 +1,46 @@
+"""Repo-invariant lint pass (``python -m repro.analysis``).
+
+Stdlib-only AST checkers proving the serving stack's hand-maintained
+invariants at lint time: lock discipline (``locks``), refcount and
+generation safety across block free/realloc (``refgen``), ServeStats
+merge coverage (``stats``), jit trace purity and compile-cache shape
+bucketing (``jit``), and the kernel registry↔smoke-coverage
+cross-check (``kernels``).  See each checker module's docstring for
+the precise rules and the annotation vocabulary in :mod:`.core`.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+from .baseline import apply_baseline, load_baseline, write_baseline
+from .config import AnalysisConfig, repo_config
+from .core import Finding
+from .jitpure import check_jit
+from .kernelreg import check_kernels
+from .locks import check_locks
+from .refgen import check_refgen
+from .statscov import check_stats
+
+CHECKERS = (
+    ("locks", check_locks),
+    ("refgen", check_refgen),
+    ("stats", check_stats),
+    ("jit", check_jit),
+    ("kernels", check_kernels),
+)
+
+
+def run_all(cfg: AnalysisConfig,
+            only: set[str] | None = None) -> list[Finding]:
+    findings: list[Finding] = []
+    for name, fn in CHECKERS:
+        if only and name not in only:
+            continue
+        findings.extend(fn(cfg))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def default_repo_root() -> Path:
+    # src/repro/analysis/__init__.py -> repo root is three levels up
+    return Path(__file__).resolve().parents[3]

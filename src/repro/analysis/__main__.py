@@ -1,0 +1,74 @@
+"""CLI: ``python -m repro.analysis [--json out.json] [--checker NAME]
+[--update-baseline]``.  Exit 0 iff every finding is baseline-suppressed;
+stale baseline entries (fixed debt whose marker was not removed) also
+fail, keeping the baseline shrink-only."""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+from . import CHECKERS, default_repo_root, repo_config, run_all
+from .baseline import (BASELINE_NAME, apply_baseline, load_baseline,
+                       write_baseline)
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-invariant lint pass (see README 'Invariant "
+                    "lint')")
+    parser.add_argument("--repo-root", type=Path,
+                        default=default_repo_root())
+    parser.add_argument("--checker", action="append",
+                        choices=[name for name, _ in CHECKERS],
+                        help="run only this checker (repeatable)")
+    parser.add_argument("--json", type=Path, metavar="PATH",
+                        help="write the findings artifact here")
+    parser.add_argument("--update-baseline", action="store_true",
+                        help=f"rewrite {BASELINE_NAME} to suppress every "
+                             f"current finding (triage notes are TODO)")
+    args = parser.parse_args(argv)
+
+    t0 = time.monotonic()
+    cfg = repo_config(args.repo_root)
+    findings = run_all(cfg, only=set(args.checker) if args.checker else None)
+
+    if args.update_baseline:
+        path = write_baseline(args.repo_root, findings)
+        print(f"wrote {len(findings)} suppression(s) to {path}")
+        return 0
+
+    baseline = load_baseline(args.repo_root)
+    stale = apply_baseline(findings, baseline)
+
+    for f in findings:
+        print(f.render())
+    for fid in stale:
+        print(f"stale baseline entry (fix landed — delete it from "
+              f"{BASELINE_NAME}): {fid}")
+
+    open_findings = [f for f in findings if not f.suppressed]
+    suppressed = len(findings) - len(open_findings)
+    dt = time.monotonic() - t0
+    print(f"repro.analysis: {len(open_findings)} finding(s), "
+          f"{suppressed} baseline-suppressed, {len(stale)} stale "
+          f"baseline entr{'y' if len(stale) == 1 else 'ies'} "
+          f"[{dt:.2f}s]")
+
+    if args.json:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json.dumps({
+            "findings": [f.to_json() for f in findings],
+            "stale_baseline": stale,
+            "open": len(open_findings),
+            "elapsed_s": round(dt, 3),
+        }, indent=2) + "\n")
+
+    return 1 if open_findings or stale else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,51 @@
+"""Baseline suppression file.
+
+Triaged findings live in ``analysis_baseline.json`` at the repo root:
+
+    {"findings": {"<finding-id>": "<triage note>", ...}}
+
+Finding ids are line-independent (``checker:path:scope:rule``), so a
+baseline entry survives unrelated edits to the file and dies exactly
+when the flagged scope is fixed or removed — at which point the entry
+is *stale* and reported, keeping the baseline shrink-only.  A baseline
+entry is a debt marker with an owner note, not an annotation: code
+that is *correct* gets a machine-checked annotation (``generation-safe``,
+``jit-ok``); code that is *wrong but triaged* gets a baseline entry.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .core import Finding
+
+BASELINE_NAME = "analysis_baseline.json"
+
+
+def load_baseline(repo_root: Path) -> dict[str, str]:
+    path = repo_root / BASELINE_NAME
+    if not path.exists():
+        return {}
+    data = json.loads(path.read_text())
+    return dict(data.get("findings", {}))
+
+
+def apply_baseline(findings: list[Finding],
+                   baseline: dict[str, str]) -> list[str]:
+    """Mark suppressed findings in place; return stale baseline ids
+    (entries that matched nothing — fixed code whose debt marker must
+    now be deleted)."""
+    live = set()
+    for f in findings:
+        if f.fid in baseline:
+            f.suppressed = True
+            live.add(f.fid)
+    return sorted(set(baseline) - live)
+
+
+def write_baseline(repo_root: Path, findings: list[Finding]) -> Path:
+    path = repo_root / BASELINE_NAME
+    entries = {f.fid: "triaged: TODO justify or fix" for f in findings}
+    path.write_text(json.dumps({"findings": entries}, indent=2,
+                               sort_keys=True) + "\n")
+    return path

@@ -1,0 +1,121 @@
+"""Repo-specific configuration for the invariant lint pass.
+
+The checkers themselves are generic AST machinery; everything this repo
+knows about itself — which files carry lock discipline, how attribute
+names resolve to classes across modules, which call edges exist only
+dynamically (hooks), which jit entry points key compile caches — lives
+here, in one reviewable table, so tightening the lint is a config edit
+and the analyzer's own tests can run the same checkers against fixture
+trees with a fixture config.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from pathlib import Path
+
+
+@dataclass
+class AnalysisConfig:
+    repo_root: Path
+
+    # -- lock discipline -------------------------------------------------------
+    # files whose classes carry guarded-by/assumes-lock annotations and
+    # whose with-blocks feed the lock-acquisition-order graph
+    lock_files: list[str] = field(default_factory=list)
+    # (ClassName, attr) -> ClassName: how `self.<attr>.<field>` accesses
+    # and `self.<attr>.<method>()` calls resolve across classes
+    attr_types: dict[tuple[str, str], str] = field(default_factory=dict)
+    # call edges the AST cannot see (callbacks installed at runtime):
+    # (Class, method) -> list of (Class, method) it may invoke
+    extra_call_edges: dict[tuple[str, str], list[tuple[str, str]]] = \
+        field(default_factory=dict)
+    # Class -> methods that run on a *different* thread than the one its
+    # owned-by-annotated fields are confined to; touching an owned field
+    # from one of these is a confinement violation
+    entry_points: dict[str, set[str]] = field(default_factory=dict)
+    # files where every threading.Thread(...) must pass name= and daemon=
+    thread_files: list[str] = field(default_factory=list)
+
+    # -- refcount/generation safety --------------------------------------------
+    refgen_files: list[str] = field(default_factory=list)
+
+    # -- stats coverage --------------------------------------------------------
+    stats_file: str = ""            # defines ServeStats/MERGE_RULES/_DERIVED
+    stats_mutation_files: list[str] = field(default_factory=list)
+
+    # -- jit purity ------------------------------------------------------------
+    jit_files: list[str] = field(default_factory=list)
+    shape_cache_file: str = ""      # file whose compile-cache keys are checked
+    shape_cache_attr: str = "_prefill_shapes"
+
+    # -- kernel registry -------------------------------------------------------
+    kernels_dir: str = ""           # src/repro/kernels
+    kernel_bench: str = ""          # benchmarks/kernel_bench.py
+
+    def resolve(self, rel: str) -> Path:
+        return self.repo_root / rel
+
+
+def repo_config(repo_root: Path) -> AnalysisConfig:
+    """The configuration for *this* repository."""
+    serving = "src/repro/serving"
+    return AnalysisConfig(
+        repo_root=repo_root,
+        lock_files=[
+            f"{serving}/scheduler.py",
+            f"{serving}/kv_pool.py",
+            f"{serving}/engine.py",
+            f"{serving}/router.py",
+            "src/repro/core/offload.py",
+        ],
+        attr_types={
+            ("ContinuousScheduler", "pool"): "KVBlockPool",
+            ("ServingEngine", "pool"): "KVBlockPool",
+            ("ServingEngine", "scheduler"): "ContinuousScheduler",
+            ("ServingEngine", "_kv_io"): "OffloadEngine",
+            ("ServingEngine", "_drafter"): "_Drafter",
+            ("_Drafter", "pool"): "KVBlockPool",
+            ("KVBlockPool", "host"): "HostTier",
+            ("ReplicaTarget", "engine"): "ServingEngine",
+            ("KVBlockTarget", "tier"): "HostTier",
+        },
+        extra_call_edges={
+            # pool.on_demote is installed by the tiered engine at
+            # construction; _demote_locked invokes it under the pool lock
+            ("KVBlockPool", "_demote_locked"):
+                [("ServingEngine", "_on_demote")],
+        },
+        entry_points={
+            # ServingEngine state is confined to the executor thread;
+            # these methods run on router / traffic / control threads
+            "ServingEngine": {"submit", "_check_fits", "load_snapshot",
+                              "load", "start", "stop"},
+            # the rebalance loop runs on the steal thread; dispatch-thread
+            # state (the fleet prefix index) must stay off it
+            "ReplicaRouter": {"_rebalance_once", "_steal_loop"},
+        },
+        thread_files=[
+            f"{serving}/engine.py",
+            f"{serving}/router.py",
+            "src/repro/core/offload.py",
+        ],
+        refgen_files=[
+            f"{serving}/scheduler.py",
+            f"{serving}/engine.py",
+            f"{serving}/router.py",
+        ],
+        stats_file=f"{serving}/engine.py",
+        stats_mutation_files=[
+            f"{serving}/engine.py",
+            f"{serving}/router.py",
+        ],
+        jit_files=[
+            "src/repro/models",
+            "src/repro/kernels",
+            "src/repro/common.py",
+            f"{serving}/engine.py",
+        ],
+        shape_cache_file=f"{serving}/engine.py",
+        kernels_dir="src/repro/kernels",
+        kernel_bench="benchmarks/kernel_bench.py",
+    )

@@ -1,0 +1,161 @@
+"""Shared infrastructure for the repo-invariant lint pass.
+
+The serving stack is a web of hand-maintained invariants — lock
+discipline on scheduler/pool state, refcount+generation safety across
+free/realloc cycles, the ``MERGE_RULES`` <-> ``_DERIVED`` stats
+bijections, power-of-two shape keys into the jit compile caches.  The
+checkers in this package prove those invariants *statically*, at lint
+time, from nothing but the stdlib ``ast``/``tokenize`` modules — no
+third-party dependencies, sub-second on this repo — so a new unguarded
+field or unmerged stat fails the build instead of surfacing as a race
+or a silently-dropped fleet counter three PRs later.
+
+This module owns what every checker shares:
+
+  * :class:`SourceModule` — one parsed file: AST, raw lines, and the
+    per-line comment map (``tokenize``-extracted, so annotations in
+    trailing comments are attributed to the statement's first line).
+  * The **annotation convention** (:func:`parse_annotations`): trailing
+    comments of the form ``# <key>: <value>`` with a small closed set of
+    keys (``guarded-by``, ``assumes-lock``, ``alias-of``, ``owned-by``,
+    ``generation-safe``, ``shape-static``, ``jit-ok``).  Annotations are
+    the contract between the code and the checkers; an annotation is
+    never a suppression of a *finding* (that is the baseline file's
+    job) — it is a machine-checked statement about the code.
+  * :class:`Finding` — one violation, with a line-independent stable id
+    (``checker:path:scope:rule``) so the baseline survives unrelated
+    edits to the file.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+
+# The closed annotation vocabulary.  Anything else after a '#' is an
+# ordinary comment; a typo'd key (e.g. "guarded_by") is itself reported
+# by the lock checker so annotations cannot silently rot.
+ANNOTATION_KEYS = (
+    "guarded-by",       # field: every access must hold this lock
+    "assumes-lock",     # function: caller guarantees this lock is held
+    "alias-of",         # field: acquiring it acquires the named lock
+    "owned-by",         # field: confined to the named thread
+    "generation-safe",  # call site: free/realloc consumer safety argument
+    "shape-static",     # call site: compile-cache key is bounded by design
+    "jit-ok",           # statement: host-side code, never traced
+)
+
+
+@dataclass
+class Finding:
+    checker: str                # "locks" | "refgen" | "stats" | "jit" | ...
+    path: str                   # repo-relative posix path
+    line: int
+    rule: str                   # short machine id of the violated rule
+    scope: str                  # Class.method / symbol the finding anchors to
+    message: str
+    suppressed: bool = False    # set by the baseline matcher
+
+    @property
+    def fid(self) -> str:
+        """Stable identity: excludes the line number, so a baseline entry
+        survives edits elsewhere in the file (the scope anchors it)."""
+        return f"{self.checker}:{self.path}:{self.scope}:{self.rule}"
+
+    def render(self) -> str:
+        mark = " [baseline]" if self.suppressed else ""
+        return (f"{self.path}:{self.line}: [{self.checker}/{self.rule}] "
+                f"{self.scope}: {self.message}{mark}")
+
+    def to_json(self) -> dict:
+        return {"id": self.fid, "checker": self.checker, "path": self.path,
+                "line": self.line, "rule": self.rule, "scope": self.scope,
+                "message": self.message, "suppressed": self.suppressed}
+
+
+@dataclass
+class SourceModule:
+    """One parsed source file plus its comment map."""
+    path: Path                  # absolute
+    rel: str                    # repo-relative posix path (finding anchor)
+    source: str
+    tree: ast.Module
+    comments: dict[int, str] = field(default_factory=dict)  # line -> text
+
+    def annotations_at(self, line: int) -> dict[str, str]:
+        return parse_annotations(self.comments.get(line, ""))
+
+    def annotation(self, node: ast.AST, key: str) -> str | None:
+        """Annotation attached to ``node``: on its first line, or (for
+        defs) on the line directly above the ``def`` — decorators and
+        long signatures make same-line comments awkward there."""
+        ann = self.annotations_at(node.lineno).get(key)
+        if ann is None and isinstance(node, (ast.FunctionDef,
+                                             ast.AsyncFunctionDef)):
+            ann = self.annotations_at(node.lineno - 1).get(key)
+        return ann
+
+
+def parse_annotations(comment: str) -> dict[str, str]:
+    """``# guarded-by: self._lock`` -> {"guarded-by": "self._lock"}.
+    Several annotations may share a line, ';'-separated."""
+    out: dict[str, str] = {}
+    if not comment:
+        return out
+    for part in comment.lstrip("#").split(";"):
+        if ":" not in part:
+            continue
+        key, _, value = part.partition(":")
+        key = key.strip()
+        if key in ANNOTATION_KEYS:
+            out[key] = value.strip()
+    return out
+
+
+def load_module(path: Path, repo_root: Path) -> SourceModule:
+    source = path.read_text()
+    tree = ast.parse(source, filename=str(path))
+    comments: dict[int, str] = {}
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type == tokenize.COMMENT:
+                # last comment on a line wins (there is only ever one)
+                comments[tok.start[0]] = tok.string
+    except tokenize.TokenError:
+        pass                      # a parsed file that fails tokenize is fine
+    rel = path.resolve().relative_to(repo_root.resolve()).as_posix()
+    return SourceModule(path=path, rel=rel, source=source, tree=tree,
+                        comments=comments)
+
+
+def attr_chain(node: ast.AST) -> list[str] | None:
+    """``self.pool.free`` -> ["self", "pool", "free"]; None when the
+    expression is not a plain name/attribute chain (calls, subscripts)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        parts.reverse()
+        return parts
+    return None
+
+
+def iter_functions(cls: ast.ClassDef):
+    """(name, def-node) for every method of ``cls`` (direct children)."""
+    for item in cls.body:
+        if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield item.name, item
+
+
+def dict_literal_keys(node: ast.AST) -> list[str]:
+    """String keys of a dict literal AST node (non-string keys skipped)."""
+    keys: list[str] = []
+    if isinstance(node, ast.Dict):
+        for k in node.keys:
+            if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                keys.append(k.value)
+    return keys

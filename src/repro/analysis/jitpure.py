@@ -1,0 +1,156 @@
+"""Jit-purity checker.
+
+Three trace-safety hazards, scoped to the model/kernel/serving hot path:
+
+1. **Tracer branches** — ``if``/``while`` whose test calls a
+   value-producing jnp reduction (``jnp.any``, ``jnp.isnan``, ...).
+   Under ``jax.jit`` that forces a trace-time concretization error; in
+   op-by-op mode it silently syncs device→host per step.  Host-side
+   helpers that are *meant* to pull values (test-only NaN probes) carry
+   ``# jit-ok: <why>`` on the branch line or the enclosing ``def``.
+
+2. **Tracer scalarization** — ``.item()`` / ``float(jnp.*(...))`` in
+   the same files, same annotation escape.
+
+3. **Compile-cache shape keys** — every call feeding the prefill/verify
+   shape caches (``self._prefill_shapes.add(...)``) must sit in a
+   function with power-of-two bucketing evidence (``_bucket_len`` or a
+   doubling loop) or be annotated ``# shape-static: <why>``; an
+   unbucketed shape key means one XLA compile per distinct request
+   length — the compile-storm failure mode.
+"""
+from __future__ import annotations
+
+import ast
+
+from .config import AnalysisConfig
+from .core import Finding, SourceModule, attr_chain, load_module
+
+# jnp functions whose *value* depends on array contents — branching on
+# them is data-dependent control flow.  jnp.issubdtype/shape/ndim etc.
+# are static and deliberately absent.
+_VALUE_FUNCS = {
+    "any", "all", "sum", "max", "min", "mean", "prod",
+    "isnan", "isfinite", "isinf", "argmax", "argmin",
+    "allclose", "array_equal", "count_nonzero",
+}
+_ARRAY_MODULES = {"jnp", "np_like", "jax"}
+
+_POW2_EVIDENCE = ("_bucket_len", "*= 2", "* 2")
+
+
+def _jit_paths(cfg: AnalysisConfig):
+    for rel in cfg.jit_files:
+        path = cfg.resolve(rel)
+        if path.is_dir():
+            yield from sorted(path.rglob("*.py"))
+        elif path.exists():
+            yield path
+
+
+def _value_call(node: ast.AST) -> str | None:
+    """'jnp.any' if the expression tree contains a call to a
+    value-producing array reduction, else None."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            chain = attr_chain(sub.func)
+            if chain and len(chain) >= 2 and chain[0] in _ARRAY_MODULES \
+                    and chain[-1] in _VALUE_FUNCS:
+                return ".".join(chain)
+    return None
+
+
+def _enclosing_defs(tree: ast.Module):
+    spans = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            spans.append((node, node.lineno, node.end_lineno or node.lineno))
+    spans.sort(key=lambda s: s[2] - s[1])
+    return spans
+
+
+def _annotated(mod: SourceModule, spans, line: int, key: str) -> bool:
+    if key in mod.annotations_at(line):
+        return True
+    for node, start, end in spans:
+        if start <= line <= end:
+            return mod.annotation(node, key) is not None
+    return False
+
+
+def check_jit(cfg: AnalysisConfig) -> list[Finding]:
+    findings: list[Finding] = []
+    for path in _jit_paths(cfg):
+        mod = load_module(path, cfg.repo_root)
+        spans = _enclosing_defs(mod.tree)
+        lines = mod.source.splitlines()
+
+        for sub in ast.walk(mod.tree):
+            if isinstance(sub, (ast.If, ast.While)):
+                hit = _value_call(sub.test)
+                if hit and not _annotated(mod, spans, sub.test.lineno,
+                                          "jit-ok"):
+                    findings.append(Finding(
+                        checker="jit", path=mod.rel, line=sub.lineno,
+                        rule="tracer-branch",
+                        scope=f"branch@{hit}",
+                        message=f"Python branch on {hit}(...) — "
+                                f"data-dependent control flow breaks "
+                                f"under jit (annotate '# jit-ok: <why>' "
+                                f"if host-side by design)"))
+            elif isinstance(sub, ast.Call):
+                chain = attr_chain(sub.func)
+                if chain and chain[-1] == "item" and not sub.args \
+                        and len(chain) >= 2 \
+                        and not _annotated(mod, spans, sub.lineno,
+                                           "jit-ok"):
+                    findings.append(Finding(
+                        checker="jit", path=mod.rel, line=sub.lineno,
+                        rule="tracer-item",
+                        scope=f"item@{'.'.join(chain[:-1])}",
+                        message=".item() forces device→host sync and "
+                                "fails on tracers (annotate "
+                                "'# jit-ok: <why>' if host-side)"))
+                elif isinstance(sub.func, ast.Name) \
+                        and sub.func.id == "float" and sub.args \
+                        and _value_call(sub.args[0]) \
+                        and not _annotated(mod, spans, sub.lineno,
+                                           "jit-ok"):
+                    findings.append(Finding(
+                        checker="jit", path=mod.rel, line=sub.lineno,
+                        rule="tracer-float", scope="float",
+                        message="float(jnp.*(...)) concretizes a traced "
+                                "value"))
+
+        # compile-cache shape keys (only the configured cache file)
+        if mod.rel != cfg.shape_cache_file:
+            continue
+        for sub in ast.walk(mod.tree):
+            if not isinstance(sub, ast.Call):
+                continue
+            chain = attr_chain(sub.func)
+            if not chain or chain[-1] != "add" \
+                    or cfg.shape_cache_attr not in chain:
+                continue
+            fn = start = end = None
+            for node, s, e in spans:
+                if s <= sub.lineno <= e:
+                    fn, start, end = node, s, e
+                    break
+            if fn is not None and \
+                    mod.annotation(fn, "shape-static") is not None:
+                continue
+            if "shape-static" in mod.annotations_at(sub.lineno):
+                continue
+            body = "\n".join(lines[start - 1:end]) if fn is not None else ""
+            if any(tok in body for tok in _POW2_EVIDENCE):
+                continue
+            findings.append(Finding(
+                checker="jit", path=mod.rel, line=sub.lineno,
+                rule="unbucketed-shape",
+                scope=f"{fn.name if fn else '<module>'}@shape-cache",
+                message=f"shape key enters {cfg.shape_cache_attr} with no "
+                        f"power-of-two bucketing in the enclosing "
+                        f"function (expected {_POW2_EVIDENCE}) — one "
+                        f"compile per distinct length"))
+    return findings

@@ -1,0 +1,102 @@
+"""Kernel-registry cross-check.
+
+Every kernel family under ``kernels/<family>/`` must:
+
+1. have an ``ops.py`` that registers at least one kernel via
+   ``register_kernel(...)`` imported from ``kernels/dispatch.py`` (the
+   single registry — a family registering around it would be invisible
+   to ``kernel_table()`` consumers), and
+2. have every registered kernel name covered by an entry in
+   ``benchmarks/kernel_bench.py``'s ``COVERAGE`` table, so the smoke
+   gate actually exercises it.
+
+``kernel_bench --smoke`` already cross-checks registration↔coverage at
+*runtime*; this lifts it to lint so an unregistered or uncovered kernel
+fails before anything is imported, and catches stale COVERAGE entries
+whose kernel was deleted.
+"""
+from __future__ import annotations
+
+import ast
+
+from .config import AnalysisConfig
+from .core import Finding, dict_literal_keys, load_module
+
+
+def check_kernels(cfg: AnalysisConfig) -> list[Finding]:
+    findings: list[Finding] = []
+    if not cfg.kernels_dir or not cfg.kernel_bench:
+        return findings
+    kdir = cfg.resolve(cfg.kernels_dir)
+    bench = cfg.resolve(cfg.kernel_bench)
+    if not kdir.is_dir() or not bench.is_file():
+        return findings
+
+    # COVERAGE keys from the bench module
+    bmod = load_module(bench, cfg.repo_root)
+    coverage: set[str] = set()
+    cov_line = 0
+    for node in bmod.tree.body:
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == "COVERAGE":
+                    coverage = set(dict_literal_keys(node.value))
+                    cov_line = node.lineno
+
+    registered: dict[str, tuple[str, int]] = {}  # name -> (rel, line)
+    for fam in sorted(p for p in kdir.iterdir() if p.is_dir()):
+        if fam.name.startswith("_"):
+            continue
+        ops = fam / "ops.py"
+        if not ops.exists():
+            findings.append(Finding(
+                checker="kernels", path=f"{cfg.kernels_dir}/{fam.name}",
+                line=0, rule="no-ops-module", scope=fam.name,
+                message=f"kernel family '{fam.name}' has no ops.py — "
+                        f"nothing registers it in the dispatch table"))
+            continue
+        mod = load_module(ops, cfg.repo_root)
+        imports_dispatch = any(
+            isinstance(n, ast.ImportFrom) and n.module
+            and n.module.endswith("dispatch")
+            and any(a.name == "register_kernel" for a in n.names)
+            for n in ast.walk(mod.tree))
+        names_here = []
+        for sub in ast.walk(mod.tree):
+            if isinstance(sub, ast.Call) and \
+                    isinstance(sub.func, ast.Name) and \
+                    sub.func.id == "register_kernel" and sub.args and \
+                    isinstance(sub.args[0], ast.Constant):
+                name = sub.args[0].value
+                names_here.append(name)
+                registered[name] = (mod.rel, sub.lineno)
+        if not names_here:
+            findings.append(Finding(
+                checker="kernels", path=mod.rel, line=1,
+                rule="unregistered-family", scope=fam.name,
+                message=f"kernel family '{fam.name}' ops.py makes no "
+                        f"register_kernel(...) call"))
+        elif not imports_dispatch:
+            findings.append(Finding(
+                checker="kernels", path=mod.rel, line=1,
+                rule="no-dispatch-import", scope=fam.name,
+                message=f"'{fam.name}' registers kernels without "
+                        f"importing register_kernel from "
+                        f"kernels/dispatch.py — not the shared registry"))
+
+    bench_rel = bmod.rel
+    for name in sorted(set(registered) - coverage):
+        rel, line = registered[name]
+        findings.append(Finding(
+            checker="kernels", path=rel, line=line,
+            rule="uncovered-kernel", scope=name,
+            message=f"kernel '{name}' is registered but has no COVERAGE "
+                    f"entry in {bench_rel} — the smoke gate never "
+                    f"exercises it"))
+    for name in sorted(coverage - set(registered)):
+        findings.append(Finding(
+            checker="kernels", path=bench_rel, line=cov_line,
+            rule="stale-coverage", scope=name,
+            message=f"COVERAGE entry '{name}' matches no registered "
+                    f"kernel"))
+    return findings

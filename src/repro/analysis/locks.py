@@ -1,0 +1,425 @@
+"""Lock-discipline checker.
+
+Three related proofs over the serving stack's concurrency annotations:
+
+1. **Guarded access** — every read/write of a field annotated
+   ``# guarded-by: self._lock`` happens inside a ``with`` block that
+   holds that lock (alias-aware: acquiring a ``Condition`` annotated
+   ``# alias-of: self._lock`` counts) or inside a method annotated
+   ``# assumes-lock: <lock>``.  Fields annotated
+   ``# owned-by: <thread>`` are thread-confined instead of
+   lock-guarded: they may be touched anywhere *except* the configured
+   cross-thread entry points of their class.
+
+2. **Lock-acquisition order** — a static graph with one node per
+   canonical lock (``Class._lock``) and an edge A→B wherever B is
+   acquired while A is held, including *transitively* through calls
+   (``self.m()``, typed attribute chains via the config attr map, and
+   config-injected dynamic edges for runtime-installed hooks like
+   ``pool.on_demote``).  Any cycle is a potential deadlock and fails
+   the build.
+
+3. **Thread hygiene** — every ``threading.Thread(...)`` constructed in
+   the configured serving/core modules must pass explicit ``name=`` and
+   ``daemon=`` (the repo policy: named daemon workers, joined in
+   ``stop()``; the policy itself is asserted at runtime by
+   ``tests/test_threads.py``).
+
+``__init__`` bodies are exempt from guarded-access checking: the object
+is not yet published to other threads while it is being constructed.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field as dc_field
+
+from .config import AnalysisConfig
+from .core import (ANNOTATION_KEYS, Finding, SourceModule, attr_chain,
+                   iter_functions, load_module)
+
+_LOCK_CTORS = {"Lock", "RLock", "Condition", "Semaphore", "BoundedSemaphore"}
+# annotation-shaped comment keys that are NOT in the vocabulary (typo
+# rot): checked only in annotation *position* — the text before the
+# first ':' of a ';'-separated segment, mirroring parse_annotations —
+# so prose mentioning "shape-keyed: ..." mid-sentence is not flagged
+_ANN_ROT = re.compile(
+    r"(?:guarded|assumes|alias|owned|generation|shape|jit)"
+    r"[-_][a-z][a-z_-]*")
+
+
+@dataclass
+class _Cls:
+    name: str
+    mod: SourceModule
+    node: ast.ClassDef
+    guarded: dict[str, str] = dc_field(default_factory=dict)  # field -> lock
+    owned: dict[str, str] = dc_field(default_factory=dict)    # field -> thread
+    aliases: dict[str, str] = dc_field(default_factory=dict)  # field -> lock
+    locks: set[str] = dc_field(default_factory=set)           # lock fields
+
+
+class _Ctx:
+    """Shared state across all method walks: findings, the lock-order
+    edge set, per-method direct acquisitions, and call sites."""
+
+    def __init__(self, cfg: AnalysisConfig, classes: dict[str, _Cls]):
+        self.cfg = cfg
+        self.classes = classes
+        self.findings: list[Finding] = []
+        # (lock_a, lock_b) -> (rel, line) of the first site creating it
+        self.edges: dict[tuple[str, str], tuple[str, int]] = {}
+        self.direct: dict[tuple[str, str], set[str]] = {}
+        self.assumed: dict[tuple[str, str], set[str]] = {}
+        self.calls: dict[tuple[str, str], set[tuple[str, str]]] = {}
+        # (caller, callee, held-frozenset, rel, line)
+        self.call_sites: list[tuple] = []
+
+    def edge(self, a: str, b: str, rel: str, line: int) -> None:
+        if a != b:  # same-lock re-entry is RLock reentrancy, not an order
+            self.edges.setdefault((a, b), (rel, line))
+
+    def acquire(self, key: tuple[str, str], lock: str) -> None:
+        self.direct.setdefault(key, set()).add(lock)
+
+
+def _canon_value(cls_name: str, text: str) -> str:
+    """Annotation value -> canonical lock name.  ``self._lock`` in class
+    C becomes ``C._lock``; anything else is taken as already canonical
+    (``KVBlockPool._lock`` for cross-class assumptions)."""
+    text = text.strip()
+    if text.startswith("self."):
+        return f"{cls_name}.{text[5:]}"
+    return text
+
+
+def _collect_class(mod: SourceModule, node: ast.ClassDef) -> _Cls:
+    cls = _Cls(node.name, mod, node)
+    for sub in ast.walk(node):
+        if not isinstance(sub, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            continue
+        targets = sub.targets if isinstance(sub, ast.Assign) else [sub.target]
+        for tgt in targets:
+            chain = attr_chain(tgt)
+            if not chain or chain[0] != "self" or len(chain) != 2:
+                continue
+            f = chain[1]
+            # a multi-line assignment may carry its trailing annotation
+            # on any of its physical lines
+            ann: dict[str, str] = {}
+            for line in range(sub.lineno, (sub.end_lineno or sub.lineno) + 1):
+                ann.update(mod.annotations_at(line))
+            if "guarded-by" in ann:
+                cls.guarded[f] = _canon_value(cls.name, ann["guarded-by"])
+            if "owned-by" in ann:
+                cls.owned[f] = ann["owned-by"]
+            if "alias-of" in ann:
+                cls.aliases[f] = _canon_value(cls.name, ann["alias-of"])
+            value = getattr(sub, "value", None)
+            if isinstance(value, ast.Call):
+                fchain = attr_chain(value.func)
+                if fchain and fchain[-1] in _LOCK_CTORS:
+                    cls.locks.add(f)
+    return cls
+
+
+class _Walker:
+    """Walks one method body tracking the set of held canonical locks."""
+
+    def __init__(self, ctx: _Ctx, cls: _Cls, meth: str, is_entry: bool,
+                 check_access: bool = True):
+        self.ctx = ctx
+        self.cls = cls
+        self.meth = meth
+        self.key = (cls.name, meth)
+        self.is_entry = is_entry
+        self.check_access = check_access
+        self.scope = f"{cls.name}.{meth}"
+        self._reported: set[tuple[int, str]] = set()
+
+    # -- lock expression resolution -------------------------------------------
+
+    def resolve_lock(self, expr: ast.AST) -> set[str]:
+        chain = attr_chain(expr)
+        if not chain or chain[0] != "self":
+            return set()
+        if len(chain) == 2:
+            f = chain[1]
+            if f in self.cls.aliases:
+                return {self.cls.aliases[f]}
+            return {f"{self.cls.name}.{f}"}
+        if len(chain) == 3:
+            tname = self.ctx.cfg.attr_types.get((self.cls.name, chain[1]))
+            target = self.ctx.classes.get(tname) if tname else None
+            if target is not None:
+                f = chain[2]
+                if f in target.aliases:
+                    return {target.aliases[f]}
+                return {f"{target.name}.{f}"}
+        return set()
+
+    # -- statement walk --------------------------------------------------------
+
+    def walk(self, stmts: list[ast.stmt], held: frozenset[str]) -> None:
+        for s in stmts:
+            self._stmt(s, held)
+
+    def _stmt(self, s: ast.stmt, held: frozenset[str]) -> None:
+        if isinstance(s, ast.With):
+            acquired: set[str] = set()
+            for item in s.items:
+                self._scan(item.context_expr, held, lock_expr=True)
+                for lock in self.resolve_lock(item.context_expr):
+                    self.ctx.acquire(self.key, lock)
+                    for h in held:
+                        self.ctx.edge(h, lock, self.cls.mod.rel, s.lineno)
+                    acquired.add(lock)
+                if item.optional_vars is not None:
+                    self._scan(item.optional_vars, held)
+            self.walk(s.body, held | frozenset(acquired))
+        elif isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested def: runs later, usually on another thread (worker
+            # loops) — fresh scope, empty lock set, never entry-restricted
+            inner = _Walker(self.ctx, self.cls, f"{self.meth}.{s.name}",
+                            is_entry=False, check_access=self.check_access)
+            assumed = self.cls.mod.annotation(s, "assumes-lock")
+            held0 = frozenset(_canon_value(self.cls.name, a)
+                              for a in assumed.split(",")) if assumed \
+                else frozenset()
+            inner.walk(s.body, held0)
+        elif isinstance(s, (ast.If, ast.While)):
+            self._scan(s.test, held)
+            self.walk(s.body, held)
+            self.walk(s.orelse, held)
+        elif isinstance(s, (ast.For, ast.AsyncFor)):
+            self._scan(s.target, held)
+            self._scan(s.iter, held)
+            self.walk(s.body, held)
+            self.walk(s.orelse, held)
+        elif isinstance(s, ast.Try):
+            self.walk(s.body, held)
+            for h in s.handlers:
+                self.walk(h.body, held)
+            self.walk(s.orelse, held)
+            self.walk(s.finalbody, held)
+        elif isinstance(s, ast.ClassDef):
+            pass
+        else:
+            self._scan(s, held)
+
+    # -- expression scan -------------------------------------------------------
+
+    def _scan(self, node: ast.AST, held: frozenset[str],
+              lock_expr: bool = False) -> None:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Attribute):
+                self._access(sub, held, lock_expr)
+            elif isinstance(sub, ast.Call):
+                self._call(sub, held)
+
+    def _report(self, line: int, field: str, rule: str, msg: str) -> None:
+        if (line, field) in self._reported:
+            return
+        self._reported.add((line, field))
+        self.ctx.findings.append(Finding(
+            checker="locks", path=self.cls.mod.rel, line=line, rule=rule,
+            scope=self.scope, message=msg))
+
+    def _access(self, sub: ast.Attribute, held: frozenset[str],
+                lock_expr: bool) -> None:
+        if not self.check_access:
+            return
+        chain = attr_chain(sub)
+        if not chain or chain[0] != "self" or len(chain) < 2:
+            return
+        f = chain[1]
+        if f in self.cls.guarded:
+            lock = self.cls.guarded[f]
+            if lock not in held:
+                self._report(
+                    sub.lineno, f, "unguarded-field",
+                    f"access to self.{f} (guarded-by {lock}) without "
+                    f"holding the lock")
+        elif f in self.cls.owned and self.is_entry:
+            self._report(
+                sub.lineno, f, "owned-cross-thread",
+                f"self.{f} is owned-by {self.cls.owned[f]} but "
+                f"{self.meth}() runs on another thread")
+        elif len(chain) >= 3:
+            tname = self.ctx.cfg.attr_types.get((self.cls.name, f))
+            target = self.ctx.classes.get(tname) if tname else None
+            if target is None:
+                return
+            g = chain[2]
+            if g in target.guarded and not (lock_expr and len(chain) == 3):
+                lock = target.guarded[g]
+                if lock not in held:
+                    self._report(
+                        sub.lineno, f"{f}.{g}", "unguarded-field",
+                        f"access to self.{f}.{g} (guarded-by {lock}) "
+                        f"without holding the lock")
+
+    def _call(self, sub: ast.Call, held: frozenset[str]) -> None:
+        chain = attr_chain(sub.func)
+        if not chain or chain[0] != "self":
+            return
+        if len(chain) == 2:
+            callee = (self.cls.name, chain[1])
+        elif len(chain) == 3:
+            tname = self.ctx.cfg.attr_types.get((self.cls.name, chain[1]))
+            if tname is None:
+                return
+            callee = (tname, chain[2])
+        else:
+            return
+        self.ctx.calls.setdefault(self.key, set()).add(callee)
+        self.ctx.call_sites.append(
+            (self.key, callee, held, self.cls.mod.rel, sub.lineno))
+
+
+def _transitive_acquired(ctx: _Ctx) -> dict[tuple[str, str], set[str]]:
+    """Fixpoint: locks each (Class, method) may acquire, directly or via
+    any call it makes (including config-injected dynamic edges)."""
+    calls = {k: set(v) for k, v in ctx.calls.items()}
+    for src, dsts in ctx.cfg.extra_call_edges.items():
+        calls.setdefault(src, set()).update(dsts)
+    star = {k: set(v) for k, v in ctx.direct.items()}
+    changed = True
+    while changed:
+        changed = False
+        for key, callees in calls.items():
+            cur = star.setdefault(key, set())
+            for c in callees:
+                extra = star.get(c)
+                if extra and not extra <= cur:
+                    cur |= extra
+                    changed = True
+    return star
+
+
+def _find_cycles(edges: dict[tuple[str, str], tuple[str, int]]):
+    adj: dict[str, set[str]] = {}
+    for a, b in edges:
+        adj.setdefault(a, set()).add(b)
+        adj.setdefault(b, set())
+    color: dict[str, int] = {}
+    stack: list[str] = []
+    cycles: list[list[str]] = []
+
+    def dfs(n: str) -> None:
+        color[n] = 1
+        stack.append(n)
+        for m in sorted(adj[n]):
+            if color.get(m, 0) == 0:
+                dfs(m)
+            elif color[m] == 1:
+                cycles.append(stack[stack.index(m):] + [m])
+        stack.pop()
+        color[n] = 2
+
+    for n in sorted(adj):
+        if color.get(n, 0) == 0:
+            dfs(n)
+    return cycles
+
+
+def _check_threads(mod: SourceModule, findings: list[Finding]) -> None:
+    for sub in ast.walk(mod.tree):
+        if not isinstance(sub, ast.Call):
+            continue
+        chain = attr_chain(sub.func)
+        if not chain or chain[-1] != "Thread":
+            continue
+        if len(chain) > 1 and chain[-2] != "threading":
+            continue
+        kw = {k.arg for k in sub.keywords}
+        missing = [k for k in ("name", "daemon") if k not in kw]
+        if missing:
+            findings.append(Finding(
+                checker="locks", path=mod.rel, line=sub.lineno,
+                rule="thread-hygiene", scope=f"Thread@{sub.lineno}",
+                message=f"threading.Thread(...) without explicit "
+                        f"{'/'.join(missing)}= (policy: named daemon "
+                        f"workers, joined in stop())"))
+
+
+def _check_annotation_rot(mod: SourceModule, findings: list[Finding]) -> None:
+    for line, comment in mod.comments.items():
+        for part in comment.lstrip("#").split(";"):
+            key = part.partition(":")[0].strip()
+            if _ANN_ROT.fullmatch(key) and key not in ANNOTATION_KEYS:
+                findings.append(Finding(
+                    checker="locks", path=mod.rel, line=line,
+                    rule="bad-annotation", scope=key,
+                    message=f"comment key '{key}' is not in the "
+                            f"annotation vocabulary {ANNOTATION_KEYS}"))
+
+
+def check_locks(cfg: AnalysisConfig) -> list[Finding]:
+    mods: list[SourceModule] = []
+    for rel in cfg.lock_files:
+        path = cfg.resolve(rel)
+        if path.exists():
+            mods.append(load_module(path, cfg.repo_root))
+
+    classes: dict[str, _Cls] = {}
+    for mod in mods:
+        for node in mod.tree.body:
+            if isinstance(node, ast.ClassDef):
+                classes[node.name] = _collect_class(mod, node)
+
+    ctx = _Ctx(cfg, classes)
+
+    for cls in classes.values():
+        entries = cfg.entry_points.get(cls.name, set())
+        for name, fn in iter_functions(cls.node):
+            assumed = cls.mod.annotation(fn, "assumes-lock")
+            held0 = frozenset(_canon_value(cls.name, a)
+                              for a in assumed.split(",")) if assumed \
+                else frozenset()
+            walker = _Walker(ctx, cls, name, is_entry=name in entries,
+                             check_access=name != "__init__")
+            if held0:
+                ctx.assumed[(cls.name, name)] = set(held0)
+            walker.walk(fn.body, held0)
+
+    # dynamic hook edges (config): the hook fires somewhere inside the
+    # source method — conservatively, while it holds everything it ever
+    # directly acquires or assumes
+    for src, dsts in cfg.extra_call_edges.items():
+        held = frozenset(ctx.direct.get(src, set()) |
+                         ctx.assumed.get(src, set()))
+        src_cls = classes.get(src[0])
+        rel = src_cls.mod.rel if src_cls else ""
+        for dst in dsts:
+            ctx.call_sites.append((src, dst, held, rel, 0))
+
+    # call-site transitive edges: calling a method that (transitively)
+    # acquires lock L while holding H adds H -> L
+    star = _transitive_acquired(ctx)
+    for caller, callee, held, rel, line in ctx.call_sites:
+        for lock in star.get(callee, ()):
+            for h in held:
+                ctx.edge(h, lock, rel, line)
+
+    for cycle in _find_cycles(ctx.edges):
+        first = ctx.edges.get((cycle[0], cycle[1]),
+                              (mods[0].rel if mods else "", 0))
+        ctx.findings.append(Finding(
+            checker="locks", path=first[0], line=first[1],
+            rule="lock-order-cycle", scope=" -> ".join(cycle),
+            message=f"lock acquisition cycle {' -> '.join(cycle)} "
+                    f"(potential deadlock)"))
+
+    thread_mods = {m.rel: m for m in mods}
+    for rel in cfg.thread_files:
+        path = cfg.resolve(rel)
+        if not path.exists():
+            continue
+        mod = thread_mods.get(rel) or load_module(path, cfg.repo_root)
+        _check_threads(mod, ctx.findings)
+
+    for mod in mods:
+        _check_annotation_rot(mod, ctx.findings)
+
+    return ctx.findings

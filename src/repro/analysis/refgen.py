@@ -1,0 +1,101 @@
+"""Refcount/generation-safety checker (the PR-7 race class).
+
+KV blocks are pooled: ``free()`` recycles a block id immediately, so any
+consumer still holding the id (an in-flight host-tier fetch, a draft
+slot, a shared prefix) must either re-validate the block's generation
+tag before writing through it or be redirected to the trash block.
+PR 7's spill→free→realloc→fetch corruption was exactly a ``free`` call
+whose consumer side lacked that check.
+
+This checker enforces the pairing *structurally*: every call site of a
+block-lifecycle API must sit in a function that shows evidence of the
+consumer-side guard — a generation/liveness token in the same function
+body — or carry an explicit ``# generation-safe: <why>`` annotation
+(on the call line or the enclosing ``def``) recording the argument.
+
+The evidence tokens are deliberately coarse (token presence in the
+enclosing function's source): the goal is to force every free/demote
+site to either colocate its guard or document the cross-function safety
+argument where the reviewer of the *next* refactor will see it.
+"""
+from __future__ import annotations
+
+import ast
+
+from .config import AnalysisConfig
+from .core import Finding, SourceModule, attr_chain, load_module
+
+# lifecycle API -> tokens, any ONE of which counts as consumer-side
+# evidence when present in the enclosing function's source
+_RULES: dict[str, tuple[str, ...]] = {
+    # freeing live ids: caller must flow through the retire/evict path
+    # (which trash-redirects the slot tables) or check liveness itself
+    "free": ("evicted_block_ids", "_retire_slot", "drain_preempted",
+             "block_live", "generation", "_gen"),
+    # dropping provisional (speculative) blocks: the slot's block_ids
+    # must be trimmed in the same function so stale ids cannot be walked
+    "release_provisional": ("del ", "block_ids[:", "generation"),
+    # sharing a prefix block: only ids proven live may gain a ref
+    "share": ("_lookup_prefix", "block_live", "generation"),
+    # writing through a held id after any await/spill point
+    "_write_block": ("block_live", "generation", "_gen"),
+}
+
+
+def _function_spans(tree: ast.Module):
+    """Innermost-first (fn_node, start, end) spans for enclosing-function
+    lookup; module-level code falls through to None."""
+    spans = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            spans.append((node, node.lineno, node.end_lineno or node.lineno))
+    spans.sort(key=lambda s: s[2] - s[1])  # innermost (smallest) first
+    return spans
+
+
+def _enclosing(spans, line: int):
+    for node, start, end in spans:
+        if start <= line <= end:
+            return node, start, end
+    return None, None, None
+
+
+def check_refgen(cfg: AnalysisConfig) -> list[Finding]:
+    findings: list[Finding] = []
+    for rel in cfg.refgen_files:
+        path = cfg.resolve(rel)
+        if not path.exists():
+            continue
+        mod = load_module(path, cfg.repo_root)
+        lines = mod.source.splitlines()
+        spans = _function_spans(mod.tree)
+        for sub in ast.walk(mod.tree):
+            if not isinstance(sub, ast.Call):
+                continue
+            chain = attr_chain(sub.func)
+            if not chain or len(chain) < 2:
+                continue
+            api = chain[-1]
+            if api not in _RULES:
+                continue
+            fn, start, end = _enclosing(spans, sub.lineno)
+            scope = fn.name if fn is not None else "<module>"
+            # explicit annotation on the call line or the enclosing def
+            if "generation-safe" in mod.annotations_at(sub.lineno):
+                continue
+            if fn is not None and \
+                    mod.annotation(fn, "generation-safe") is not None:
+                continue
+            body = "\n".join(lines[start - 1:end]) if fn is not None else ""
+            tokens = _RULES[api]
+            if any(tok in body for tok in tokens):
+                continue
+            findings.append(Finding(
+                checker="refgen", path=mod.rel, line=sub.lineno,
+                rule=f"unproven-{api}", scope=f"{scope}@{api}",
+                message=f"{'.'.join(chain)}() frees/recycles pool blocks "
+                        f"but the enclosing function shows no "
+                        f"generation/liveness guard (expected one of "
+                        f"{tokens}) and no '# generation-safe:' "
+                        f"annotation"))
+    return findings

@@ -1,0 +1,145 @@
+"""Stats-coverage checker.
+
+``ServeStats`` is merged across replicas declaratively: ``MERGE_RULES``
+maps each field to its fleet-merge combinator and ``_DERIVED`` recomputes
+ratio fields from merged numerators/denominators.  PR 3 shipped fleet
+stats that were never populated and PR 6 hand-patched derived ratios —
+both were runtime-test catches of what is really a static property:
+
+  fields(ServeStats) == keys(MERGE_RULES) ∪ keys(_DERIVED), disjointly.
+
+This checker lifts that bijection to lint time, and additionally proves
+every stats counter *mutated* in the engine/router (``<stats>.f += ...``)
+is a declared field of its dataclass — a typo'd counter name otherwise
+accumulates into ``__dict__`` and silently never merges.
+"""
+from __future__ import annotations
+
+import ast
+
+from .config import AnalysisConfig
+from .core import Finding, attr_chain, load_module
+
+# receivers whose attribute mutations are stats-counter mutations, and
+# the dataclass whose fields they must belong to
+_STATS_RECEIVERS = {
+    "stats": ("ServeStats", "RouterStats"),
+    "totals": ("ServeStats",),
+    "rbase": ("RouterStats",),
+}
+
+
+def _dataclass_fields(tree: ast.Module, name: str) -> set[str]:
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef) and node.name == name:
+            return {item.target.id for item in node.body
+                    if isinstance(item, ast.AnnAssign)
+                    and isinstance(item.target, ast.Name)}
+    return set()
+
+
+def _module_dict(tree: ast.Module, name: str) -> tuple[dict[str, str], int]:
+    """String-keyed dict literal assigned to module global ``name``;
+    values kept when they are string constants (merge-rule names), else
+    ``""`` (e.g. the _DERIVED lambdas)."""
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets = [node.target]
+        else:
+            continue
+        for tgt in targets:
+            if isinstance(tgt, ast.Name) and tgt.id == name \
+                    and isinstance(node.value, ast.Dict):
+                out: dict[str, str] = {}
+                for k, v in zip(node.value.keys, node.value.values):
+                    if isinstance(k, ast.Constant) and \
+                            isinstance(k.value, str):
+                        out[k.value] = v.value \
+                            if isinstance(v, ast.Constant) and \
+                            isinstance(v.value, str) else ""
+                return out, node.lineno
+    return {}, 0
+
+
+def check_stats(cfg: AnalysisConfig) -> list[Finding]:
+    findings: list[Finding] = []
+    if not cfg.stats_file:
+        return findings
+    stats_path = cfg.resolve(cfg.stats_file)
+    if not stats_path.exists():
+        return findings
+    mod = load_module(stats_path, cfg.repo_root)
+
+    fields = _dataclass_fields(mod.tree, "ServeStats")
+    merge_rules, merge_line = _module_dict(mod.tree, "MERGE_RULES")
+    derived_keys, derived_line = _module_dict(mod.tree, "_DERIVED")
+    merge = set(merge_rules)
+    derived = set(derived_keys)
+    declared_derived = {k for k, v in merge_rules.items() if v == "derived"}
+
+    for f in sorted(fields - merge):
+        findings.append(Finding(
+            checker="stats", path=mod.rel, line=merge_line,
+            rule="unmerged-field", scope=f,
+            message=f"ServeStats.{f} has no MERGE_RULES entry — it will "
+                    f"silently reset on fleet merge"))
+    for f in sorted(merge - fields):
+        findings.append(Finding(
+            checker="stats", path=mod.rel, line=merge_line,
+            rule="stale-rule", scope=f,
+            message=f"MERGE_RULES entry '{f}' names no ServeStats field"))
+    # bijection between rules declared "derived" and _DERIVED recomputes
+    for f in sorted(declared_derived - derived):
+        findings.append(Finding(
+            checker="stats", path=mod.rel, line=derived_line,
+            rule="derived-mismatch", scope=f,
+            message=f"'{f}' is declared 'derived' in MERGE_RULES but has "
+                    f"no _DERIVED recompute — it keeps a stale ratio "
+                    f"after merge"))
+    for f in sorted(derived - declared_derived):
+        findings.append(Finding(
+            checker="stats", path=mod.rel, line=derived_line,
+            rule="derived-mismatch", scope=f,
+            message=f"_DERIVED recomputes '{f}' but MERGE_RULES does not "
+                    f"declare it 'derived' — the fold result is "
+                    f"overwritten"))
+
+    # counter mutations: <...>.stats.f += / <...>.totals.f += must name a
+    # declared field of the corresponding stats dataclass
+    known: dict[str, set[str]] = {"ServeStats": fields}
+    for rel in cfg.stats_mutation_files:
+        path = cfg.resolve(rel)
+        if not path.exists():
+            continue
+        m = load_module(path, cfg.repo_root)
+        for cls in ("ServeStats", "RouterStats"):
+            if cls not in known:
+                got = _dataclass_fields(m.tree, cls)
+                if got:
+                    known[cls] = got
+        for sub in ast.walk(m.tree):
+            if not isinstance(sub, (ast.AugAssign, ast.Assign)):
+                continue
+            targets = sub.targets if isinstance(sub, ast.Assign) \
+                else [sub.target]
+            for tgt in targets:
+                chain = attr_chain(tgt)
+                if not chain or len(chain) < 2:
+                    continue
+                recv, fname = chain[-2], chain[-1]
+                classes = _STATS_RECEIVERS.get(recv)
+                if classes is None:
+                    continue
+                ok = any(fname in known.get(c, set()) for c in classes)
+                if not ok and any(c in known for c in classes):
+                    findings.append(Finding(
+                        checker="stats", path=m.rel, line=sub.lineno,
+                        rule="unknown-counter",
+                        scope=f"{recv}.{fname}",
+                        message=f"mutation of {recv}.{fname} names no "
+                                f"declared field of "
+                                f"{'/'.join(classes)} — it will never "
+                                f"merge"))
+    return findings

@@ -74,6 +74,7 @@ def cast_tree(tree: Pytree, dtype) -> Pytree:
     return jax.tree_util.tree_map(_cast, tree)
 
 
+# jit-ok: host-side helper, never called under trace — pulls values to host
 def assert_no_nans(tree: Pytree, where: str = "") -> None:
     """Host-side NaN check (tests/smoke only; pulls values to host)."""
     for path, leaf in jax.tree_util.tree_leaves_with_path(tree):

@@ -95,7 +95,9 @@ class Target:
 
     def open(self) -> None:
         self._q: queue.Queue = queue.Queue()
-        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker = threading.Thread(target=self._run,
+                                        name=f"offload-{self.name}",
+                                        daemon=True)
         self._alive = True
         self.busy = False
         self._worker.start()
@@ -259,11 +261,20 @@ class OffloadEngine:
         self.targets = list(targets)
         self.scheduler = scheduler
         self.deadline_s = deadline_s
-        self._rr = 0
-        self._seq = 0
+        # Leaf lock for the engine's own counters/maps.  Submissions come
+        # from several threads at once (the serve loop's submit_async, a
+        # serving engine's spill submits from *inside* the pool lock, the
+        # tier drain's next_done on the executor thread), so these need a
+        # lock — but it is never held across _pick (a placement hook may
+        # take scheduler/pool locks: router._place -> load_snapshot) or
+        # load_tensor, which keeps it a leaf in the acquisition order and
+        # the lock-order graph cycle-free.
+        self._lock = threading.Lock()
+        self._rr = 0                          # guarded-by: self._lock
+        self._seq = 0                         # guarded-by: self._lock
         self._open = False
         self._done_q: queue.Queue = queue.Queue()
-        self._async_pending: dict[int, WorkItem] = {}
+        self._async_pending: dict[int, WorkItem] = {}  # guarded-by: self._lock
 
     def __enter__(self):
         for t in self.targets:
@@ -293,9 +304,10 @@ class OffloadEngine:
         if callable(self.scheduler):
             return self.scheduler(self.targets, payload)
         if self.scheduler == "round_robin":
-            t = self.targets[self._rr % len(self.targets)]
-            self._rr += 1
-            return t
+            with self._lock:
+                idx = self._rr
+                self._rr += 1
+            return self.targets[idx % len(self.targets)]
         return min(self.targets, key=lambda t: t.queue_depth)
 
     def submit(self, payload: Any, *,
@@ -306,8 +318,10 @@ class OffloadEngine:
         thread, the moment the item finishes — the async-notify alternative
         to blocking in :meth:`get_result`.
         """
-        item = WorkItem(seq=self._seq, payload=payload, on_done=on_done)
-        self._seq += 1
+        with self._lock:              # leaf: released before _pick/dispatch
+            seq = self._seq
+            self._seq += 1
+        item = WorkItem(seq=seq, payload=payload, on_done=on_done)
         self._pick(payload).load_tensor(item)
         return item
 
@@ -316,7 +330,8 @@ class OffloadEngine:
         consumer loop can collect items out of order via :meth:`next_done`
         / :meth:`drain` without head-of-line blocking."""
         item = self.submit(payload, on_done=self._done_q.put)
-        self._async_pending[item.seq] = item
+        with self._lock:
+            self._async_pending[item.seq] = item
         return item
 
     def next_done(self, timeout: float | None = None) -> WorkItem | None:
@@ -330,7 +345,8 @@ class OffloadEngine:
             item = self._done_q.get(timeout=timeout)
         except queue.Empty:
             return None
-        self._async_pending.pop(item.seq, None)
+        with self._lock:
+            self._async_pending.pop(item.seq, None)
         return item
 
     def drain(self, n: int, *, deadline_s: float | None = None):
@@ -347,7 +363,9 @@ class OffloadEngine:
             item = self.next_done(timeout=deadline)
             if item is None:          # quiet past deadline -> reissue stragglers
                 alt = min(self.targets, key=lambda t: t.queue_depth)
-                for it in list(self._async_pending.values()):
+                with self._lock:      # snapshot only; dispatch outside
+                    pending = list(self._async_pending.values())
+                for it in pending:
                     # at most one reissue per item (same as get_result):
                     # repeating it would admit duplicate clones every quiet
                     # period on replica-style targets
@@ -355,7 +373,8 @@ class OffloadEngine:
                         it.reissued = True
                         alt.load_tensor(it)
                 item = self._done_q.get()
-            self._async_pending.pop(item.seq, None)
+            with self._lock:
+                self._async_pending.pop(item.seq, None)
             got += 1
             yield item
 

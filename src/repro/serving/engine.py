@@ -440,8 +440,8 @@ class _Drafter:
         was never seeded."""
         ids = self._blocks.pop(slot, None)
         if ids:
-            self.pool.free(ids)
-        self._tables[slot] = 0
+            self.pool.free(ids)  # generation-safe: table rows zeroed below
+        self._tables[slot] = 0   # trash redirect before the next scatter
         self._lens[slot] = 0
 
     def set_len(self, slot: int, rows: int) -> None:
@@ -574,13 +574,13 @@ class ServingEngine:
         # block -> (block id, alloc generation); entries are validated
         # against the pool on lookup, so a freed-and-reused block can
         # never be shared stale
-        self._prefix_index: dict[bytes, tuple[int, int]] = {}
-        self.prefix_shared_total = 0         # lifetime shared table entries
+        self._prefix_index: dict[bytes, tuple[int, int]] = {}  # owned-by: executor-thread
+        self.prefix_shared_total = 0  # owned-by: executor-thread; lifetime shared entries
         # slot -> in-progress chunked prefill (insertion order = service
         # order); drained by the executor under the prefill_chunk budget
-        self._prefilling: dict[int, _PrefillJob] = {}
-        self._last_decode_end: float | None = None
-        self._gaps_dropped = 0               # decode_gaps entries trimmed
+        self._prefilling: dict[int, _PrefillJob] = {}  # owned-by: executor-thread
+        self._last_decode_end: float | None = None  # owned-by: executor-thread
+        self._gaps_dropped = 0  # owned-by: executor-thread; decode_gaps entries trimmed
         if paged and getattr(cfg, "sliding_window", 0):
             # the paged attention paths (prefill and decode) are
             # full-causal; serving a sliding-window arch through them
@@ -601,8 +601,10 @@ class ServingEngine:
             self._prefix_cap = 8 * self.pool.capacity
             # host mirrors of the device block tables / lengths: growth and
             # slot retirement are numpy writes, re-injected every step
-            self._tables = np.zeros((batch_slots, self.max_blocks), np.int32)
-            self._lengths = np.zeros((batch_slots,), np.int32)
+            self._tables = np.zeros((batch_slots, self.max_blocks),
+                                    np.int32)   # owned-by: executor-thread
+            self._lengths = np.zeros((batch_slots,),
+                                     np.int32)  # owned-by: executor-thread
             if self.fns.prefill_paged is None:
                 raise ValueError(f"family {cfg.family!r} has paged KV but "
                                  f"no paged prefill (ModelFns.prefill_paged"
@@ -624,10 +626,10 @@ class ServingEngine:
             self._kv_io = OffloadEngine([KVBlockTarget(self.pool.host)])
             self._kv_io.__enter__()           # daemon worker; engine-lifetime
             self.pool.on_demote = self._on_demote
-            self._held_digests: dict[int, bytes] = {}   # held bid -> key
-            self._fetch_refs: dict[int, tuple] = {}     # seq -> commit ref
-            self._staged: dict[int, object] = {}        # early unclaimed done
-            self._claimed: set[int] = set()             # consumed pre-drain
+            self._held_digests: dict[int, bytes] = {}  # owned-by: executor-thread; bid -> key
+            self._fetch_refs: dict[int, tuple] = {}    # owned-by: executor-thread; seq -> ref
+            self._staged: dict[int, object] = {}       # owned-by: executor-thread; early done
+            self._claimed: set[int] = set()            # owned-by: executor-thread; pre-drain
         else:
             self._kv_io = None
         if spec:
@@ -640,7 +642,7 @@ class ServingEngine:
                     cfg, p, t, s, tb, q_start=qs, kv_len=kl, chunk=chunk))
         else:
             self._drafter = None
-        self._spec_on: set = set()           # slots decoding speculatively
+        self._spec_on: set = set()  # owned-by: executor-thread; slots decoding speculatively
         self.scheduler = ContinuousScheduler(batch_slots, pool=self.pool,
                                              preemption=preemption,
                                              spec_rows=self.spec_rows)
@@ -653,9 +655,9 @@ class ServingEngine:
             lambda p, b: self.fns.prefill(cfg, p, b, max_len=max_len,
                                           chunk=chunk))
         self._merge = jax.jit(_merge_slot)
-        self._prefill_shapes: set = set()    # distinct jitted signatures
-        self._state = None                   # batched decode-state pytree
-        self._last: np.ndarray | None = None  # (slots, V) last logits
+        self._prefill_shapes: set = set()  # owned-by: executor-thread; jitted signatures
+        self._state = None                 # owned-by: executor-thread; decode-state pytree
+        self._last: np.ndarray | None = None  # owned-by: executor-thread; (slots, V) logits
         self.totals = ServeStats()           # lifetime counters (monotonic)
         self._thread: threading.Thread | None = None
         self._stop = threading.Event()
@@ -852,6 +854,7 @@ class ServingEngine:
                                        for v in leaves.values())
         return True
 
+    # assumes-lock: KVBlockPool._lock
     def _on_demote(self, ids: list[int]) -> None:
         """Pool demotion hook (runs under the pool lock — must not
         re-enter the pool): an idle index-held block is about to return
@@ -1511,7 +1514,8 @@ class ServingEngine:
         if self._thread is not None:
             return
         self._stop.clear()
-        self._thread = threading.Thread(target=self._service_loop, daemon=True)
+        self._thread = threading.Thread(target=self._service_loop,
+                                        name="serving-executor", daemon=True)
         self._thread.start()
 
     def _service_loop(self) -> None:

@@ -116,11 +116,11 @@ class HostTier(Tier):
         assert capacity >= 1
         self.capacity = capacity
         self._lock = threading.Lock()
-        self._data: dict[bytes, Any] = {}    # insertion order == LRU order
-        self.stores = 0
-        self.loads = 0
-        self.evictions = 0
-        self.misses = 0
+        self._data: dict[bytes, Any] = {}  # guarded-by: self._lock; LRU order
+        self.stores = 0                    # guarded-by: self._lock
+        self.loads = 0                     # guarded-by: self._lock
+        self.evictions = 0                 # guarded-by: self._lock
+        self.misses = 0                    # guarded-by: self._lock
 
     def begin_store(self, key: bytes) -> None:
         """Reserve ``key`` for an in-flight spill (pinned placeholder)."""
@@ -136,8 +136,9 @@ class HostTier(Tier):
             self.stores += 1
             self._evict_over_capacity()
 
+    # assumes-lock: self._lock
     def _evict_over_capacity(self) -> None:
-        # called under the lock; oldest non-pending entries go first
+        # oldest non-pending entries go first
         over = len(self._data) - self.capacity
         if over <= 0:
             return
@@ -227,23 +228,24 @@ class KVBlockPool:
         # (serving_bench's pool micro-bench pins this: per-op cost is
         # flat across pool sizes).
         # LIFO free stack of usable ids (1..num_blocks); 0 is trash.
-        self._free: list[int] = list(range(num_blocks, 0, -1))
-        self._refs: dict[int, int] = {}      # allocated id -> holder count
-        self._gen = [0] * (num_blocks + 1)   # bumped on every allocation
-        self._reserved = 0
-        self.peak_used = 0
+        self._free: list[int] = \
+            list(range(num_blocks, 0, -1))   # guarded-by: self._lock
+        self._refs: dict[int, int] = {}      # guarded-by: self._lock
+        self._gen = [0] * (num_blocks + 1)   # guarded-by: self._lock
+        self._reserved = 0                   # guarded-by: self._lock
+        self._peak_used = 0                  # guarded-by: self._lock
         # tiering (see module docstring): index-held ids, the demotable
         # subset in least-recently-idle order, and the host payload tier
-        self._held: dict[int, None] = {}
-        self._demotable: dict[int, None] = {}  # insertion order == LRU
+        self._held: dict[int, None] = {}     # guarded-by: self._lock
+        self._demotable: dict[int, None] = {}  # guarded-by: self._lock
         self.host: HostTier | None = \
             HostTier(host_blocks) if host_blocks > 0 else None
         # engine hook: spill these ids' rows to the host tier before the
         # pool frees them.  Called under the pool lock — the callback
         # must not call back into the pool.
         self.on_demote: Callable[[list[int]], None] | None = None
-        self.demotions = 0
-        self._avail_epoch = 0
+        self._demotions = 0                  # guarded-by: self._lock
+        self._avail_epoch = 0                # guarded-by: self._lock
 
     # -- sizing ----------------------------------------------------------------
 
@@ -293,13 +295,26 @@ class KVBlockPool:
             return self._reserved
 
     @property
+    def peak_used(self) -> int:
+        """High-water mark of distinct allocated blocks."""
+        with self._lock:
+            return self._peak_used
+
+    @property
     def utilization(self) -> float:
         """Peak allocated blocks as a fraction of capacity."""
-        return self.peak_used / self.num_blocks
+        with self._lock:
+            return self._peak_used / self.num_blocks
 
     def reset_peak(self) -> None:
         with self._lock:
-            self.peak_used = len(self._refs)
+            self._peak_used = len(self._refs)
+
+    @property
+    def demotions(self) -> int:
+        """Lifetime count of index-held blocks demoted under pressure."""
+        with self._lock:
+            return self._demotions
 
     @property
     def demotable_count(self) -> int:
@@ -352,6 +367,7 @@ class KVBlockPool:
             self._reserved += n
             return True
 
+    # assumes-lock: self._lock
     def _demote_locked(self, k: int) -> None:
         """Free the ``k`` least-recently-idle demotable blocks (spilling
         their rows first via ``on_demote``).  Caller holds the lock; the
@@ -372,7 +388,7 @@ class KVBlockPool:
             del self._held[b]
             del self._demotable[b]
             self._free.append(b)
-        self.demotions += len(ids)
+        self._demotions += len(ids)
 
     def unreserve(self, n: int) -> None:
         with self._lock:
@@ -393,7 +409,7 @@ class KVBlockPool:
                 self._refs[b] = 1
                 self._gen[b] += 1
             self._reserved -= n
-            self.peak_used = max(self.peak_used, len(self._refs))
+            self._peak_used = max(self._peak_used, len(self._refs))
             return ids
 
     def share(self, ids: list[int]) -> None:

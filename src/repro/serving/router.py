@@ -149,12 +149,19 @@ class ReplicaRouter:
         self.affinity_queue_cap = affinity_queue_cap
         self.steal_interval_s = steal_interval_s
         self.deadline_s = deadline_s
-        self.stats = RouterStats()
+        # placement counters are bumped on the dispatch thread (_select)
+        # *and* the rebalance thread (_rebalance_once) and windowed by
+        # serve() — unlocked `+=` across those threads drops increments
+        self._stats_lock = threading.Lock()
+        self.stats = RouterStats()           # guarded-by: self._stats_lock
         # fleet prefix index: digest of blocks 0..j -> replica that last
         # computed (or was routed) that prefix.  A *hint*, not truth: a
         # replica may have evicted the blocks (its own index validates
         # against the pool at admission), staleness only costs recompute.
-        self._prefix_owner: dict[bytes, int] = {}
+        # Confined to the dispatch thread (serve -> offload submit ->
+        # _place -> _select/_register); the rebalance thread never reads
+        # it, so it needs no lock — the checker enforces the confinement.
+        self._prefix_owner: dict[bytes, int] = {}  # owned-by: dispatch-thread
         self._prefix_cap = prefix_index_cap
         self._steal_stop = threading.Event()
         self._steal_thread: threading.Thread | None = None
@@ -183,10 +190,12 @@ class ReplicaRouter:
                 # queue depth alone trips the cap: a blocks-starved owner
                 # can back up a deep queue while a decode slot sits free
                 if snap.queued >= self._owner_cap(owner):
-                    self.stats.affinity_fallbacks += 1
+                    with self._stats_lock:
+                        self.stats.affinity_fallbacks += 1
                     break               # owner saturated: place by load
-                self.stats.affinity_hits += 1
-                self.stats.affinity_blocks += j + 1
+                with self._stats_lock:
+                    self.stats.affinity_hits += 1
+                    self.stats.affinity_blocks += j + 1
                 self._register(digests, owner)
                 return owner
         snaps = [e.load_snapshot() for e in self.replicas]
@@ -295,7 +304,8 @@ class ReplicaRouter:
                 moved += took
                 if took:                # thief's free slot is now spoken for
                     break
-        self.stats.steals += moved
+        with self._stats_lock:
+            self.stats.steals += moved
         return moved
 
     def _steal_loop(self) -> None:
@@ -307,6 +317,7 @@ class ReplicaRouter:
             return
         self._steal_stop.clear()
         self._steal_thread = threading.Thread(target=self._steal_loop,
+                                              name="router-rebalance",
                                               daemon=True)
         self._steal_thread.start()
 
@@ -328,7 +339,8 @@ class ReplicaRouter:
         request is DONE."""
         window = window or 2 * sum(e.slots for e in self.replicas)
         base = [e.begin_window() for e in self.replicas]
-        rbase = RouterStats(**vars(self.stats))
+        with self._stats_lock:
+            rbase = RouterStats(**vars(self.stats))
         t0 = time.monotonic()
         for r in requests:
             # arrival = hand-off to the router; clones inherit it, so both
@@ -360,9 +372,10 @@ class ReplicaRouter:
         # copy of a reissue/steal race; the fleet number is *delivered*
         # tokens (winning clones only), so throughput never double-counts
         stats.tokens = delivered
-        stats.router_steals = self.stats.steals - rbase.steals
-        stats.router_affinity_hits = (self.stats.affinity_hits
-                                      - rbase.affinity_hits)
+        with self._stats_lock:
+            stats.router_steals = self.stats.steals - rbase.steals
+            stats.router_affinity_hits = (self.stats.affinity_hits
+                                          - rbase.affinity_hits)
         # derived ratios (kv_pool_util, accept_rate) were recomputed by
         # merge_from itself from the merged peaks/capacities/counters —
         # no caller-side fixup to forget here

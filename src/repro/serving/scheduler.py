@@ -198,24 +198,40 @@ class ContinuousScheduler:
         # verify pass, so worst-case reservations must budget for them —
         # otherwise a verify-time grow could exceed the admission promise
         self.spec_rows = spec_rows
-        self.slots: list[Request | None] = [None] * num_slots
+        self.slots: list[Request | None] = \
+            [None] * num_slots               # guarded-by: self._lock
         # heap of (-priority, slo deadline, arrival seq, request); the seq
         # is unique per scheduler so requests themselves are never compared
-        self._heap: list[tuple[float, float, int, Request]] = []
-        self._seq = 0
-        self._preempted: list[tuple[int, Request]] = []
-        self.preemptions = 0                 # lifetime counter (monotonic)
+        self._heap: list[tuple[float, float, int, Request]] = \
+            []                               # guarded-by: self._lock
+        self._seq = 0                        # guarded-by: self._lock
+        self._preempted: list[tuple[int, Request]] = \
+            []                               # guarded-by: self._lock
+        self._preemptions = 0                # guarded-by: self._lock
         # blocked-head admission cache: (head arrival_seq, capacity
         # version) of the last admit() that found the queue head unfit.
         # While the version is unchanged, re-running the slot scan /
         # reserve / preemption probe is provably the same answer, so
         # admit() returns immediately — the executor no longer re-prices
         # a blocked head every step of a long decode.
-        self._blocked_sig: tuple | None = None
-        self._event_epoch = 0                # slot/queue capacity events
-        self.head_checks_skipped = 0         # lifetime counter (monotonic)
+        self._blocked_sig: tuple | None = None  # guarded-by: self._lock
+        self._event_epoch = 0                # guarded-by: self._lock
+        self._head_checks_skipped = 0        # guarded-by: self._lock
         self._lock = threading.RLock()
-        self._work = threading.Condition(self._lock)
+        self._work = threading.Condition(self._lock)  # alias-of: self._lock
+
+    # -- lifetime counters (monotonic; locked so a router/bench thread can
+    # -- read them mid-flight without tearing against the executor) -----------
+
+    @property
+    def preemptions(self) -> int:
+        with self._lock:
+            return self._preemptions
+
+    @property
+    def head_checks_skipped(self) -> int:
+        with self._lock:
+            return self._head_checks_skipped
 
     # -- producer side ---------------------------------------------------------
 
@@ -230,6 +246,7 @@ class ContinuousScheduler:
             self._event_epoch += 1           # a new head may outrank
             self._work.notify_all()
 
+    # assumes-lock: self._lock
     def _push(self, req: Request) -> None:
         """Queue ``req`` at (priority, SLO deadline, arrival) order.  A
         re-queued preemption victim keeps its original arrival seq, so it
@@ -244,6 +261,7 @@ class ContinuousScheduler:
 
     # -- executor side ---------------------------------------------------------
 
+    # assumes-lock: self._lock
     def _capacity_version(self) -> tuple[int, int]:
         """Changes iff admission capacity may have grown since last read:
         scheduler events (submit / release / steal / notify_capacity) and
@@ -283,7 +301,7 @@ class ContinuousScheduler:
                         (req.arrival_seq, self._capacity_version()):
                     # same head, no capacity-growing event since it last
                     # failed: the full check would fail identically
-                    self.head_checks_skipped += 1
+                    self._head_checks_skipped += 1
                     break
                 slot = next((i for i, r in enumerate(self.slots)
                              if r is None), None)
@@ -318,6 +336,7 @@ class ContinuousScheduler:
                 self._blocked_sig = None     # progress: cache is moot
         return out
 
+    # assumes-lock: self._lock
     def _preempt_for(self, req: Request, need: int) -> bool:
         """Evict lower-priority active decodes until ``req`` has a slot
         and ``need`` blocks could be reserved.  Victim order: lowest
@@ -353,6 +372,7 @@ class ContinuousScheduler:
                 return True
         return self.pool.available_blocks >= need
 
+    # assumes-lock: self._lock
     def _evict(self, slot: int, victim: Request) -> None:
         """Recompute-style preemption of one active decode: free its
         blocks, fold its generated tokens into its prompt (via
@@ -375,7 +395,7 @@ class ContinuousScheduler:
         victim.shared_blocks = 0
         victim.preempted_count += 1
         victim.state = RequestState.QUEUED
-        self.preemptions += 1
+        self._preemptions += 1
         self._preempted.append((slot, victim))
         self._push(victim)
 
@@ -413,6 +433,10 @@ class ContinuousScheduler:
             self._event_epoch += 1  # a slot opened: blocked head may now fit
         if self.pool is not None:
             if req.block_ids:
+                # generation-safe: every release caller immediately
+                # _retire_slot()s the slot (trash-table redirect) before
+                # the next scatter, and the engine's prefix index checks
+                # block_live() before seeding from any (id, gen) entry
                 self.pool.free(req.block_ids)
             if req.blocks_reserved:
                 self.pool.unreserve(req.blocks_reserved)

@@ -1,0 +1,384 @@
+"""Invariant lint pass: each checker flags its violation fixture and
+stays silent on the clean fixture; the baseline round-trips; the repo's
+own tree is clean under the shipped baseline (the tier-1 gate)."""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from repro.analysis import default_repo_root, repo_config, run_all
+from repro.analysis.baseline import (apply_baseline, load_baseline,
+                                     write_baseline)
+from repro.analysis.config import AnalysisConfig
+from repro.analysis.jitpure import check_jit
+from repro.analysis.kernelreg import check_kernels
+from repro.analysis.locks import check_locks
+from repro.analysis.refgen import check_refgen
+from repro.analysis.statscov import check_stats
+
+
+def _tree(root: Path, files: dict[str, str]) -> None:
+    for rel, src in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# -- lock discipline -----------------------------------------------------------
+
+def test_locks_flags_unguarded_write(tmp_path):
+    _tree(tmp_path, {"pkg/pool.py": """\
+        import threading
+
+        class Pool:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._free = []  # guarded-by: self._lock
+
+            def alloc(self):
+                with self._lock:
+                    return self._free.pop()
+
+            def leak(self):
+                return len(self._free)
+        """})
+    cfg = AnalysisConfig(repo_root=tmp_path, lock_files=["pkg/pool.py"])
+    findings = check_locks(cfg)
+    assert any(f.rule == "unguarded-field" and f.scope == "Pool.leak"
+               for f in findings), findings
+    # the guarded access inside `with self._lock` is NOT flagged
+    assert not any(f.scope == "Pool.alloc" for f in findings)
+
+
+def test_locks_assumes_lock_discharges_guard(tmp_path):
+    _tree(tmp_path, {"pkg/pool.py": """\
+        import threading
+
+        class Pool:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._refs = {}  # guarded-by: self._lock
+
+            # assumes-lock: self._lock
+            def _bump(self, bid):
+                self._refs[bid] = self._refs.get(bid, 0) + 1
+        """})
+    cfg = AnalysisConfig(repo_root=tmp_path, lock_files=["pkg/pool.py"])
+    assert check_locks(cfg) == []
+
+
+def test_locks_detects_lock_order_cycle(tmp_path):
+    _tree(tmp_path, {"pkg/ab.py": """\
+        import threading
+
+        class A:
+            def __init__(self, b):
+                self._lock = threading.Lock()
+                self.b = b
+
+            def m(self):
+                with self._lock:
+                    self.b.poke()
+
+            def ping(self):
+                with self._lock:
+                    pass
+
+        class B:
+            def __init__(self, a):
+                self._lock = threading.Lock()
+                self.a = a
+
+            def poke(self):
+                with self._lock:
+                    self.a.ping()
+        """})
+    cfg = AnalysisConfig(
+        repo_root=tmp_path, lock_files=["pkg/ab.py"],
+        attr_types={("A", "b"): "B", ("B", "a"): "A"})
+    findings = check_locks(cfg)
+    cycles = [f for f in findings if f.rule == "lock-order-cycle"]
+    assert cycles, findings
+    assert "A._lock" in cycles[0].scope and "B._lock" in cycles[0].scope
+
+
+def test_locks_thread_hygiene(tmp_path):
+    _tree(tmp_path, {"pkg/w.py": """\
+        import threading
+
+        def spawn():
+            return threading.Thread(target=print)
+
+        def spawn_named():
+            return threading.Thread(target=print, name="w", daemon=True)
+        """})
+    cfg = AnalysisConfig(repo_root=tmp_path, thread_files=["pkg/w.py"],
+                         lock_files=["pkg/w.py"])
+    findings = [f for f in check_locks(cfg) if f.rule == "thread-hygiene"]
+    assert len(findings) == 1, findings
+
+
+def test_locks_rejects_unknown_annotation_key(tmp_path):
+    _tree(tmp_path, {"pkg/p.py": """\
+        import threading
+
+        class P:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._n = 0  # guarded_by: self._lock
+        """})
+    cfg = AnalysisConfig(repo_root=tmp_path, lock_files=["pkg/p.py"])
+    assert "bad-annotation" in _rules(check_locks(cfg))
+
+
+# -- refcount/generation safety ------------------------------------------------
+
+def test_refgen_flags_unproven_free(tmp_path):
+    _tree(tmp_path, {"pkg/e.py": """\
+        class Engine:
+            def bad_drop(self, ids):
+                self.pool.free(ids)
+        """})
+    cfg = AnalysisConfig(repo_root=tmp_path, refgen_files=["pkg/e.py"])
+    findings = check_refgen(cfg)
+    assert _rules(findings) == {"unproven-free"}
+    assert findings[0].scope == "bad_drop@free"
+
+
+def test_refgen_accepts_guard_evidence_and_annotation(tmp_path):
+    _tree(tmp_path, {"pkg/e.py": """\
+        class Engine:
+            def guarded_drop(self, ids):
+                live = [b for b in ids if self.pool.block_live(b)]
+                self.pool.free(live)
+
+            def annotated_drop(self, ids):
+                self.pool.free(ids)  # generation-safe: tables zeroed next
+        """})
+    cfg = AnalysisConfig(repo_root=tmp_path, refgen_files=["pkg/e.py"])
+    assert check_refgen(cfg) == []
+
+
+# -- stats coverage ------------------------------------------------------------
+
+_STATS_SRC = """\
+    from dataclasses import dataclass
+
+    @dataclass
+    class ServeStats:
+        tokens: int = 0
+        {extra_field}
+        rate: float = 0.0
+
+    MERGE_RULES = {{"tokens": "sum", "rate": "derived"{extra_rule}}}
+    _DERIVED = {{"rate": None}}
+    """
+
+
+def test_stats_flags_missing_merge_rule(tmp_path):
+    _tree(tmp_path, {"pkg/s.py": _STATS_SRC.format(
+        extra_field="orphan: int = 0", extra_rule="")})
+    cfg = AnalysisConfig(repo_root=tmp_path, stats_file="pkg/s.py")
+    findings = check_stats(cfg)
+    assert [(f.rule, f.scope) for f in findings] == \
+        [("unmerged-field", "orphan")]
+
+
+def test_stats_flags_stale_rule_and_derived_mismatch(tmp_path):
+    _tree(tmp_path, {"pkg/s.py": """\
+        from dataclasses import dataclass
+
+        @dataclass
+        class ServeStats:
+            tokens: int = 0
+            rate: float = 0.0
+
+        MERGE_RULES = {"tokens": "sum", "rate": "derived", "ghost": "sum"}
+        _DERIVED = {}
+        """})
+    cfg = AnalysisConfig(repo_root=tmp_path, stats_file="pkg/s.py")
+    rules = _rules(check_stats(cfg))
+    assert rules == {"stale-rule", "derived-mismatch"}
+
+
+def test_stats_flags_unknown_counter_mutation(tmp_path):
+    _tree(tmp_path, {
+        "pkg/s.py": _STATS_SRC.format(extra_field="hits: int = 0",
+                                      extra_rule=', "hits": "sum"'),
+        "pkg/m.py": """\
+            def step(self):
+                self.totals.hits += 1
+                self.totals.hitz += 1
+            """})
+    cfg = AnalysisConfig(repo_root=tmp_path, stats_file="pkg/s.py",
+                         stats_mutation_files=["pkg/m.py"])
+    findings = check_stats(cfg)
+    assert [(f.rule, f.scope) for f in findings] == \
+        [("unknown-counter", "totals.hitz")]
+
+
+# -- jit purity ----------------------------------------------------------------
+
+def test_jit_flags_tracer_branch_and_item(tmp_path):
+    _tree(tmp_path, {"pkg/j.py": """\
+        import jax.numpy as jnp
+
+        def probe(x):
+            if jnp.any(jnp.isnan(x)):
+                return x.item()
+            return 0
+
+        # jit-ok: host-side smoke helper
+        def host_probe(x):
+            return bool(jnp.any(x))
+        """})
+    cfg = AnalysisConfig(repo_root=tmp_path, jit_files=["pkg/j.py"])
+    findings = check_jit(cfg)
+    assert _rules(findings) == {"tracer-branch", "tracer-item"}
+    assert all("probe" not in f.scope or "host" not in f.scope
+               for f in findings)
+
+
+def test_jit_flags_unbucketed_shape_key(tmp_path):
+    _tree(tmp_path, {"pkg/eng.py": """\
+        class Eng:
+            def raw(self, prompt):
+                self._prefill_shapes.add((1, len(prompt)))
+
+            def bucketed(self, prompt):
+                n = self._bucket_len(len(prompt))
+                self._prefill_shapes.add((1, n))
+        """})
+    cfg = AnalysisConfig(repo_root=tmp_path, jit_files=["pkg/eng.py"],
+                         shape_cache_file="pkg/eng.py")
+    findings = check_jit(cfg)
+    assert [(f.rule, f.scope) for f in findings] == \
+        [("unbucketed-shape", "raw@shape-cache")]
+
+
+# -- kernel registry -----------------------------------------------------------
+
+def test_kernels_cross_check(tmp_path):
+    _tree(tmp_path, {
+        "k/dispatch.py": "def register_kernel(*a, **kw): pass\n",
+        "k/good/ops.py": """\
+            from repro.kernels.dispatch import register_kernel
+            register_kernel("good_op", None)
+            register_kernel("orphan_op", None)
+            """,
+        "k/rogue/ops.py": 'def register_kernel(*a): pass\n'
+                          'register_kernel("rogue_op")\n',
+        "bench.py": 'COVERAGE = {"good_op": None, "ghost_op": None}\n'})
+    (tmp_path / "k/empty").mkdir()
+    cfg = AnalysisConfig(repo_root=tmp_path, kernels_dir="k",
+                         kernel_bench="bench.py")
+    findings = check_kernels(cfg)
+    got = {(f.rule, f.scope) for f in findings}
+    assert ("no-ops-module", "empty") in got
+    assert ("no-dispatch-import", "rogue") in got
+    assert ("uncovered-kernel", "orphan_op") in got
+    assert ("uncovered-kernel", "rogue_op") in got
+    assert ("stale-coverage", "ghost_op") in got
+
+
+# -- clean fixture + baseline --------------------------------------------------
+
+def test_clean_fixture_is_silent(tmp_path):
+    _tree(tmp_path, {
+        "pkg/pool.py": """\
+            import threading
+
+            class Pool:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._free = []  # guarded-by: self._lock
+
+                def alloc(self):
+                    with self._lock:
+                        return self._free.pop()
+            """,
+        "pkg/s.py": _STATS_SRC.format(extra_field="", extra_rule="")})
+    cfg = AnalysisConfig(repo_root=tmp_path, lock_files=["pkg/pool.py"],
+                         refgen_files=["pkg/pool.py"],
+                         jit_files=["pkg/pool.py"],
+                         thread_files=["pkg/pool.py"],
+                         stats_file="pkg/s.py",
+                         stats_mutation_files=["pkg/pool.py"])
+    assert run_all(cfg) == []
+
+
+def test_baseline_roundtrip_and_staleness(tmp_path):
+    _tree(tmp_path, {"pkg/e.py": """\
+        class Engine:
+            def bad_drop(self, ids):
+                self.pool.free(ids)
+        """})
+    cfg = AnalysisConfig(repo_root=tmp_path, refgen_files=["pkg/e.py"])
+    findings = check_refgen(cfg)
+    write_baseline(tmp_path, findings)
+    baseline = load_baseline(tmp_path)
+    stale = apply_baseline(findings, baseline)
+    assert all(f.suppressed for f in findings) and stale == []
+    # fix the violation: the entry is now stale, and the gate reports it
+    _tree(tmp_path, {"pkg/e.py": """\
+        class Engine:
+            def bad_drop(self, ids):
+                self.pool.free(ids)  # generation-safe: fixed
+        """})
+    findings = check_refgen(cfg)
+    stale = apply_baseline(findings, baseline)
+    assert findings == [] and len(stale) == 1
+
+
+def test_finding_ids_are_line_independent(tmp_path):
+    src = """\
+        class Engine:
+            def bad_drop(self, ids):
+                self.pool.free(ids)
+        """
+    _tree(tmp_path, {"pkg/e.py": src})
+    cfg = AnalysisConfig(repo_root=tmp_path, refgen_files=["pkg/e.py"])
+    fid0 = check_refgen(cfg)[0].fid
+    _tree(tmp_path, {"pkg/e.py": "# moved down\n\n" + textwrap.dedent(src)})
+    assert check_refgen(cfg)[0].fid == fid0
+
+
+# -- the repo itself -----------------------------------------------------------
+
+def test_repo_tree_is_clean_under_baseline():
+    root = default_repo_root()
+    findings = run_all(repo_config(root))
+    stale = apply_baseline(findings, load_baseline(root))
+    open_findings = [f for f in findings if not f.suppressed]
+    assert open_findings == [], "\n".join(f.render() for f in open_findings)
+    assert stale == [], f"stale baseline entries: {stale}"
+
+
+def test_cli_fails_build_on_injected_violation(tmp_path, monkeypatch):
+    import repro.analysis.__main__ as cli
+    _tree(tmp_path, {"pkg/e.py": """\
+        class Engine:
+            def bad_drop(self, ids):
+                self.pool.free(ids)
+        """})
+    fixture_cfg = AnalysisConfig(repo_root=tmp_path,
+                                 refgen_files=["pkg/e.py"])
+    monkeypatch.setattr(cli, "repo_config", lambda root: fixture_cfg)
+    assert cli.main(["--repo-root", str(tmp_path)]) == 1
+
+
+def test_cli_exit_codes(tmp_path):
+    root = default_repo_root()
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--repo-root", str(root),
+         "--json", str(tmp_path / "out.json")],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(root / "src"), "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    artifact = json.loads((tmp_path / "out.json").read_text())
+    assert "findings" in artifact and artifact["open"] == 0

@@ -1,0 +1,61 @@
+"""Worker-thread hygiene: every worker the stack spawns is a *named
+daemon* thread (so hangs are attributable in a dump and a wedged worker
+cannot block interpreter exit), and orderly shutdown leaves no worker
+behind.  The static half of this policy is enforced by
+``repro.analysis`` (locks/thread-hygiene); this is the runtime half."""
+import threading
+
+import jax
+import numpy as np
+
+from repro.configs import registry as R
+from repro.core.offload import OffloadEngine, SimTarget
+from repro.models.registry import fns_for
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.sampler import greedy
+
+
+def _workers(before: set[int]) -> list[threading.Thread]:
+    return [t for t in threading.enumerate() if t.ident not in before]
+
+
+def test_offload_workers_named_daemon_and_reaped():
+    before = {t.ident for t in threading.enumerate()}
+    with OffloadEngine([SimTarget(f"t{i}", compute_s=0.001)
+                        for i in range(2)]) as eng:
+        eng.run(list(range(4)))
+        spawned = _workers(before)
+        assert spawned, "expected live offload workers"
+        for t in spawned:
+            assert t.daemon, f"offload worker {t.name!r} is non-daemon"
+            assert t.name.startswith("offload-"), t.name
+    for t in spawned:
+        t.join(timeout=5.0)
+    assert not [t for t in _workers(before) if t.is_alive()]
+
+
+def test_engine_executor_named_daemon_and_reaped():
+    cfg = R.smoke("qwen2.5-3b")
+    params = fns_for(cfg).init(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, max_len=16, batch_slots=2)
+    before = {t.ident for t in threading.enumerate()}
+    eng.start()
+    try:
+        spawned = _workers(before)
+        assert [t.name for t in spawned] == ["serving-executor"]
+        assert all(t.daemon for t in spawned)
+        done = threading.Event()
+        prompt = np.arange(4, dtype=np.int32) % cfg.vocab_size
+        eng.submit(Request(0, prompt, max_new_tokens=2, sampler=greedy()),
+                   on_finish=lambda r: done.set())
+        assert done.wait(timeout=60.0)
+    finally:
+        eng.stop()
+    leftovers = [t for t in _workers(before) if t.is_alive()]
+    assert not leftovers, [t.name for t in leftovers]
+    # no worker anywhere in the process may be an unnamed non-daemon:
+    # Thread-N names mean an unattributable hang in a thread dump
+    for t in threading.enumerate():
+        if t is threading.main_thread():
+            continue
+        assert t.daemon or not t.name.startswith("Thread-"), t.name
