@@ -75,6 +75,13 @@ are comparable across PRs:
      (spills/fetches asserted > 0) instead of re-running the long prefill
      per request.  Plus `pool_microbench`: KVBlockPool hot-path block-ops/s
      across pool sizes spanning 64x (O(1)-per-block audit evidence).
+ 13. `chaos` — fault-tolerance under a deterministic FaultPlan: one of 2
+     tiered replicas has its executor killed mid-serve, a decode commit is
+     poisoned on the survivor, and KV fetch transfers are dropped.  The
+     recovery contract is *asserted*: every request completes, retried
+     requests regenerate bit-identically on the survivor (a retry restarts
+     from the bare prompt), the dead replica is quarantined, and both
+     block pools drain leak-free.
 
 Wall-clock A/Bs run median-of-`--repeats` (default 3) on a warm engine
 via one shared `_median_of` harness (this single-core host's clock
@@ -84,10 +91,12 @@ occupancy, prefill jit compiles, prefill tokens computed vs total,
 decode-stall p99, preemptions, prefix-shared table entries, router
 affinity hits / steals, SLO miss rate, and (paged) peak KV-pool blocks
 and utilization plus the tiering counters (spills, fetches, host prefix
-hits, spill bytes, hit rate).  The headline numbers are also written to
-repo-root `BENCH_{5,6,7}.json` trajectory artifacts.  `--smoke` runs a
-tiny 2-replica affinity + steal + spec + tiered-churn subset in seconds
-for CI (JSON artifact uploaded by the tier-1 workflow).
+hits, spill bytes, hit rate), plus the fault-tolerance counters
+(requests failed/retried, replica failures, shed rejections, faults
+injected).  The headline numbers are also written to repo-root
+`BENCH_{5,6,7,9}.json` trajectory artifacts.  `--smoke` runs a tiny
+2-replica affinity + steal + spec + tiered-churn + chaos subset in
+seconds for CI (JSON artifact uploaded by the tier-1 workflow).
 """
 from __future__ import annotations
 
@@ -104,9 +113,12 @@ from repro.configs import registry as arch_registry
 from repro.core.power import tpu_serving_report
 from repro.models.registry import fns_for
 from repro.serving.engine import Request, ServeStats, ServingEngine
+from repro.serving.faults import FaultPlan, FaultSpec
 from repro.serving.kv_pool import KVBlockPool
-from repro.serving.router import MultiReplicaEngine, ReplicaRouter
+from repro.serving.router import (MultiReplicaEngine, ReplicaHealth,
+                                  ReplicaRouter)
 from repro.serving.sampler import greedy
+from repro.serving.scheduler import RequestState
 
 from benchmarks.common import save_artifact
 
@@ -524,6 +536,64 @@ def _run_tiered_longctx(cfg, params, *, tiered: bool, n: int = 4,
         "completed": completed}
 
 
+def _run_chaos(cfg, params, *, n: int = 6, new_tokens: int = 4) -> dict:
+    """Fault-tolerance chaos scenario: 2 tiered replicas serve a
+    shared-prefix workload while one deterministic :class:`FaultPlan`
+    kills replica0's executor mid-stream, poisons one decode commit on
+    the survivor, and drops KV fetch transfers.  The router quarantines
+    the dead replica and reissues its queued + in-flight requests to the
+    survivor; a retried request restarts from its bare prompt, so greedy
+    regeneration is *bit-identical* to an unfaulted single-replica
+    reference.  The recovery properties are **asserted**, not just
+    reported — every request completes, fleet-merged ``requests_retried``
+    and ``replica_failures`` are nonzero, and after draining in-flight
+    tier IO both pools are leak-free (the tentpole invariant: any fault
+    sequence leaves zero leaked blocks)."""
+    block, prefix_blocks, tail = 8, 2, 8
+    kw = dict(max_len=prefix_blocks * block + tail + new_tokens + 1,
+              batch_slots=2, paged=True, block_size=block,
+              pool_blocks=10, host_blocks=32)
+    mk_reqs = lambda: _shared_prefix_requests(  # noqa: E731
+        cfg, n=n, prefix_blocks=prefix_blocks, block=block, seed=61,
+        new_tokens=new_tokens)
+    ref = mk_reqs()
+    ServingEngine(cfg, params, name="ref", **kw).serve(ref)
+    plan = FaultPlan([
+        FaultSpec("replica.executor", "raise", after=2, replica="replica0"),
+        FaultSpec("engine.decode", "raise", after=6, count=1,
+                  replica="replica1"),
+        FaultSpec("kv.fetch", "drop", count=2),
+    ])
+    replicas = [ServingEngine(cfg, params, name=f"replica{i}",
+                              fault_plan=plan, **kw) for i in range(2)]
+    router = ReplicaRouter(replicas, affinity=False, steal=True,
+                           steal_interval_s=0.001, max_retries=2)
+    reqs = mk_reqs()
+    stats = router.serve(reqs)
+    router.stop()
+    assert all(r.state is RequestState.DONE for r in reqs), \
+        [(r.rid, r.state, r.error) for r in reqs]
+    assert [r.output for r in reqs] == [r.output for r in ref], \
+        "survivor outputs diverged from the unfaulted reference"
+    assert stats.requests_failed == 0, "a request ended FAILED"
+    assert stats.requests_retried >= 1, "the replica kill forced no retry"
+    assert stats.replica_failures >= 1, "the dead replica went unnoticed"
+    assert router.health()[0] is ReplicaHealth.DEAD, \
+        "the crashed replica was not quarantined"
+    leaks = {}
+    for e in replicas:
+        e.drain_tier_io()
+        leaks[e.name] = e.pool.leak_report()
+        e.pool.assert_leak_free()
+    out = {"chaos": _summary(stats),
+           "chaos_faults_fired": plan.fired,
+           "chaos_replica_health": [h.value for h in router.health()],
+           "chaos_outputs_match_reference": True,
+           "chaos_all_requests_completed": True,
+           "chaos_leak_report": leaks}
+    return out
+
+
 def _pool_microbench(sizes=(1 << 10, 1 << 14, 1 << 16), batch: int = 8,
                      cycles: int = 400) -> dict:
     """KVBlockPool hot-path audit evidence: time the full
@@ -584,6 +654,11 @@ def _summary(stats: ServeStats) -> dict:
         "spill_bytes": stats.spill_bytes,
         "kv_hit_rate": (round(stats.kv_hit_rate, 3)
                         if stats.kv_hit_rate is not None else None),
+        "requests_failed": stats.requests_failed,
+        "requests_retried": stats.requests_retried,
+        "replica_failures": stats.replica_failures,
+        "shed_rejections": stats.shed_rejections,
+        "faults_injected": stats.faults_injected,
     }
 
 
@@ -902,6 +977,17 @@ def run(verbose: bool = True, repeats: int = 3) -> dict:
               f"{r['prefill_tokens_computed']} recomputed, outputs match: "
               f"{out['longctx_outputs_match']}")
 
+    # -- scenario 13: chaos — replica kill + poison decode + KV-fetch drop -
+    out.update(_run_chaos(cfg, params))
+    if verbose:
+        c = out["chaos"]
+        print(f"chaos: {c['requests']} requests completed through "
+              f"{out['chaos_faults_fired']} injected faults "
+              f"({c['requests_retried']} retried, "
+              f"{c['replica_failures']} replica failures, health "
+              f"{out['chaos_replica_health']}), outputs match reference: "
+              f"{out['chaos_outputs_match_reference']}, leak-free pools")
+
     # -- KV pool hot-path micro-bench --------------------------------------
     out["pool_microbench"] = _pool_microbench()
     if verbose:
@@ -911,6 +997,7 @@ def run(verbose: bool = True, repeats: int = 3) -> dict:
     _save_bench5(out)
     _save_bench6(out)
     _save_bench7(out)
+    _save_bench9(out)
     return out
 
 
@@ -999,6 +1086,18 @@ def run_smoke(verbose: bool = True) -> dict:
         "tiering must cut prefill compute "
         f"({out['tiered_churn']['prefill_tokens_computed']} vs "
         f"{out['tiered_churn_recompute']['prefill_tokens_computed']})")
+    # fault-tolerance chaos smoke: kill 1 of 2 replicas mid-serve, poison a
+    # decode on the survivor, drop KV fetches — completion, bit-identical
+    # survivor outputs, quarantine, and leak-free pools are asserted inside
+    out.update(_run_chaos(cfg, params))
+    if verbose:
+        c = out["chaos"]
+        print(f"smoke chaos: {c['requests']} requests completed through "
+              f"{out['chaos_faults_fired']} injected faults "
+              f"({c['requests_retried']} retried, "
+              f"{c['replica_failures']} replica failures, health "
+              f"{out['chaos_replica_health']})")
+
     out["pool_microbench"] = _pool_microbench(sizes=(1 << 10, 1 << 14),
                                               cycles=100)
     if verbose:
@@ -1116,6 +1215,38 @@ def _save_bench7(out: dict) -> str:
                   f"untiered recompute baseline and prefill compute "
                   f"asserted strictly lower — token counts deterministic, "
                   f"wall clock reported not asserted (1-core host)",
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def _save_bench9(out: dict) -> str:
+    """Repo-root trajectory artifact with this PR's headline numbers."""
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_9.json")
+    c = out["chaos"]
+    payload = {
+        "pr": 9,
+        "title": "fault-tolerant serving: deterministic fault injection, "
+                 "poison isolation, replica quarantine, leak-free retry",
+        "chaos_requests_completed": c["requests"],
+        "chaos_requests_failed": c["requests_failed"],
+        "chaos_requests_retried": c["requests_retried"],
+        "chaos_replica_failures": c["replica_failures"],
+        "chaos_faults_fired": out["chaos_faults_fired"],
+        "chaos_replica_health": out["chaos_replica_health"],
+        "chaos_outputs_match_reference":
+            out["chaos_outputs_match_reference"],
+        "chaos_leak_report": out["chaos_leak_report"],
+        "method": "2 tiered replicas under a deterministic FaultPlan "
+                  "(replica0 executor killed mid-serve, one decode commit "
+                  "poisoned on the survivor, KV fetch transfers dropped); "
+                  "every request must complete, retried requests restart "
+                  "from the bare prompt so greedy outputs are asserted "
+                  "bit-identical to an unfaulted single-replica "
+                  "reference, the dead replica is asserted quarantined, "
+                  "and both block pools are asserted leak-free after "
+                  "draining in-flight tier IO",
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)

@@ -31,9 +31,18 @@ tier over the split-phase offload protocol and are restored — not
 recomputed — when a later request (or the victim's resume) needs them;
 `--kv-pool-blocks` shrinks the device pool so the tier actually engages.
 
+`--inject-faults PLAN` runs the same workload under deterministic chaos
+(`site[:action[:after[:count]]]` specs or `seed=<int>`): a killed replica
+is quarantined and its requests retried on survivors (`--max-retries`),
+restarting from the bare prompt so greedy outputs are unchanged;
+`--deadline-s` cancels any request that overstays with a typed
+DeadlineExceeded and reclaims its KV blocks.
+
   PYTHONPATH=src python examples/serve_lm.py [--replicas 2] [--no-affinity]
       [--no-steal] [--draft-model qwen2.5-3b] [--spec-k 3] [--no-spec]
       [--host-blocks 32 --kv-pool-blocks 8]
+      [--inject-faults replica.executor:raise:4 --max-retries 2]
+      [--deadline-s 30]
 """
 import argparse
 
@@ -44,6 +53,7 @@ from repro.configs import registry as arch_registry
 from repro.core.power import tpu_serving_report
 from repro.models.registry import fns_for
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.faults import FaultPlan
 from repro.serving.router import ReplicaRouter
 from repro.serving.sampler import greedy, temperature
 
@@ -78,6 +88,16 @@ def main():
                     help="prefill prompts in C-token chunks interleaved "
                          "with decode steps (C must be a multiple of the "
                          "16-token block size)")
+    ap.add_argument("--inject-faults", default=None, metavar="PLAN",
+                    help="deterministic chaos: comma-separated "
+                         "site[:action[:after[:count]]] fault specs or "
+                         "seed=<int> (e.g. replica.executor:raise:4)")
+    ap.add_argument("--max-retries", type=int, default=2, metavar="N",
+                    help="multi-replica only: reissue a failed request to "
+                         "surviving replicas up to N times before FAILED")
+    ap.add_argument("--deadline-s", type=float, default=None, metavar="S",
+                    help="cancel any request still unfinished after S "
+                         "seconds (typed DeadlineExceeded, KV reclaimed)")
     args = ap.parse_args()
 
     cfg = arch_registry.smoke(args.arch)
@@ -102,19 +122,25 @@ def main():
                                                                seed=i),
                     # interactive tier: jumps the queue, 2s TTFT target
                     priority=1 if i % 3 == 0 else 0,
-                    slo_ttft_s=2.0 if i % 3 == 0 else None)
+                    slo_ttft_s=2.0 if i % 3 == 0 else None,
+                    deadline_s=args.deadline_s)
             for i in range(args.requests)]
 
+    plan = (FaultPlan.parse(args.inject_faults)
+            if args.inject_faults else None)
     replicas = [ServingEngine(cfg, params, max_len=24, batch_slots=4,
                               pool_blocks=args.kv_pool_blocks,
                               host_blocks=args.host_blocks,
-                              prefill_chunk=args.prefill_chunk, **spec_kw)
-                for _ in range(args.replicas)]
+                              prefill_chunk=args.prefill_chunk,
+                              name=f"replica{i}", fault_plan=plan,
+                              **spec_kw)
+                for i in range(args.replicas)]
     if args.replicas == 1:
         stats = replicas[0].serve(reqs)
     else:
         stats = ReplicaRouter(replicas, affinity=not args.no_affinity,
-                              steal=not args.no_steal).serve(reqs)
+                              steal=not args.no_steal,
+                              max_retries=args.max_retries).serve(reqs)
     print(f"{stats.requests} requests -> {stats.tokens} tokens in "
           f"{stats.wall_s:.2f}s  ({stats.tokens_per_s:.1f} tok/s, "
           f"slot occupancy {stats.slot_occupancy:.2f})")
@@ -133,10 +159,15 @@ def main():
         print(f"slo miss rate {stats.slo_miss_rate:.2f}  "
               f"preemptions {stats.preemptions}  "
               f"kv_blocks_peak {stats.kv_blocks_peak}")
+    if stats.faults_injected or stats.requests_failed or stats.requests_retried:
+        print(f"faults: injected={stats.faults_injected}  "
+              f"failed={stats.requests_failed}  "
+              f"retried={stats.requests_retried}  "
+              f"replica_failures={stats.replica_failures}")
     print(tpu_serving_report(stats.tokens_per_s, chips=args.replicas).row())
     for r in reqs[:3]:
-        print(f"  req {r.rid} [{r.state.value}]: {r.output}  "
-              f"ttft={r.ttft_s:.2f}s")
+        ttft = f"{r.ttft_s:.2f}s" if r.ttft_s is not None else "n/a"
+        print(f"  req {r.rid} [{r.state.value}]: {r.output}  ttft={ttft}")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,7 @@ from pathlib import Path
 from .baseline import apply_baseline, load_baseline, write_baseline
 from .config import AnalysisConfig, repo_config
 from .core import Finding
+from .faultok import check_faultok
 from .jitpure import check_jit
 from .kernelreg import check_kernels
 from .locks import check_locks
@@ -27,6 +28,7 @@ CHECKERS = (
     ("stats", check_stats),
     ("jit", check_jit),
     ("kernels", check_kernels),
+    ("faultok", check_faultok),
 )
 
 

@@ -39,6 +39,11 @@ class AnalysisConfig:
     # -- refcount/generation safety --------------------------------------------
     refgen_files: list[str] = field(default_factory=list)
 
+    # -- fault routing ---------------------------------------------------------
+    # files where a broad except handler may not silently swallow
+    # (see .faultok): the serving/offload fault paths
+    fault_files: list[str] = field(default_factory=list)
+
     # -- stats coverage --------------------------------------------------------
     stats_file: str = ""            # defines ServeStats/MERGE_RULES/_DERIVED
     stats_mutation_files: list[str] = field(default_factory=list)
@@ -89,10 +94,15 @@ def repo_config(repo_root: Path) -> AnalysisConfig:
             # ServingEngine state is confined to the executor thread;
             # these methods run on router / traffic / control threads
             "ServingEngine": {"submit", "_check_fits", "load_snapshot",
-                              "load", "start", "stop"},
-            # the rebalance loop runs on the steal thread; dispatch-thread
-            # state (the fleet prefix index) must stay off it
-            "ReplicaRouter": {"_rebalance_once", "_steal_loop"},
+                              "load", "start", "stop", "failure",
+                              "_raise_failure_once", "_spill_done",
+                              "_kv_fault_hook"},
+            # the rebalance loop runs on the steal thread, and failure
+            # routing runs on whichever replica thread terminated the
+            # request; dispatch-thread state (the fleet prefix index)
+            # must stay off both
+            "ReplicaRouter": {"_rebalance_once", "_steal_loop",
+                              "_heartbeat", "_on_request_failed"},
         },
         thread_files=[
             f"{serving}/engine.py",
@@ -103,6 +113,14 @@ def repo_config(repo_root: Path) -> AnalysisConfig:
             f"{serving}/scheduler.py",
             f"{serving}/engine.py",
             f"{serving}/router.py",
+        ],
+        fault_files=[
+            f"{serving}/scheduler.py",
+            f"{serving}/kv_pool.py",
+            f"{serving}/engine.py",
+            f"{serving}/router.py",
+            f"{serving}/faults.py",
+            "src/repro/core/offload.py",
         ],
         stats_file=f"{serving}/engine.py",
         stats_mutation_files=[

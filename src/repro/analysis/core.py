@@ -45,6 +45,7 @@ ANNOTATION_KEYS = (
     "generation-safe",  # call site: free/realloc consumer safety argument
     "shape-static",     # call site: compile-cache key is bounded by design
     "jit-ok",           # statement: host-side code, never traced
+    "fault-ok",         # except handler: why swallowing is correct
 )
 
 

@@ -1,0 +1,104 @@
+"""Silent-swallow checker (the PR-9 fault-tolerance discipline).
+
+The fault-tolerance layer's whole contract is that failures are *routed*
+— to a request's FAILED terminal, to the router's retry path, to the
+crash capture that stop() re-raises — never dropped on the floor.  A
+``except Exception: pass`` (or a log-and-drop) in the serving/offload
+stack silently converts a routed failure into a hang or a leak, which is
+exactly the bug class PR 9 exists to kill.
+
+This checker flags every *broad* exception handler (bare ``except``,
+``except Exception``, ``except BaseException``, or a tuple containing
+one of those) in the configured files whose body does nothing but
+swallow — only ``pass`` / ``continue`` / ``break`` statements and
+log-like calls (``print``, ``logging`` methods) — unless the handler
+carries an explicit ``# fault-ok: <reason>`` annotation on the
+``except`` line (or the line above) recording why dropping is correct
+there.  Handlers that re-raise, transform, or route the exception into
+real code are not flagged: the rule targets silence, not breadth.
+"""
+from __future__ import annotations
+
+import ast
+
+from .config import AnalysisConfig
+from .core import Finding, attr_chain, load_module
+
+_BROAD = ("Exception", "BaseException")
+# call names whose invocation still counts as "dropping" the failure:
+# telling a human is not routing it through the recovery machinery
+_LOG_CALLS = ("print", "log", "debug", "info", "warning", "warn",
+              "error", "exception")
+
+
+def _is_broad(handler: ast.ExceptHandler) -> bool:
+    t = handler.type
+    if t is None:                      # bare except
+        return True
+    types = t.elts if isinstance(t, ast.Tuple) else [t]
+    for sub in types:
+        chain = attr_chain(sub)
+        if chain and chain[-1] in _BROAD:
+            return True
+    return False
+
+
+def _is_log_call(node: ast.AST) -> bool:
+    if not (isinstance(node, ast.Expr) and isinstance(node.value, ast.Call)):
+        return False
+    chain = attr_chain(node.value.func)
+    return bool(chain) and chain[-1] in _LOG_CALLS
+
+
+def _swallows(handler: ast.ExceptHandler) -> bool:
+    """True when the handler body only drops: pass/continue/break,
+    docstrings, and log-like calls.  Any other statement is treated as
+    routing the failure somewhere real."""
+    for stmt in handler.body:
+        if isinstance(stmt, (ast.Pass, ast.Continue, ast.Break)):
+            continue
+        if isinstance(stmt, ast.Expr) and \
+                isinstance(stmt.value, ast.Constant):
+            continue                   # stray docstring/ellipsis
+        if _is_log_call(stmt):
+            continue
+        return False
+    return True
+
+
+def _enclosing_name(tree: ast.Module, line: int) -> str:
+    best, size = "<module>", None
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            end = node.end_lineno or node.lineno
+            if node.lineno <= line <= end and \
+                    (size is None or end - node.lineno < size):
+                best, size = node.name, end - node.lineno
+    return best
+
+
+def check_faultok(cfg: AnalysisConfig) -> list[Finding]:
+    findings: list[Finding] = []
+    for rel in cfg.fault_files:
+        path = cfg.resolve(rel)
+        if not path.exists():
+            continue
+        mod = load_module(path, cfg.repo_root)
+        for handler in ast.walk(mod.tree):
+            if not isinstance(handler, ast.ExceptHandler):
+                continue
+            if not _is_broad(handler) or not _swallows(handler):
+                continue
+            if "fault-ok" in mod.annotations_at(handler.lineno) or \
+                    "fault-ok" in mod.annotations_at(handler.lineno - 1):
+                continue
+            scope = _enclosing_name(mod.tree, handler.lineno)
+            findings.append(Finding(
+                checker="faultok", path=mod.rel, line=handler.lineno,
+                rule="silent-swallow", scope=f"{scope}@{handler.lineno}",
+                message="broad exception handler silently drops the "
+                        "failure (body is only pass/continue/log); route "
+                        "it through the fault path or annotate the line "
+                        "with '# fault-ok: <reason>'"))
+    return findings

@@ -49,6 +49,19 @@ import numpy as np
 
 
 @dataclass
+class WorkError:
+    """Terminal error result: every attempt at the item raised.
+
+    Committed through the normal :meth:`WorkItem.complete` path so
+    collectors (``run``/``run_unordered``/``drain``) terminate instead of
+    hanging on an item nothing will ever finish; consumers distinguish it
+    with ``isinstance(item.result, WorkError)``.
+    """
+    error: BaseException
+    target_name: str = ""
+
+
+@dataclass
 class WorkItem:
     seq: int
     payload: Any
@@ -58,10 +71,15 @@ class WorkItem:
     result: Any = None
     target_name: str = ""
     reissued: bool = False
+    failures: int = 0           # raising attempts (retries ride on this)
     done: threading.Event = field(default_factory=threading.Event)
     # async completion hook (set by OffloadEngine.submit); fired exactly once,
     # by whichever target completes the item first (reissue-safe).
     on_done: Callable[["WorkItem"], None] | None = None
+    # failure hook: (item, exc, target_name) -> True if the failure was
+    # *handled* (e.g. the router reissued the item on a survivor); False
+    # lets fail() commit a WorkError so collectors still terminate.
+    on_fail: Callable[["WorkItem", BaseException, str], bool] | None = None
     _lock: threading.Lock = field(default_factory=threading.Lock)
 
     def complete(self, result: Any, target_name: str) -> bool:
@@ -77,12 +95,36 @@ class WorkItem:
             self.on_done(self)
         return True
 
+    def fail(self, exc: BaseException, target_name: str) -> bool:
+        """Route one raising attempt: give ``on_fail`` a chance to handle
+        it (retry elsewhere); otherwise commit a :class:`WorkError` result
+        so whoever is collecting this item unblocks with a typed failure
+        instead of waiting forever.  Returns True if the item reached a
+        terminal state here."""
+        with self._lock:
+            if self.done.is_set():
+                return False
+            self.failures += 1
+        if self.on_fail is not None:
+            try:
+                if self.on_fail(self, exc, target_name):
+                    return False          # handled: item lives on elsewhere
+            except Exception:  # fault-ok: a broken failure handler must not kill the worker; fall through to the terminal WorkError commit
+                pass
+        return self.complete(WorkError(error=exc, target_name=target_name),
+                             target_name)
+
 
 class Target:
     """A co-processor endpoint (paper's abstract Target)."""
 
     name: str = "target"
     tdp_watts: float = 1.0
+    # fault-injection probe (``target.compute`` site): called with the
+    # item just before execute; returning True *drops* the item (completes
+    # with None — a silently-lost result), raising routes through the
+    # normal failure path, and a delay action sleeps inside the hook.
+    fault_hook: Callable[[WorkItem], bool] | None = None
 
     def transfer(self, payload: Any) -> Any:
         """Host->device staging (USB transfer analogue)."""
@@ -130,8 +172,15 @@ class Target:
             try:
                 staged = self.transfer(item.payload)
                 item.started_at = time.monotonic()
+                if self.fault_hook is not None and self.fault_hook(item):
+                    item.complete(None, self.name)   # injected drop
+                    continue
                 out = self.execute(staged)
                 item.complete(out, self.name)
+            except Exception as e:  # noqa: BLE001 — routed, not swallowed:
+                # a raising transfer/execute used to kill this worker and
+                # hang the item's collector; fail() keeps both alive
+                item.fail(e, self.name)
             finally:
                 self.busy = False
 

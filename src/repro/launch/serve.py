@@ -22,6 +22,12 @@ Example:
   # verifies them in one batched pass — greedy outputs stay bit-identical:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
       --draft-model qwen2.5-3b --spec-k 3
+  # chaos run: kill one of two replicas mid-serve; its requests retry on
+  # the survivor (bit-identical greedy regeneration), with per-request
+  # deadlines cancelling anything that overstays:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
+      --replicas 2 --inject-faults replica.executor:raise:4 \
+      --max-retries 2 --deadline-s 30
 """
 from __future__ import annotations
 
@@ -34,6 +40,7 @@ from repro.configs import registry as arch_registry
 from repro.core.power import tpu_serving_report
 from repro.models.registry import fns_for
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.faults import FaultPlan
 from repro.serving.router import ReplicaRouter
 from repro.serving.sampler import greedy, temperature
 
@@ -119,6 +126,26 @@ def main() -> int:
     ap.add_argument("--no-spec", action="store_true",
                     help="ignore --draft-model: run vanilla decode (the "
                          "A/B baseline for speculative decoding)")
+    ap.add_argument("--deadline-s", type=float, default=None, metavar="S",
+                    help="per-request completion deadline: a request "
+                         "still queued or mid-decode after S seconds is "
+                         "cancelled with a typed DeadlineExceeded and its "
+                         "KV blocks reclaimed")
+    ap.add_argument("--max-retries", type=int, default=2, metavar="N",
+                    help="multi-replica only: reissue a request that "
+                         "failed on one replica (poison fault, replica "
+                         "crash) to a surviving replica up to N times "
+                         "before marking it FAILED; retries restart from "
+                         "the bare prompt, so greedy outputs stay "
+                         "bit-identical")
+    ap.add_argument("--inject-faults", default=None, metavar="PLAN",
+                    help="deterministic fault injection for chaos runs: "
+                         "comma-separated site[:action[:after[:count]]] "
+                         "specs (sites: target.compute engine.prefill "
+                         "engine.decode kv.spill kv.fetch "
+                         "replica.executor; actions: raise drop delay) or "
+                         "seed=<int> for a random seeded plan — e.g. "
+                         "'replica.executor:raise:4,kv.fetch:drop'")
     ap.add_argument("--mode", choices=("continuous", "wave"),
                     default="continuous",
                     help="wave = legacy lock-step decode (single replica "
@@ -145,6 +172,11 @@ def main() -> int:
             r.priority = 1
             if args.slo_ttft_ms is not None:
                 r.slo_ttft_s = args.slo_ttft_ms / 1e3
+    if args.deadline_s is not None:
+        for r in reqs:
+            r.deadline_s = args.deadline_s
+    fault_plan = (FaultPlan.parse(args.inject_faults)
+                  if args.inject_faults else None)
 
     kw = dict(max_len=max_len, batch_slots=args.slots,
               paged=False if args.contiguous_kv else None,
@@ -153,7 +185,8 @@ def main() -> int:
               prefix_sharing=not args.no_prefix_sharing,
               prefill_chunk=args.prefill_chunk,
               seeded_prefill=not args.no_seeded_prefill,
-              host_blocks=0 if args.no_kv_tiering else args.host_blocks)
+              host_blocks=0 if args.no_kv_tiering else args.host_blocks,
+              fault_plan=fault_plan)
     if args.draft_model and not args.no_spec:
         if args.contiguous_kv:
             ap.error("--draft-model needs the paged KV pool; "
@@ -168,10 +201,11 @@ def main() -> int:
         kw.update(draft_cfg=draft_cfg, draft_params=draft_params,
                   spec_k=args.spec_k)
     if args.replicas > 1:
-        replicas = [ServingEngine(cfg, params, **kw)
-                    for _ in range(args.replicas)]
+        replicas = [ServingEngine(cfg, params, name=f"replica{i}", **kw)
+                    for i in range(args.replicas)]
         router = ReplicaRouter(replicas, affinity=not args.no_affinity,
-                               steal=not args.no_steal)
+                               steal=not args.no_steal,
+                               max_retries=args.max_retries)
         stats = router.serve(reqs)
     else:
         eng = ServingEngine(cfg, params, **kw)
@@ -210,6 +244,14 @@ def main() -> int:
               f"fetches={stats.kv_fetches}  "
               f"host_hits={stats.prefix_hits_host}  "
               f"spill_bytes={stats.spill_bytes}  kv_hit_rate={hit}")
+    if (stats.requests_failed or stats.requests_retried
+            or stats.replica_failures or stats.shed_rejections
+            or stats.faults_injected):
+        print(f"faults: injected={stats.faults_injected}  "
+              f"failed={stats.requests_failed}  "
+              f"retried={stats.requests_retried}  "
+              f"replica_failures={stats.replica_failures}  "
+              f"shed={stats.shed_rejections}")
     if stats.preemptions or stats.prefix_shared_blocks or stats.slo_tracked:
         miss = (f"{stats.slo_miss_rate:.2f}"
                 if stats.slo_miss_rate is not None else "n/a")

@@ -59,7 +59,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.offload import WorkError
 from repro.models.registry import fns_for
+from repro.serving.faults import (DeadlineExceeded, ExecutorCrash,
+                                  FaultError, FaultPlan, ShedError)
 from repro.serving.kv_pool import CapacityError, KVBlockPool
 from repro.serving.scheduler import (ContinuousScheduler, LoadSnapshot,
                                      Request, RequestState)
@@ -108,6 +111,11 @@ MERGE_RULES: dict[str, str] = {
     "kv_blocks_peak": "opt_sum",
     "kv_pool_capacity": "opt_sum",
     "kv_pool_util": "derived",      # merged peak / combined capacity
+    "requests_failed": "sum",
+    "requests_retried": "sum",
+    "replica_failures": "sum",
+    "shed_rejections": "sum",
+    "faults_injected": "sum",
     "ttft": "extend",
     "tpot": "extend",
     "decode_gaps": "extend",
@@ -162,6 +170,12 @@ class ServeStats:
     kv_blocks_peak: int | None = None   # paged only: peak pool blocks in use
     kv_pool_capacity: int | None = None  # paged only: pool size in blocks
     kv_pool_util: float | None = None   # paged only: peak / capacity
+    requests_failed: int = 0            # terminal FAILED (poison/deadline/
+                                        # retries exhausted)
+    requests_retried: int = 0           # reissued to a survivor replica
+    replica_failures: int = 0           # request failures charged to replicas
+    shed_rejections: int = 0            # admissions refused (queue too deep)
+    faults_injected: int = 0            # fault-plan probes that fired here
     ttft: list = field(default_factory=list)    # per-request seconds
     tpot: list = field(default_factory=list)    # per-request seconds/token
     decode_gaps: list = field(default_factory=list)  # s between decode steps
@@ -291,6 +305,9 @@ class WindowBase(NamedTuple):
     prefix_hits_host: int = 0
     prefix_lookups: int = 0
     spill_bytes: int = 0
+    requests_failed: int = 0    # fault-tolerance lifetime counters
+    shed_rejections: int = 0
+    faults_injected: int = 0
 
 
 def prefix_digests(tokens: np.ndarray, block_size: int) -> list[bytes]:
@@ -514,9 +531,18 @@ class ServingEngine:
                  preemption: bool = True, prefix_sharing: bool = True,
                  prefill_chunk: int | None = None,
                  seeded_prefill: bool = True, host_blocks: int = 0,
-                 draft_cfg=None, draft_params=None, spec_k: int = 3):
+                 draft_cfg=None, draft_params=None, spec_k: int = 3,
+                 name: str = "", fault_plan: FaultPlan | None = None,
+                 shed_queue_depth: int | None = None):
         self.cfg = cfg
         self.params = params
+        # fault tolerance: the replica's name (fault-plan replica filter +
+        # router health identity), the injection plan, and the admission
+        # shed threshold (queue depth beyond which submit() refuses with
+        # ShedError rather than guarantee an SLO miss)
+        self.name = name
+        self.fault_plan = fault_plan
+        self.shed_queue_depth = shed_queue_depth
         self.fns = fns_for(cfg)
         self.max_len = max_len
         self.slots = batch_slots
@@ -623,7 +649,12 @@ class ServingEngine:
             # spills fire-and-forget via submit(), fetches via submit_async
             # so _drain_tier collects them out of order between decode steps
             from repro.core.offload import KVBlockTarget, OffloadEngine
-            self._kv_io = OffloadEngine([KVBlockTarget(self.pool.host)])
+            kv_target = KVBlockTarget(self.pool.host)
+            if fault_plan is not None:
+                # kv.spill / kv.fetch probe sites fire on the transfer
+                # worker, mapped from the payload kind by _kv_fault_hook
+                kv_target.fault_hook = self._kv_fault_hook
+            self._kv_io = OffloadEngine([kv_target])
             self._kv_io.__enter__()           # daemon worker; engine-lifetime
             self.pool.on_demote = self._on_demote
             self._held_digests: dict[int, bytes] = {}  # owned-by: executor-thread; bid -> key
@@ -661,6 +692,16 @@ class ServingEngine:
         self.totals = ServeStats()           # lifetime counters (monotonic)
         self._thread: threading.Thread | None = None
         self._stop = threading.Event()
+        # control-plane state shared with router / traffic threads: the
+        # captured executor failure and whether stop() already surfaced it
+        self._ctl_lock = threading.Lock()
+        self._failure: BaseException | None = None  # guarded-by: self._ctl_lock
+        self._failure_raised = False                # guarded-by: self._ctl_lock
+        # True once any submitted request carried a deadline_s — lets the
+        # executor skip the per-step deadline sweep for deadline-free
+        # workloads (monotonic bool; racing the writer only delays the
+        # first sweep by one step)
+        self._has_deadlines = False
 
     # -- model plumbing --------------------------------------------------------
 
@@ -683,6 +724,134 @@ class ServingEngine:
                 f"max_len={self.max_len}")
         if self.pool is not None:
             self.pool.validate_rows(req.kv_rows + self.spec_rows, req.rid)
+        if req.deadline_s is not None:
+            # monotonic enable flag for the executor's deadline sweep;
+            # both admission paths (blocking serve, service submit) pass
+            # through here before the scheduler sees the request
+            self._has_deadlines = True
+
+    # -- fault tolerance -------------------------------------------------------
+
+    @property
+    def failure(self) -> BaseException | None:
+        """The exception that killed the executor, if any (thread-safe;
+        the router's health checks poll this)."""
+        with self._ctl_lock:
+            return self._failure
+
+    def _fault(self, site: str, rid=None) -> str | None:
+        """Fire the fault plan's probe at ``site``: returns None (no
+        fault) or the action that fired — ``delay`` already slept here,
+        ``raise`` already raised :class:`FaultError`, ``drop`` is the
+        caller's to interpret (lost result / lost transfer).  Called from
+        the executor thread and from the KV transfer worker."""
+        plan = self.fault_plan
+        if plan is None:
+            return None
+        spec = plan.fire(site, rid=rid, replica=self.name)
+        if spec is None:
+            return None
+        with self._ctl_lock:          # probe fires on two threads
+            self.totals.faults_injected += 1
+        if spec.action == "delay":
+            time.sleep(spec.delay_s)
+            return "delay"
+        if spec.action == "raise":
+            raise FaultError(site, f"rid={rid}" if rid is not None else "")
+        return "drop"
+
+    def _kv_fault_hook(self, item) -> bool:
+        """Transfer-worker probe (installed on the KVBlockTarget): map the
+        payload kind to its site; True drops the transfer — a spill that
+        never lands (the pin is released via _spill_done) or a fetch that
+        reports a tier miss (the engine recomputes the block)."""
+        site = "kv.spill" if item.payload[0] == "spill" else "kv.fetch"
+        return self._fault(site) == "drop"
+
+    def _finish_failed(self, req: Request, exc: BaseException) -> None:
+        """Move ``req`` to its terminal FAILED state and notify."""
+        req.state = RequestState.FAILED
+        req.error = exc
+        req.finished_at = time.monotonic()
+        self.totals.requests_failed += 1
+        if req.on_finish is not None:
+            try:
+                req.on_finish(req)
+            except Exception:  # fault-ok: a raising completion callback must not take down the failure path reporting the failure
+                pass
+
+    def _fail_slot(self, slot: int, req: Request, exc: BaseException) -> None:
+        """Poison-request isolation: one request's prefill chunk or decode
+        commit raised, so *that request* fails — blocks freed, reservation
+        returned, drafter mirror dropped, slot refilled next step — and
+        the executor loop lives on.
+
+        Cleanup mirrors the preemption path: popping the prefill job is
+        enough for in-flight host-tier fetches (the drain's job-alive
+        guard already discards commits for a dead job); only admission
+        prefetches that never reached materialization need explicit
+        discarding."""
+        job = self._prefilling.pop(slot, None)
+        if job is not None and job.pos == -1:
+            for item in job.prefetch.values():
+                self._discard_fetch(item)
+        if self._drafter is not None:
+            self._drafter.drop(slot)
+            self._spec_on.discard(slot)
+        self.scheduler.release(slot)       # blocks + reservation tail back
+        if self.paged:
+            self._retire_slot(slot)
+        self._finish_failed(req, exc)
+        self.scheduler.notify_capacity()   # a slot just opened
+
+    def _record_crash(self, exc: BaseException) -> None:
+        """Executor crash capture (runs on the dying executor thread): a
+        non-request fault escaped :meth:`_step`.  Capture it so it
+        surfaces through :attr:`failure` / :meth:`stop` instead of a
+        join-timeout, poison the scheduler against late submits, and
+        fail every request this executor will now never serve."""
+        with self._ctl_lock:
+            if self._failure is None:
+                self._failure = exc
+        self.scheduler.poison(exc)
+        failed = self.scheduler.drain_queue()
+        for slot, req in self.scheduler.active():
+            try:
+                self._fail_slot(slot, req, exc)
+            except Exception:  # fault-ok: crash-path cleanup is best-effort — the pool may be mid-mutation from the very fault being handled
+                self._finish_failed(req, exc)
+        for req in failed:
+            self._finish_failed(req, exc)
+
+    def _raise_failure_once(self) -> None:
+        """Surface a captured executor crash exactly once (stop() calls
+        this; a second stop() is then silent — idempotent teardown)."""
+        with self._ctl_lock:
+            failure = self._failure
+            raised = self._failure_raised
+            self._failure_raised = True
+        if failure is not None and not raised:
+            raise ExecutorCrash(
+                "executor thread died mid-serve") from failure
+
+    def _sweep_deadlines(self) -> None:
+        """Fail queued and active requests whose hard deadline elapsed —
+        decoding them further would deliver tokens the caller has already
+        abandoned.  Skipped entirely for deadline-free workloads."""
+        if not self._has_deadlines:
+            return
+        now = time.monotonic()
+        for req in self.scheduler.expire_deadlines(now):
+            self._finish_failed(
+                req, DeadlineExceeded(
+                    f"request {req.rid}: deadline {req.deadline_s}s "
+                    f"elapsed while queued"))
+        for slot, req in self.scheduler.active():
+            if req.deadline_elapsed(now):
+                self._fail_slot(
+                    slot, req, DeadlineExceeded(
+                        f"request {req.rid}: deadline {req.deadline_s}s "
+                        f"elapsed after {len(req.output)} tokens"))
 
     def _batch_for(self, prompts: np.ndarray) -> dict:
         """prompts: (W, S) -> model batch dict (positions/frames as needed)."""
@@ -848,11 +1017,21 @@ class ServingEngine:
             return False
         host.begin_store(key)           # pin: tier eviction skips pendings
         leaves = self._read_block_slices(bid)
-        self._kv_io.submit(("spill", key, leaves))
+        self._kv_io.submit(("spill", key, leaves),
+                           on_done=lambda item, key=key:
+                           self._spill_done(key, item))
         self.totals.kv_spills += 1
         self.totals.spill_bytes += sum(int(v.nbytes)
                                        for v in leaves.values())
         return True
+
+    def _spill_done(self, key: bytes, item) -> None:
+        """Spill completion hook (transfer-worker thread): a dropped or
+        failed spill leaves a pinned pending placeholder nothing will
+        ever fill — release it, so the tier does not leak and a later
+        fetch of the key cleanly misses into recompute."""
+        if item.result is None or isinstance(item.result, WorkError):
+            self.pool.host.drop(key)
 
     # assumes-lock: KVBlockPool._lock
     def _on_demote(self, ids: list[int]) -> None:
@@ -921,9 +1100,12 @@ class ServingEngine:
             job, j, bid, gen = ref
             job.pending_n -= 1
             alive = self._prefilling.get(job.slot) is job
-            if (item.result is not None and alive
+            result = item.result
+            if isinstance(result, WorkError):  # failed transfer = tier miss
+                result = None
+            if (result is not None and alive
                     and self.pool.block_live(bid, gen)):
-                self._write_block(bid, item.result)
+                self._write_block(bid, result)
                 job.fetched_ok.add(j)
                 self.totals.kv_fetches += 1
                 self.totals.prefix_hits_host += 1
@@ -937,6 +1119,26 @@ class ServingEngine:
             del self._staged[item.seq]   # already popped from the done-q
         else:
             self._claimed.add(item.seq)  # done-q will deliver; drain drops
+
+    def drain_tier_io(self, timeout: float = 10.0) -> None:
+        """Quiesce the host-tier transfer engine: block until every
+        in-flight spill and fetch has landed (or been dropped) and the
+        drain-side staging state is empty.  Chaos tests call this after a
+        serve — or after a crash, when nobody else will ever drain — so
+        the leak check never misreads a transient ``_PENDING`` pin or a
+        parked fetch as a leak."""
+        if not self.tiered:
+            return
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            self._drain_tier(timeout=0.01)
+            for seq in list(self._staged):       # orphans with no live job
+                self._staged.pop(seq)
+            if (not self._fetch_refs and not self._staged
+                    and self.pool.host.pending_count == 0):
+                return
+        raise TimeoutError("host-tier IO did not quiesce within "
+                           f"{timeout}s: {self.pool.leak_report()}")
 
     def _admit_paged(self, slot: int, req: Request) -> None:
         """Queue an admitted request's cache-seeded chunked prefill
@@ -1011,11 +1213,15 @@ class ServingEngine:
             used.add(item.seq)
             bid, gen = req.block_ids[j], self.pool.generation(req.block_ids[j])
             if item.done.is_set():           # landed before materialization
-                if item.result is None:
+                result = item.result
+                if isinstance(result, WorkError):
+                    result = None            # failed transfer = tier miss
+                if result is None:
+                    self._discard_fetch(item)
                     break                    # evicted since the probe: the
                                              # seed run caps here, recompute
                                              # overwrites the blocks past it
-                self._write_block(bid, item.result)
+                self._write_block(bid, result)
                 job.fetched_ok.add(j)
                 self.totals.kv_fetches += 1
                 self.totals.prefix_hits_host += 1
@@ -1045,6 +1251,9 @@ class ServingEngine:
         """
         job = self._prefilling[slot]
         req = job.req
+        if self._fault("engine.prefill", rid=req.rid) == "drop":
+            raise FaultError("engine.prefill",
+                             f"dropped prefill chunk of {req.rid}")
         if job.pos == -1:
             self._materialize_blocks(job)
         if job.pos == -2:
@@ -1166,6 +1375,11 @@ class ServingEngine:
         prefill budget, sample one token per decoding slot (vectorized),
         advance the batched decode step.  Returns False when there was no
         work."""
+        # a raise here is a *replica* fault, not a request fault: it
+        # escapes _step, kills the executor, and exercises the crash
+        # capture path (_record_crash / failure / stop)
+        self._fault("replica.executor")
+        self._sweep_deadlines()
         admitted = self.scheduler.admit()
         if self.paged:
             # trash the tables of any slots admit() preempted *before*
@@ -1191,27 +1405,37 @@ class ServingEngine:
                     self._spec_on.add(slot)
                 else:
                     self._spec_on.discard(slot)
-            if self.paged:
-                self._admit_paged(slot, req)
-                if self.prefill_chunk is None:
-                    # un-chunked: finish this prompt before admitting the
-                    # next, so its published prefix blocks are sharable
-                    # (and seedable) by the very next admission; a zero
-                    # advance means the job is waiting on host-tier
-                    # fetches — block briefly on the drain, there is
-                    # nothing else to overlap them with here
-                    while slot in self._prefilling:
-                        if self._advance_prefill(slot) == 0:
-                            self._drain_tier(timeout=0.005)
-            else:
-                last1, state1 = self._prefill_one(req)
-                self.totals.prefill_tokens_total += len(req.prefill_tokens)
-                self.totals.prefill_tokens_computed += \
-                    len(req.prefill_tokens)
-                self._state = self._merge(self._state, state1,
-                                          jnp.int32(slot))
-                self._set_last(slot, last1)
-                req.state = RequestState.DECODE
+            try:
+                if self.paged:
+                    self._admit_paged(slot, req)
+                    if self.prefill_chunk is None:
+                        # un-chunked: finish this prompt before admitting
+                        # the next, so its published prefix blocks are
+                        # sharable (and seedable) by the very next
+                        # admission; a zero advance means the job is
+                        # waiting on host-tier fetches — block briefly on
+                        # the drain, there is nothing else to overlap
+                        # them with here
+                        while slot in self._prefilling:
+                            if self._advance_prefill(slot) == 0:
+                                self._drain_tier(timeout=0.005)
+                else:
+                    if self._fault("engine.prefill", rid=req.rid) == "drop":
+                        raise FaultError("engine.prefill",
+                                         f"dropped prefill of {req.rid}")
+                    last1, state1 = self._prefill_one(req)
+                    self.totals.prefill_tokens_total += \
+                        len(req.prefill_tokens)
+                    self.totals.prefill_tokens_computed += \
+                        len(req.prefill_tokens)
+                    self._state = self._merge(self._state, state1,
+                                              jnp.int32(slot))
+                    self._set_last(slot, last1)
+                    req.state = RequestState.DECODE
+            except Exception as e:  # noqa: BLE001 — poison isolation:
+                # one request's raising prefill fails that request, not
+                # the executor (crash faults escape one level up)
+                self._fail_slot(slot, req, e)
 
         if self._prefilling:
             # chunked mode: spend at most prefill_chunk prompt tokens per
@@ -1230,7 +1454,10 @@ class ServingEngine:
                             if j.pos != -2), None)
                 if job is None:
                     break
-                budget -= self._advance_prefill(job.slot, budget)
+                try:
+                    budget -= self._advance_prefill(job.slot, budget)
+                except Exception as e:  # noqa: BLE001 — poison isolation
+                    self._fail_slot(job.slot, job.req, e)
 
         active = self.scheduler.decoding()
         if not active:
@@ -1260,6 +1487,15 @@ class ServingEngine:
         feed = np.zeros((self.slots,), np.int32)
         for slot, req in active:
             tok = toks[slot]
+            try:
+                if self._fault("engine.decode", rid=req.rid) == "drop":
+                    raise FaultError("engine.decode",
+                                     f"dropped decode commit of {req.rid}")
+            except Exception as e:  # noqa: BLE001 — poison isolation: the
+                # failed slot leaves `feed` at 0 against a trashed table,
+                # exactly like a retired speculative slot
+                self._fail_slot(slot, req, e)
+                continue
             feed[slot] = tok
             if req.first_token_at is None:
                 req.first_token_at = now
@@ -1382,6 +1618,15 @@ class ServingEngine:
             logits[rows], np.array([drafts[s] for s, _ in spec]))
         now = time.monotonic()
         for (slot, req), m in zip(spec, accepted):
+            try:
+                if self._fault("engine.decode", rid=req.rid) == "drop":
+                    raise FaultError("engine.decode",
+                                     f"dropped verify commit of {req.rid}")
+            except Exception as e:  # noqa: BLE001 — poison isolation:
+                # provisional rows already live in req.block_ids, so the
+                # slot teardown frees them with the rest of the table
+                self._fail_slot(slot, req, e)
+                continue
             commit = [pending[slot]] + drafts[slot][:int(m)]
             commit = commit[:req.max_new_tokens - len(req.output)]
             self.totals.spec_proposed += k
@@ -1447,7 +1692,10 @@ class ServingEngine:
             kv_fetches=self.totals.kv_fetches,
             prefix_hits_host=self.totals.prefix_hits_host,
             prefix_lookups=self.totals.prefix_lookups,
-            spill_bytes=self.totals.spill_bytes)
+            spill_bytes=self.totals.spill_bytes,
+            requests_failed=self.totals.requests_failed,
+            shed_rejections=self.totals.shed_rejections,
+            faults_injected=self.totals.faults_injected)
 
     def collect_window(self, base: "WindowBase", requests: list[Request],
                        wall_s: float) -> ServeStats:
@@ -1479,6 +1727,12 @@ class ServingEngine:
         stats.prefix_lookups = (self.totals.prefix_lookups
                                 - base.prefix_lookups)
         stats.spill_bytes = self.totals.spill_bytes - base.spill_bytes
+        stats.requests_failed = (self.totals.requests_failed
+                                 - base.requests_failed)
+        stats.shed_rejections = (self.totals.shed_rejections
+                                 - base.shed_rejections)
+        stats.faults_injected = (self.totals.faults_injected
+                                 - base.faults_injected)
         if stats.prefix_lookups:
             stats.kv_hit_rate = ((stats.prefix_shared_blocks
                                   + stats.prefix_hits_host)
@@ -1505,7 +1759,14 @@ class ServingEngine:
         for r in requests:
             self.scheduler.submit(r)
         while self.scheduler.has_work():
-            self._step()
+            try:
+                self._step()
+            except Exception as e:  # noqa: BLE001 — crash capture: fail
+                # every in-flight request (freeing its blocks) before the
+                # crash surfaces, so the pool stays leak-free even when
+                # the executor dies mid-batch
+                self._record_crash(e)
+                raise
         return self.collect_window(base, requests, time.monotonic() - t0)
 
     # -- service mode (used by the replica router and live traffic) ------------
@@ -1519,34 +1780,66 @@ class ServingEngine:
         self._thread.start()
 
     def _service_loop(self) -> None:
-        while not self._stop.is_set():
-            if not self.scheduler.wait_for_work(timeout=0.02):
-                continue
-            self._step()
+        try:
+            while not self._stop.is_set():
+                if not self.scheduler.wait_for_work(timeout=0.02):
+                    continue
+                self._step()
+        except Exception as e:  # noqa: BLE001 — crash capture: the
+            # executor must not die silently; record the failure, fail
+            # every in-flight request (freeing its KV blocks), and poison
+            # the scheduler so later submitters see ExecutorCrash instead
+            # of a hang.  stop()/failure re-surface the exception.
+            self._record_crash(e)
 
     def submit(self, req: Request,
                on_finish: Callable[[Request], None] | None = None) -> None:
         """Thread-safe admission; ``on_finish`` fires from the executor
-        thread the moment the request's last token is emitted."""
+        thread the moment the request's last token is emitted.
+
+        Raises :class:`ExecutorCrash` (chained to the original failure)
+        if the executor has died, and :class:`ShedError` when the queue
+        is already ``shed_queue_depth`` deep — an admission there could
+        only miss its SLO, so shedding it early is the graceful
+        degradation mode."""
+        crash = self.failure
+        if crash is not None:
+            raise ExecutorCrash(
+                "executor is dead; submit refused") from crash
+        if self.shed_queue_depth is not None:
+            depth = self.scheduler.queued
+            if depth >= self.shed_queue_depth:
+                with self._ctl_lock:
+                    self.totals.shed_rejections += 1
+                raise ShedError(
+                    f"queue depth {depth} >= shed threshold "
+                    f"{self.shed_queue_depth}")
         self._check_fits(req)
         if on_finish is not None:
             req.on_finish = on_finish
         self.scheduler.submit(req)
 
-    def stop(self, timeout: float = 10.0) -> None:
-        """Stop the service-mode executor thread.  Raises if the thread
-        does not exit within ``timeout`` — and keeps the handle, so a later
-        :meth:`start` cannot race two executors over ``_state``."""
-        if self._thread is None:
-            return
-        self._stop.set()
-        self._thread.join(timeout=timeout)
-        if self._thread.is_alive():
-            raise RuntimeError(
-                f"executor thread did not stop within {timeout}s; handle "
-                f"retained — a second start() would race two executors "
-                f"over the decode state")
-        self._thread = None
+    def stop(self, timeout: float = 10.0, *,
+             raise_failure: bool = True) -> None:
+        """Stop the service-mode executor thread; idempotent, safe to
+        call twice and after a crash.  Raises if a live thread does not
+        exit within ``timeout`` — and keeps the handle, so a later
+        :meth:`start` cannot race two executors over ``_state``.  If the
+        executor died on a non-request fault, that crash is re-raised
+        here exactly once (``raise_failure=False`` suppresses it — the
+        router uses this after it has already routed the failure)."""
+        thread = self._thread
+        if thread is not None:
+            self._stop.set()
+            thread.join(timeout=timeout)
+            if thread.is_alive():
+                raise RuntimeError(
+                    f"executor thread did not stop within {timeout}s; "
+                    f"handle retained — a second start() would race two "
+                    f"executors over the decode state")
+            self._thread = None
+        if raise_failure:
+            self._raise_failure_once()
 
     @property
     def load(self) -> int:

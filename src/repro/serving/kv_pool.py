@@ -171,6 +171,14 @@ class HostTier(Tier):
         with self._lock:
             return len(self._data)
 
+    @property
+    def pending_count(self) -> int:
+        """Keys pinned by an in-flight spill that never landed — nonzero
+        after drain means a spill was submitted and its payload dropped
+        (a leak the fault tests sweep for)."""
+        with self._lock:
+            return sum(v is self._PENDING for v in self._data.values())
+
 
 class DiskTierStub(Tier):
     """Interface placeholder for a third tier below host memory.
@@ -553,3 +561,34 @@ class KVBlockPool:
         must not be shared as if it still held the old prefix rows."""
         with self._lock:
             return block_id in self._refs and self._gen[block_id] == gen
+
+    # -- fault-tolerance audit ---------------------------------------------------
+
+    def leak_report(self) -> dict[str, int]:
+        """Leak sweep for the fault tests: after a full drain (every
+        request DONE or FAILED and every slot retired), the only
+        legitimate surviving allocations are prefix-index holds — each
+        with refcount exactly 1 (the hold itself).  Anything else is a
+        leaked request holder, a stranded reservation, or a spill pin
+        that never landed.  Returns a dict of violation counts; all-zero
+        means leak-free."""
+        with self._lock:
+            unheld = [b for b in self._refs if b not in self._held]
+            held_over = [b for b in self._held if self._refs.get(b, 0) != 1]
+            report = {
+                # allocated blocks no index hold accounts for
+                "unheld_blocks": len(unheld),
+                # held blocks some request still refcounts (or a hold on
+                # a freed id)
+                "held_with_extra_refs": len(held_over),
+                "reserved_blocks": self._reserved,
+            }
+        report["host_pending"] = (self.host.pending_count
+                                  if self.host is not None else 0)
+        return report
+
+    def assert_leak_free(self) -> None:
+        """Raise with the full report when :meth:`leak_report` is dirty."""
+        report = self.leak_report()
+        if any(report.values()):
+            raise AssertionError(f"KV pool leak after drain: {report}")

@@ -33,21 +33,42 @@ the *policy* deciding which replica gets a request changed:
     a steal racing a deadline reissue safe: whichever copy finishes first
     is the result, the other is discarded on completion.
 
+The router is also the fleet's fault boundary (a sub-1W fleet fails one
+chip at a time, by design): it tracks per-replica health
+(HEALTHY -> DEGRADED -> DEAD), quarantines dead replicas out of
+placement / affinity / stealing, and reissues their queued and in-flight
+requests to survivors with bounded retries — riding the same
+``WorkItem.complete`` first-wins commit as straggler reissue, so a retry
+racing a late original is safe and retries exhausted means a typed
+FAILED terminal, never a hang.
+
 ``MultiReplicaEngine`` (the PR-1 request-count least-loaded dispatcher)
 survives as the routing A/B baseline: a :class:`ReplicaRouter` with every
 mechanism switched off.
 """
 from __future__ import annotations
 
+import enum
 import threading
 import time
 from dataclasses import dataclass
 from itertools import islice
+from typing import Callable
 
-from repro.core.offload import OffloadEngine, Target, WorkItem
+from repro.core.offload import OffloadEngine, Target, WorkError, WorkItem
 from repro.serving.engine import ServeStats, ServingEngine, prefix_digests
+from repro.serving.faults import DeadlineExceeded, ExecutorCrash, ShedError
 from repro.serving.kv_pool import CapacityError
-from repro.serving.scheduler import LoadSnapshot, Request
+from repro.serving.scheduler import (LoadSnapshot, Request, RequestState)
+
+
+class ReplicaHealth(enum.Enum):
+    """One replica's standing in the fleet.  DEGRADED (a request-level
+    fault was observed) still serves traffic; DEAD (its executor crashed)
+    is quarantined out of placement, affinity, and stealing."""
+    HEALTHY = "healthy"
+    DEGRADED = "degraded"
+    DEAD = "dead"
 
 
 class ReplicaTarget(Target):
@@ -62,6 +83,11 @@ class ReplicaTarget(Target):
     placement scores on the richer :meth:`ServingEngine.load_snapshot`.
     """
 
+    # set by the router: (item, failed_request, replica_name) -> bool.
+    # True = the request was reissued on a survivor; leave the item open
+    # for that clone's first-wins commit.
+    fail_handler: Callable[[WorkItem, Request, str], bool] | None = None
+
     def __init__(self, engine: ServingEngine, name: str,
                  tdp_watts: float = 1.0):
         self.engine = engine
@@ -73,11 +99,37 @@ class ReplicaTarget(Target):
         self.engine.start()
 
     def close(self) -> None:
-        self.engine.stop()
+        # any captured executor crash was already routed through the
+        # retry path; re-raising it here would abort teardown of the
+        # remaining healthy replicas
+        self.engine.stop(raise_failure=False)
+
+    def dispatch(self, item: WorkItem, req: Request) -> None:
+        """Admit ``req`` on this replica, wiring completion back to
+        ``item``.  A FAILED terminal is offered to the router's
+        ``fail_handler`` first; only an unhandled failure commits, so the
+        item always resolves — retried elsewhere or typed-FAILED.  Raises
+        when this replica refuses admission (dead, shedding, capacity)."""
+        def done(r: Request, item: WorkItem = item) -> None:
+            if (r.state is RequestState.FAILED
+                    and self.fail_handler is not None
+                    and self.fail_handler(item, r, self.name)):
+                return
+            item.complete(r, self.name)
+        self.engine.submit(req, on_finish=done)
 
     def load_tensor(self, item: WorkItem) -> WorkItem:
         req = item.payload.clone()      # reissue-safe: first clone wins
-        self.engine.submit(req, on_finish=lambda r: item.complete(r, self.name))
+        try:
+            self.dispatch(item, req)
+        except Exception as e:  # noqa: BLE001 — dead or shedding replica:
+            # fail the clone and route it exactly like an in-flight
+            # failure (retry on a survivor, else typed FAILED terminal)
+            req.state = RequestState.FAILED
+            req.error = e
+            if not (self.fail_handler is not None
+                    and self.fail_handler(item, req, self.name)):
+                item.complete(req, self.name)
         return item
 
     @property
@@ -93,6 +145,10 @@ class RouterStats:
     affinity_blocks: int = 0    # full prefix blocks those hits landed on
     affinity_fallbacks: int = 0  # hits declined (owner overloaded)
     steals: int = 0             # requests migrated to an idle replica
+    retries: int = 0            # failed requests reissued to a survivor
+    replica_failures: int = 0   # replicas quarantined DEAD (crashed)
+    rebalance_errors: int = 0   # rebalance ticks that raised (and were
+    #                             contained; serve() re-surfaces the last)
 
 
 class ReplicaRouter:
@@ -125,11 +181,16 @@ class ReplicaRouter:
                  affinity_queue_cap: int | None = None,
                  steal_interval_s: float = 0.005,
                  deadline_s: float | None = None,
+                 max_retries: int = 2,
                  prefix_index_cap: int = 65536):
         assert replicas, "router needs at least one replica"
         self.replicas = replicas
+        self.max_retries = max_retries
         self.targets = [ReplicaTarget(e, name=f"replica{i}")
                         for i, e in enumerate(replicas)]
+        self._target_index = {t.name: i for i, t in enumerate(self.targets)}
+        for t in self.targets:
+            t.fail_handler = self._on_request_failed
         # affinity needs every replica on one digest scheme: paged KV and
         # a common block size (else "same prefix" means different blocks)
         paged = all(e.pool is not None for e in replicas)
@@ -154,6 +215,9 @@ class ReplicaRouter:
         # serve() — unlocked `+=` across those threads drops increments
         self._stats_lock = threading.Lock()
         self.stats = RouterStats()           # guarded-by: self._stats_lock
+        self._health = [ReplicaHealth.HEALTHY  # guarded-by: self._stats_lock
+                        for _ in replicas]
+        self._rebalance_exc: BaseException | None = None  # guarded-by: self._stats_lock
         # fleet prefix index: digest of blocks 0..j -> replica that last
         # computed (or was routed) that prefix.  A *hint*, not truth: a
         # replica may have evicted the blocks (its own index validates
@@ -165,6 +229,81 @@ class ReplicaRouter:
         self._prefix_cap = prefix_index_cap
         self._steal_stop = threading.Event()
         self._steal_thread: threading.Thread | None = None
+
+    # -- replica health + failure routing --------------------------------------
+
+    def health(self) -> list[ReplicaHealth]:
+        with self._stats_lock:
+            return list(self._health)
+
+    def _healthy(self) -> list[int]:
+        """Replica indices still eligible for traffic (not DEAD)."""
+        with self._stats_lock:
+            return [i for i, h in enumerate(self._health)
+                    if h is not ReplicaHealth.DEAD]
+
+    def _mark_degraded(self, i: int) -> None:
+        with self._stats_lock:
+            if self._health[i] is ReplicaHealth.HEALTHY:
+                self._health[i] = ReplicaHealth.DEGRADED
+
+    def _mark_dead(self, i: int) -> None:
+        with self._stats_lock:
+            if self._health[i] is ReplicaHealth.DEAD:
+                return
+            self._health[i] = ReplicaHealth.DEAD
+            self.stats.replica_failures += 1
+
+    def _heartbeat(self) -> None:
+        """Quarantine any replica whose executor has died.  Runs on the
+        rebalance thread each tick; the failure-routing path below also
+        detects death inline, so a steal-free router is covered too."""
+        for i, e in enumerate(self.replicas):
+            if e.failure is not None:
+                self._mark_dead(i)
+
+    def _on_request_failed(self, item: WorkItem, failed: Request,
+                           name: str) -> bool:
+        """Failure routing — runs on whichever replica thread terminated
+        the request (executor poison-isolation, crash capture, or a
+        refused submit).  Updates that replica's health, then reissues a
+        fresh clone on the least-loaded healthy survivor, preferring a
+        *different* replica when one exists.  Bounded by ``max_retries``
+        per work item; the caller commits the FAILED request as the
+        item's terminal result on False, so a request can be retried or
+        failed but never stranded."""
+        i = self._target_index.get(name)
+        if i is not None:
+            if (isinstance(failed.error, ExecutorCrash)
+                    or self.replicas[i].failure is not None):
+                self._mark_dead(i)
+            else:
+                self._mark_degraded(i)
+        if isinstance(failed.error, (DeadlineExceeded, ShedError)):
+            # the deadline is already blown on any survivor too, and a
+            # shed is the fleet's own back-pressure — retrying either
+            # would just convert typed rejection into queue pressure
+            return False
+        tries = getattr(item, "retries", 0)
+        if tries >= self.max_retries:
+            return False
+        item.retries = tries + 1
+        # fresh clone from the bare prompt: greedy regeneration on the
+        # survivor is bit-identical to an uninterrupted run
+        retry = failed.clone()
+        order = sorted(self._healthy(),
+                       key=lambda j: self.replicas[j].load)
+        for j in order:
+            if j == i and len(order) > 1:
+                continue
+            try:
+                self.targets[j].dispatch(item, retry)
+            except Exception:  # fault-ok: the candidate refused admission (it may just have died); try the next survivor
+                continue
+            with self._stats_lock:
+                self.stats.retries += 1
+            return True
+        return False
 
     # -- placement -------------------------------------------------------------
 
@@ -179,13 +318,14 @@ class ReplicaRouter:
         traffic — snapshots only the owner; the full fleet is snapshotted
         lazily, on fallback to the load score, so dispatch never pays
         R-1 wasted scheduler-lock rounds per hit."""
+        healthy = set(self._healthy())
         digests = (prefix_digests(req.prefill_tokens, self.block_size)
                    if self.affinity else [])
         if digests:
             for j in range(len(digests) - 1, -1, -1):   # deepest match wins
                 owner = self._prefix_owner.get(digests[j])
-                if owner is None:
-                    continue
+                if owner is None or owner not in healthy:
+                    continue     # dead owners lost their cache anyway
                 snap = self.replicas[owner].load_snapshot()
                 # queue depth alone trips the cap: a blocks-starved owner
                 # can back up a deep queue while a decode slot sits free
@@ -198,9 +338,13 @@ class ReplicaRouter:
                     self.stats.affinity_blocks += j + 1
                 self._register(digests, owner)
                 return owner
-        snaps = [e.load_snapshot() for e in self.replicas]
-        choice = min(range(len(self.replicas)),
-                     key=lambda i: self._score(i, snaps[i], req))
+        # quarantine: only healthy replicas compete for placement.  With
+        # the whole fleet dead, any target will refuse the submit and the
+        # failure routing turns the request into a typed FAILED terminal
+        # (better than blocking dispatch on a replica that cannot return)
+        pool = sorted(healthy) or list(range(len(self.replicas)))
+        snaps = {i: self.replicas[i].load_snapshot() for i in pool}
+        choice = min(pool, key=lambda i: self._score(i, snaps[i], req))
         if digests:
             self._register(digests, choice)
         return choice
@@ -275,13 +419,14 @@ class ReplicaRouter:
         queued request it could admit right now from the most backlogged
         peer (by queued prefill tokens).  Returns requests moved."""
         moved = 0
-        snaps = [e.load_snapshot() for e in self.replicas]
-        for i, snap in enumerate(snaps):
+        healthy = self._healthy()
+        snaps = {i: self.replicas[i].load_snapshot() for i in healthy}
+        for i in healthy:
+            snap = snaps[i]
             if not snap.idle:
                 continue
             donors = sorted(
-                (j for j in range(len(self.replicas))
-                 if j != i and snaps[j].queued > 0),
+                (j for j in healthy if j != i and snaps[j].queued > 0),
                 key=lambda j: (snaps[j].queued_tokens, snaps[j].queued),
                 reverse=True)
             thief = self.replicas[i]
@@ -297,10 +442,21 @@ class ReplicaRouter:
                         # steal racing a reissue resolves first-wins
                         thief.submit(req)
                         took += 1
-                    except CapacityError:
-                        # defensive only (can_take pre-filters): hand the
-                        # request back to its donor
-                        self.replicas[j].submit(req)
+                    except Exception:  # noqa: BLE001 — thief refused
+                        # (CapacityError is defensive only: can_take
+                        # pre-filters; anything else means the thief died
+                        # between snapshot and submit).  The stolen
+                        # request must not vanish: hand it back to its
+                        # donor, else fail it into the retry path (its
+                        # on_finish routes the failure to a survivor).
+                        try:
+                            self.replicas[j].submit(req)
+                        except Exception as e2:  # noqa: BLE001 — donor
+                            # also gone mid-steal
+                            req.state = RequestState.FAILED
+                            req.error = e2
+                            if req.on_finish is not None:
+                                req.on_finish(req)
                 moved += took
                 if took:                # thief's free slot is now spoken for
                     break
@@ -310,7 +466,16 @@ class ReplicaRouter:
 
     def _steal_loop(self) -> None:
         while not self._steal_stop.wait(self.steal_interval_s):
-            self._rebalance_once()
+            try:
+                self._heartbeat()
+                self._rebalance_once()
+            except Exception as e:  # noqa: BLE001 — one bad tick must not
+                # silently kill rebalancing for the rest of the serve;
+                # count it and stash the exception for serve() to
+                # re-surface after results are copied back
+                with self._stats_lock:
+                    self.stats.rebalance_errors += 1
+                    self._rebalance_exc = e
 
     def _start_stealing(self) -> None:
         if not self.steal or self._steal_thread is not None:
@@ -322,13 +487,34 @@ class ReplicaRouter:
         self._steal_thread.start()
 
     def _stop_stealing(self) -> None:
-        if self._steal_thread is None:
-            return
+        if self._steal_thread is None:     # idempotent: double stop is a
+            return                         # no-op, never an error
         self._steal_stop.set()
         self._steal_thread.join(timeout=10.0)
         if self._steal_thread.is_alive():
             raise RuntimeError("rebalance thread did not stop within 10s")
         self._steal_thread = None
+
+    def stop(self) -> None:
+        """Idempotent fleet teardown for service-mode use outside
+        :meth:`serve` (which tears down its own context): stop the
+        rebalance thread and every replica executor.  Captured executor
+        crashes are suppressed (`raise_failure=False` — they were already
+        routed through retry); every replica is offered a stop before the
+        first teardown error re-surfaces."""
+        errors: list[BaseException] = []
+        try:
+            self._stop_stealing()
+        except Exception as e:  # noqa: BLE001 — aggregated below; the
+            # replicas must still be stopped
+            errors.append(e)
+        for replica in self.replicas:
+            try:
+                replica.stop(raise_failure=False)
+            except Exception as e:  # noqa: BLE001 — aggregated below
+                errors.append(e)
+        if errors:
+            raise errors[0]
 
     # -- serving ---------------------------------------------------------------
 
@@ -359,8 +545,16 @@ class ReplicaRouter:
         delivered = 0
         for seq, done in results:      # copy the winning clone's results back
             orig = requests[seq]
+            if isinstance(done, WorkError):
+                # the replica worker itself raised (not a routed request
+                # failure): surface it as a typed FAILED terminal
+                orig.state = RequestState.FAILED
+                orig.error = done.error
+                orig.finished_at = time.monotonic()
+                continue
             orig.output = done.output
             orig.state = done.state
+            orig.error = done.error
             orig.first_token_at = done.first_token_at
             orig.finished_at = done.finished_at
             delivered += len(done.output)
@@ -376,10 +570,26 @@ class ReplicaRouter:
             stats.router_steals = self.stats.steals - rbase.steals
             stats.router_affinity_hits = (self.stats.affinity_hits
                                           - rbase.affinity_hits)
+            stats.requests_retried = self.stats.retries - rbase.retries
+            stats.replica_failures = (self.stats.replica_failures
+                                      - rbase.replica_failures)
+            rebalance_exc = self._rebalance_exc
+            self._rebalance_exc = None
+        # the merged per-replica count tallies every failure event,
+        # including ones a retry later recovered; the fleet-level number
+        # is *terminal* failures — requests whose callers got no answer
+        stats.requests_failed = sum(
+            1 for r in requests if r.state is RequestState.FAILED)
         # derived ratios (kv_pool_util, accept_rate) were recomputed by
         # merge_from itself from the merged peaks/capacities/counters —
         # no caller-side fixup to forget here
         stats.fill_request_metrics(requests)
+        if rebalance_exc is not None:
+            # hardening contract: a rebalance tick that raised was
+            # contained mid-serve (counted in rebalance_errors) but must
+            # not stay silent — results are already copied back onto the
+            # caller's requests, so re-surface it here
+            raise rebalance_exc
         return stats
 
 
@@ -390,6 +600,8 @@ class MultiReplicaEngine(ReplicaRouter):
     :class:`ReplicaRouter` directly."""
 
     def __init__(self, replicas: list[ServingEngine], *,
-                 deadline_s: float | None = None):
+                 deadline_s: float | None = None,
+                 max_retries: int = 2):
         super().__init__(replicas, affinity=False, steal=False,
-                         block_aware=False, deadline_s=deadline_s)
+                         block_aware=False, deadline_s=deadline_s,
+                         max_retries=max_retries)

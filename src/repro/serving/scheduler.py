@@ -1,11 +1,13 @@
-"""Continuous-batching scheduler: SLO-aware admission + fixed decode slots.
+r"""Continuous-batching scheduler: SLO-aware admission + fixed decode slots.
 
 The paper keeps every NCS stick saturated by split-phase load/collect; the
 LM-serving analogue is keeping every *decode slot* saturated.  This module
 owns the request lifecycle
 
     QUEUED -> PREFILL -> DECODE -> DONE
-                ^___________|        (preemption re-queues a decode)
+                ^___________|   \___ FAILED   (poison fault, deadline,
+                (preemption re-queues         or retries exhausted)
+                 a decode)
 
 and the slot bookkeeping: a fixed number of decode slots per replica, an
 admission queue feeding them, and thread-safe submit so a replica pull-loop
@@ -60,6 +62,7 @@ from typing import Callable, NamedTuple
 
 import numpy as np
 
+from repro.serving.faults import ExecutorCrash
 from repro.serving.kv_pool import KVBlockPool
 from repro.serving.sampler import Sampler, greedy
 
@@ -69,6 +72,8 @@ class RequestState(Enum):
     PREFILL = "prefill"    # assigned a slot; prompt being prefilled
     DECODE = "decode"      # occupying a decode slot
     DONE = "done"          # all tokens emitted
+    FAILED = "failed"      # terminal: poison fault / deadline / shed /
+    #                        retries exhausted — req.error says which
 
 
 @dataclass
@@ -79,6 +84,7 @@ class Request:
     sampler: Sampler = field(default_factory=greedy)
     priority: int = 0               # higher serves first; preempts lower
     slo_ttft_s: float | None = None  # TTFT target; orders within a priority
+    deadline_s: float | None = None  # hard wall from submit; elapsed -> FAILED
     # filled by the scheduler/engine:
     state: RequestState = RequestState.QUEUED
     output: list = field(default_factory=list)
@@ -87,6 +93,7 @@ class Request:
     finished_at: float | None = None
     on_finish: Callable[["Request"], None] | None = None
     preempted_count: int = 0        # times evicted from a decode slot
+    error: BaseException | None = None   # set iff state is FAILED
     # paged-KV bookkeeping (engine/scheduler-owned; empty when contiguous).
     # block_ids[:shared_blocks] are prefix-shared (refcounted, read-only);
     # blocks_reserved is the *remaining* unallocated reservation tail.
@@ -146,7 +153,15 @@ class Request:
                        max_new_tokens=self.max_new_tokens,
                        sampler=self.sampler, priority=self.priority,
                        slo_ttft_s=self.slo_ttft_s,
+                       deadline_s=self.deadline_s,
                        submitted_at=self.submitted_at)
+
+    def deadline_elapsed(self, now: float) -> bool:
+        """True once the per-request hard deadline has passed (always
+        False without one or before submission)."""
+        return (self.deadline_s is not None
+                and self.submitted_at is not None
+                and now - self.submitted_at > self.deadline_s)
 
 
 class LoadSnapshot(NamedTuple):
@@ -217,6 +232,9 @@ class ContinuousScheduler:
         self._blocked_sig: tuple | None = None  # guarded-by: self._lock
         self._event_epoch = 0                # guarded-by: self._lock
         self._head_checks_skipped = 0        # guarded-by: self._lock
+        # executor crash capture: once set, submit() raises instead of
+        # queueing into a scheduler nothing will ever drain again
+        self._poisoned: BaseException | None = None  # guarded-by: self._lock
         self._lock = threading.RLock()
         self._work = threading.Condition(self._lock)  # alias-of: self._lock
 
@@ -239,11 +257,24 @@ class ContinuousScheduler:
         if self.pool is not None:
             self.pool.validate_rows(req.kv_rows + self.spec_rows, req.rid)
         with self._work:
+            if self._poisoned is not None:
+                raise ExecutorCrash(
+                    "executor is dead; submit refused"
+                ) from self._poisoned
             if req.submitted_at is None:     # stamp at submission, not at
                 req.submitted_at = time.monotonic()  # Request construction
             req.state = RequestState.QUEUED
             self._push(req)
             self._event_epoch += 1           # a new head may outrank
+            self._work.notify_all()
+
+    def poison(self, exc: BaseException) -> None:
+        """Executor crash capture: refuse every later submit() with
+        :class:`ExecutorCrash` chained to the original failure, closing
+        the race between a crashing executor and a concurrent producer
+        (whose request would otherwise queue forever)."""
+        with self._work:
+            self._poisoned = exc
             self._work.notify_all()
 
     # assumes-lock: self._lock
@@ -406,6 +437,35 @@ class ContinuousScheduler:
         with self._lock:
             out, self._preempted = self._preempted, []
         return out
+
+    def drain_queue(self) -> list[Request]:
+        """Remove and return every still-QUEUED request — the executor's
+        crash path and the router's quarantine path use this to reclaim
+        work a dead replica will never serve.  Active slots are *not*
+        touched (their pool state needs the engine's retirement path)."""
+        with self._lock:
+            out = [e[3] for e in self._heap]
+            self._heap = []
+            self._blocked_sig = None
+            self._event_epoch += 1
+        return out
+
+    def expire_deadlines(self, now: float) -> list[Request]:
+        """Remove and return queued requests whose hard ``deadline_s``
+        has already elapsed — decoding them would deliver tokens the
+        caller has given up on.  Active slots are checked by the
+        executor (which owns their pool state)."""
+        with self._lock:
+            expired = [e[3] for e in self._heap
+                       if e[3].deadline_elapsed(now)]
+            if expired:
+                dead = set(map(id, expired))
+                self._heap = [e for e in self._heap
+                              if id(e[3]) not in dead]
+                heapq.heapify(self._heap)
+                self._blocked_sig = None
+                self._event_epoch += 1
+        return expired
 
     def active(self) -> list[tuple[int, Request]]:
         with self._lock:

@@ -11,6 +11,7 @@ from repro.analysis import default_repo_root, repo_config, run_all
 from repro.analysis.baseline import (apply_baseline, load_baseline,
                                      write_baseline)
 from repro.analysis.config import AnalysisConfig
+from repro.analysis.faultok import check_faultok
 from repro.analysis.jitpure import check_jit
 from repro.analysis.kernelreg import check_kernels
 from repro.analysis.locks import check_locks
@@ -259,6 +260,53 @@ def test_jit_flags_unbucketed_shape_key(tmp_path):
     findings = check_jit(cfg)
     assert [(f.rule, f.scope) for f in findings] == \
         [("unbucketed-shape", "raw@shape-cache")]
+
+
+# -- fault routing -------------------------------------------------------------
+
+def test_faultok_flags_silent_swallow(tmp_path):
+    _tree(tmp_path, {"pkg/f.py": """\
+        def drain(items):
+            for it in items:
+                try:
+                    it.run()
+                except Exception:
+                    pass
+
+        def logged(items):
+            for it in items:
+                try:
+                    it.run()
+                except Exception as e:
+                    print("oops", e)
+        """})
+    cfg = AnalysisConfig(repo_root=tmp_path, fault_files=["pkg/f.py"])
+    findings = check_faultok(cfg)
+    assert _rules(findings) == {"silent-swallow"}
+    assert {f.scope.split("@")[0] for f in findings} == {"drain", "logged"}
+
+
+def test_faultok_annotation_and_routed_handler_pass(tmp_path):
+    _tree(tmp_path, {"pkg/f.py": """\
+        def drain(items, errors):
+            for it in items:
+                try:
+                    it.run()
+                except Exception as e:  # fault-ok: best-effort teardown
+                    pass
+                try:
+                    it.close()
+                except Exception as e:
+                    errors.append(e)
+
+        def narrow(it):
+            try:
+                it.run()
+            except KeyError:
+                pass
+        """})
+    cfg = AnalysisConfig(repo_root=tmp_path, fault_files=["pkg/f.py"])
+    assert check_faultok(cfg) == []
 
 
 # -- kernel registry -----------------------------------------------------------

@@ -7,11 +7,14 @@ import threading
 
 import jax
 import numpy as np
+import pytest
 
 from repro.configs import registry as R
 from repro.core.offload import OffloadEngine, SimTarget
 from repro.models.registry import fns_for
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.faults import ExecutorCrash, FaultPlan, FaultSpec
+from repro.serving.router import ReplicaRouter
 from repro.serving.sampler import greedy
 
 
@@ -59,3 +62,51 @@ def test_engine_executor_named_daemon_and_reaped():
         if t is threading.main_thread():
             continue
         assert t.daemon or not t.name.startswith("Thread-"), t.name
+
+
+def test_crashed_executor_is_reaped_by_stop():
+    """A service-mode executor killed by a fault must still be joined by
+    stop() — the crash surfaces as ExecutorCrash, not a join-timeout —
+    and a double stop() leaves no thread behind and raises nothing."""
+    cfg = R.smoke("qwen2.5-3b")
+    params = fns_for(cfg).init(cfg, jax.random.PRNGKey(0))
+    plan = FaultPlan([FaultSpec("replica.executor", "raise")])
+    eng = ServingEngine(cfg, params, max_len=16, batch_slots=2,
+                        fault_plan=plan)
+    before = {t.ident for t in threading.enumerate()}
+    eng.start()
+    failed = threading.Event()
+    prompt = np.arange(4, dtype=np.int32) % cfg.vocab_size
+    eng.submit(Request(0, prompt, max_new_tokens=2, sampler=greedy()),
+               on_finish=lambda r: failed.set())
+    assert failed.wait(timeout=60.0)
+    with pytest.raises(ExecutorCrash):
+        eng.stop()
+    eng.stop()                                    # idempotent second stop
+    leftovers = [t for t in _workers(before) if t.is_alive()]
+    assert not leftovers, [t.name for t in leftovers]
+
+
+def test_router_rebalance_thread_reaped_after_serve_and_stop():
+    """The rebalance thread is a named daemon while serve() is live and
+    does not outlive it — nor an explicit router.stop() afterwards."""
+    cfg = R.smoke("qwen2.5-3b")
+    params = fns_for(cfg).init(cfg, jax.random.PRNGKey(0))
+    mk = lambda: ServingEngine(cfg, params, max_len=16, batch_slots=2,  # noqa
+                               paged=True)
+    router = ReplicaRouter([mk(), mk()], steal=True, steal_interval_s=0.001)
+    before = {t.ident for t in threading.enumerate()}
+    router._start_stealing()
+    t = next(t for t in _workers(before) if t.name == "router-rebalance")
+    assert t.daemon
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size, size=8)
+                    .astype(np.int32), max_new_tokens=2, sampler=greedy())
+            for i in range(4)]
+    router.serve(reqs)
+    assert all(len(r.output) == 2 for r in reqs)
+    assert not t.is_alive()           # serve()'s finally reaped it
+    router.stop()
+    router.stop()                                 # idempotent
+    leftovers = [t for t in _workers(before) if t.is_alive()]
+    assert not leftovers, [t.name for t in leftovers]
