@@ -31,6 +31,13 @@ tier over the split-phase offload protocol and are restored — not
 recomputed — when a later request (or the victim's resume) needs them;
 `--kv-pool-blocks` shrinks the device pool so the tier actually engages.
 
+`--replica-roles prefill,decode` disaggregates the fleet: prefill-role
+replicas run chunked prefill at full budget (no decode steps contending)
+and sample the first output token at handoff; the finished prompt's KV
+blocks then migrate over the split-phase offload protocol to a
+decode-role replica, which adopts them and decodes with zero prompt
+recompute.  Greedy outputs stay bit-identical to a single mixed replica.
+
 `--inject-faults PLAN` runs the same workload under deterministic chaos
 (`site[:action[:after[:count]]]` specs or `seed=<int>`): a killed replica
 is quarantined and its requests retried on survivors (`--max-retries`),
@@ -41,6 +48,7 @@ DeadlineExceeded and reclaims its KV blocks.
   PYTHONPATH=src python examples/serve_lm.py [--replicas 2] [--no-affinity]
       [--no-steal] [--draft-model qwen2.5-3b] [--spec-k 3] [--no-spec]
       [--host-blocks 32 --kv-pool-blocks 8]
+      [--replica-roles prefill,decode]
       [--inject-faults replica.executor:raise:4 --max-retries 2]
       [--deadline-s 30]
 """
@@ -84,6 +92,12 @@ def main():
     ap.add_argument("--kv-pool-blocks", type=int, default=None,
                     help="device pool size in blocks (shrink it to make "
                          "the host tier earn its keep)")
+    ap.add_argument("--replica-roles", default=None, metavar="R1,R2,...",
+                    help="disaggregated fleet: comma-separated per-replica "
+                         "roles (prefill/decode/mixed, one per --replicas); "
+                         "prefill replicas migrate finished prompts' KV "
+                         "blocks to decode replicas instead of decoding "
+                         "locally")
     ap.add_argument("--prefill-chunk", type=int, default=None, metavar="C",
                     help="prefill prompts in C-token chunks interleaved "
                          "with decode steps (C must be a multiple of the "
@@ -128,12 +142,17 @@ def main():
 
     plan = (FaultPlan.parse(args.inject_faults)
             if args.inject_faults else None)
+    roles = (args.replica_roles.split(",") if args.replica_roles
+             else ["mixed"] * args.replicas)
+    if len(roles) != args.replicas:
+        ap.error(f"--replica-roles names {len(roles)} roles for "
+                 f"--replicas {args.replicas}")
     replicas = [ServingEngine(cfg, params, max_len=24, batch_slots=4,
                               pool_blocks=args.kv_pool_blocks,
                               host_blocks=args.host_blocks,
                               prefill_chunk=args.prefill_chunk,
                               name=f"replica{i}", fault_plan=plan,
-                              **spec_kw)
+                              role=roles[i], **spec_kw)
                 for i in range(args.replicas)]
     if args.replicas == 1:
         stats = replicas[0].serve(reqs)
@@ -155,6 +174,9 @@ def main():
         print(f"tiering: spills={stats.kv_spills}  "
               f"fetches={stats.kv_fetches}  "
               f"host_hits={stats.prefix_hits_host}")
+    if stats.kv_migrations:
+        print(f"disagg: migrations={stats.kv_migrations}  "
+              f"migrated_blocks={stats.migrated_blocks}")
     if stats.slo_miss_rate is not None:
         print(f"slo miss rate {stats.slo_miss_rate:.2f}  "
               f"preemptions {stats.preemptions}  "

@@ -29,15 +29,23 @@ def main(argv: list[str] | None = None) -> int:
                         help="write the findings artifact here")
     parser.add_argument("--update-baseline", action="store_true",
                         help=f"rewrite {BASELINE_NAME} to suppress every "
-                             f"current finding (triage notes are TODO)")
+                             f"current finding (requires --note)")
+    parser.add_argument("--note", metavar="TEXT",
+                        help="triage justification stamped on every new "
+                             "baseline entry; required with "
+                             "--update-baseline")
     args = parser.parse_args(argv)
+
+    if args.update_baseline and not (args.note or "").strip():
+        parser.error("--update-baseline requires --note: every baseline "
+                     "entry is triaged debt and needs a justification")
 
     t0 = time.monotonic()
     cfg = repo_config(args.repo_root)
     findings = run_all(cfg, only=set(args.checker) if args.checker else None)
 
     if args.update_baseline:
-        path = write_baseline(args.repo_root, findings)
+        path = write_baseline(args.repo_root, findings, args.note)
         print(f"wrote {len(findings)} suppression(s) to {path}")
         return 0
 

@@ -43,9 +43,22 @@ def apply_baseline(findings: list[Finding],
     return sorted(set(baseline) - live)
 
 
-def write_baseline(repo_root: Path, findings: list[Finding]) -> Path:
+def write_baseline(repo_root: Path, findings: list[Finding],
+                   note: str) -> Path:
+    """Rewrite the baseline to suppress ``findings``, stamping ``note``
+    as the triage justification on every *new* entry.  Entries that were
+    already in the baseline keep their original note — the justification
+    belongs to the triage that first admitted the debt, not to whoever
+    re-ran the tool later.  An empty note is refused: a debt marker
+    without an owner note is exactly the TODO-stamp anti-pattern this
+    replaces."""
+    note = note.strip()
+    if not note:
+        raise ValueError("baseline entries need a triage note "
+                         "(--note 'why this finding is acceptable debt')")
     path = repo_root / BASELINE_NAME
-    entries = {f.fid: "triaged: TODO justify or fix" for f in findings}
+    old = load_baseline(repo_root)
+    entries = {f.fid: old.get(f.fid, f"triaged: {note}") for f in findings}
     path.write_text(json.dumps({"findings": entries}, indent=2,
                                sort_keys=True) + "\n")
     return path

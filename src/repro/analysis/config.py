@@ -83,12 +83,25 @@ def repo_config(repo_root: Path) -> AnalysisConfig:
             ("KVBlockPool", "host"): "HostTier",
             ("ReplicaTarget", "engine"): "ServingEngine",
             ("KVBlockTarget", "tier"): "HostTier",
+            ("_MigrationAdapter", "engine"): "ServingEngine",
+            ("_MigrationAdapter", "router"): "ReplicaRouter",
         },
         extra_call_edges={
             # pool.on_demote is installed by the tiered engine at
             # construction; _demote_locked invokes it under the pool lock
             ("KVBlockPool", "_demote_locked"):
                 [("ServingEngine", "_on_demote")],
+            # disaggregated migration: the router installs _on_prefilled
+            # on prefill-role engines, so prefill completion calls back
+            # into the router, which submits a migrate payload whose
+            # KVBlockTarget "tier" is a _MigrationAdapter that lands the
+            # blocks via adopt_blocks on the chosen decode replica
+            ("ServingEngine", "_handoff"):
+                [("ReplicaRouter", "_migrate")],
+            ("KVBlockTarget", "execute"):
+                [("_MigrationAdapter", "adopt")],
+            ("_MigrationAdapter", "adopt"):
+                [("ServingEngine", "adopt_blocks")],
         },
         entry_points={
             # ServingEngine state is confined to the executor thread;
@@ -96,13 +109,17 @@ def repo_config(repo_root: Path) -> AnalysisConfig:
             "ServingEngine": {"submit", "_check_fits", "load_snapshot",
                               "load", "start", "stop", "failure",
                               "_raise_failure_once", "_spill_done",
-                              "_kv_fault_hook"},
-            # the rebalance loop runs on the steal thread, and failure
+                              "_kv_fault_hook", "adopt_blocks"},
+            # the rebalance loop runs on the steal thread, failure
             # routing runs on whichever replica thread terminated the
-            # request; dispatch-thread state (the fleet prefix index)
-            # must stay off both
+            # request, and the migration path runs on source executor
+            # threads (_migrate) and the migration worker (_mig_done,
+            # _place_migration); dispatch-thread state (the fleet
+            # prefix index) must stay off all of them
             "ReplicaRouter": {"_rebalance_once", "_steal_loop",
-                              "_heartbeat", "_on_request_failed"},
+                              "_heartbeat", "_on_request_failed",
+                              "_migrate", "_select_decode", "_mig_done",
+                              "_place_migration", "drain_migrations"},
         },
         thread_files=[
             f"{serving}/engine.py",

@@ -230,6 +230,14 @@ class KVBlockTarget(Target):
       ``("fetch", key)`` — load ``key``'s payload (dict of numpy arrays),
           or None if the tier has since evicted it (the engine falls back
           to recompute).
+      ``("migrate", rid, keys, tables, leaves, gens)`` — move one
+          finished prefill's whole block set (per-block leaf dicts in
+          table order, plus the chained prefix digests and source
+          generation tags that make the payload self-describing) to a
+          peer replica via the tier's ``adopt`` hook; result = whatever
+          ``adopt`` returns (None = the receiver declined).  The
+          device->host materialization happens here on the worker, so
+          the source replica's executor never blocks on the copy.
 
     One worker drains the queue FIFO, so a fetch submitted behind its own
     spill always finds the stored payload.
@@ -246,6 +254,11 @@ class KVBlockTarget(Target):
             host = {k: np.asarray(v) for k, v in leaves.items()}
             self.tier.store(key, host)
             return sum(int(a.nbytes) for a in host.values())
+        if staged[0] == "migrate":
+            _, rid, keys, tables, leaves, gens = staged
+            host = [{k: np.asarray(v) for k, v in blk.items()}
+                    for blk in leaves]
+            return self.tier.adopt(rid, keys, tables, host, gens)
         _, key = staged
         return self.tier.load(key)
 

@@ -22,6 +22,11 @@ Example:
   # verifies them in one batched pass — greedy outputs stay bit-identical:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
       --draft-model qwen2.5-3b --spec-k 3
+  # disaggregated fleet: one replica prefills at full chunk budget and
+  # migrates each finished prompt's KV blocks to the other, which only
+  # decodes — zero prompt recompute on the decode side:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
+      --replicas 2 --replica-roles prefill,decode --prefill-chunk 32
   # chaos run: kill one of two replicas mid-serve; its requests retry on
   # the survivor (bit-identical greedy regeneration), with per-request
   # deadlines cancelling anything that overstays:
@@ -138,6 +143,12 @@ def main() -> int:
                          "before marking it FAILED; retries restart from "
                          "the bare prompt, so greedy outputs stay "
                          "bit-identical")
+    ap.add_argument("--replica-roles", default=None, metavar="R1,R2,...",
+                    help="disaggregated fleet: comma-separated per-replica "
+                         "roles (prefill/decode/mixed, one per --replicas); "
+                         "prefill-role replicas migrate each finished "
+                         "prompt's KV blocks to a decode-capable replica "
+                         "instead of decoding locally")
     ap.add_argument("--inject-faults", default=None, metavar="PLAN",
                     help="deterministic fault injection for chaos runs: "
                          "comma-separated site[:action[:after[:count]]] "
@@ -200,8 +211,17 @@ def main() -> int:
                                                    jax.random.PRNGKey(1))
         kw.update(draft_cfg=draft_cfg, draft_params=draft_params,
                   spec_k=args.spec_k)
+    roles = (args.replica_roles.split(",") if args.replica_roles
+             else ["mixed"] * args.replicas)
+    if len(roles) != args.replicas:
+        ap.error(f"--replica-roles names {len(roles)} roles for "
+                 f"--replicas {args.replicas}")
+    if args.replicas == 1 and roles != ["mixed"]:
+        ap.error("--replica-roles needs --replicas > 1 (a lone prefill "
+                 "replica has nowhere to migrate blocks)")
     if args.replicas > 1:
-        replicas = [ServingEngine(cfg, params, name=f"replica{i}", **kw)
+        replicas = [ServingEngine(cfg, params, name=f"replica{i}",
+                                  role=roles[i], **kw)
                     for i in range(args.replicas)]
         router = ReplicaRouter(replicas, affinity=not args.no_affinity,
                                steal=not args.no_steal,
@@ -237,6 +257,9 @@ def main() -> int:
         print(f"spec: accept_rate={stats.accept_rate:.2f}  "
               f"verify_steps={stats.verify_steps}  "
               f"decode_steps={stats.decode_steps}  steps/token={spt}")
+    if stats.kv_migrations:
+        print(f"disagg: migrations={stats.kv_migrations}  "
+              f"migrated_blocks={stats.migrated_blocks}")
     if stats.kv_spills or stats.kv_fetches:
         hit = (f"{stats.kv_hit_rate:.2f}"
                if stats.kv_hit_rate is not None else "n/a")

@@ -116,6 +116,8 @@ MERGE_RULES: dict[str, str] = {
     "replica_failures": "sum",
     "shed_rejections": "sum",
     "faults_injected": "sum",
+    "kv_migrations": "sum",
+    "migrated_blocks": "sum",
     "ttft": "extend",
     "tpot": "extend",
     "decode_gaps": "extend",
@@ -176,6 +178,8 @@ class ServeStats:
     replica_failures: int = 0           # request failures charged to replicas
     shed_rejections: int = 0            # admissions refused (queue too deep)
     faults_injected: int = 0            # fault-plan probes that fired here
+    kv_migrations: int = 0              # disagg: prefills adopted from a peer
+    migrated_blocks: int = 0            # disagg: pool blocks landed via adopt
     ttft: list = field(default_factory=list)    # per-request seconds
     tpot: list = field(default_factory=list)    # per-request seconds/token
     decode_gaps: list = field(default_factory=list)  # s between decode steps
@@ -308,6 +312,8 @@ class WindowBase(NamedTuple):
     requests_failed: int = 0    # fault-tolerance lifetime counters
     shed_rejections: int = 0
     faults_injected: int = 0
+    kv_migrations: int = 0      # disagg lifetime counters (0 when mixed)
+    migrated_blocks: int = 0
 
 
 def prefix_digests(tokens: np.ndarray, block_size: int) -> list[bytes]:
@@ -370,6 +376,19 @@ class _PrefillJob:
     fetched_ok: set = field(default_factory=set)   # logical blocks restored
     seed_base: int = 0          # device-shared leading blocks (fetch run
                                 # extends the seed window past this)
+
+
+@dataclass
+class _Adoption:
+    """One migrated prefill staged for executor-side landing: the payload
+    :meth:`ServingEngine.adopt_blocks` parks (on the migration worker)
+    until :meth:`ServingEngine._admit_paged` pops it at admission and
+    lands the rows into freshly allocated pool blocks."""
+    req: Request
+    keys: list                  # chained prefix digests, full blocks only
+    tokens: np.ndarray          # the prefilled token stream (the prompt)
+    blocks: list                # per-block host leaf dicts, table order
+    last: np.ndarray            # final-chunk next-token logits (V,)
 
 
 class _Drafter:
@@ -533,7 +552,8 @@ class ServingEngine:
                  seeded_prefill: bool = True, host_blocks: int = 0,
                  draft_cfg=None, draft_params=None, spec_k: int = 3,
                  name: str = "", fault_plan: FaultPlan | None = None,
-                 shed_queue_depth: int | None = None):
+                 shed_queue_depth: int | None = None,
+                 role: str = "mixed"):
         self.cfg = cfg
         self.params = params
         # fault tolerance: the replica's name (fault-plan replica filter +
@@ -543,6 +563,25 @@ class ServingEngine:
         self.name = name
         self.fault_plan = fault_plan
         self.shed_queue_depth = shed_queue_depth
+        # disaggregated fleet role.  "mixed" (default) serves both phases;
+        # "prefill" runs chunked prefill only and hands each finished
+        # prompt's KV blocks to the router's migration channel via the
+        # _on_prefilled hook; "decode" is a normal engine the router
+        # simply never routes fresh prompts to (adopted requests land via
+        # adopt_blocks).  Roles are *policy*: a prefill replica without a
+        # hook installed (standalone use) decodes its own requests.
+        if role not in ("prefill", "decode", "mixed"):
+            raise ValueError(f"role={role!r} must be 'prefill', 'decode' "
+                             f"or 'mixed'")
+        self.role = role
+        # router-installed migration hook: called on the executor thread
+        # with (req, keys, block_ids, gens, leaves, tokens, last) when a
+        # prefill-role replica finishes a prompt
+        self._on_prefilled = None
+        # rid -> staged adoption payload, written by adopt_blocks on the
+        # migration worker and consumed by _admit_paged on the executor
+        self._adoptions: dict = {}               # guarded-by: self._adopt_lock
+        self._adopt_lock = threading.Lock()
         self.fns = fns_for(cfg)
         self.max_len = max_len
         self.slots = batch_slots
@@ -553,6 +592,9 @@ class ServingEngine:
             raise ValueError(f"family {cfg.family!r} has no paged-KV "
                              f"support (ModelFns.init_paged_state is None)")
         self.paged = paged
+        if self.role != "mixed" and not paged:
+            raise ValueError("disaggregated roles need the paged KV engine "
+                             "(migration moves pool blocks)")
         # speculative decoding: on iff a drafter model is given.  Greedy
         # slots then run a multi-token verify step instead of the vanilla
         # decode; non-greedy slots (and spec-off engines) are untouched.
@@ -605,6 +647,10 @@ class ServingEngine:
         # slot -> in-progress chunked prefill (insertion order = service
         # order); drained by the executor under the prefill_chunk budget
         self._prefilling: dict[int, _PrefillJob] = {}  # owned-by: executor-thread
+        # slot -> first output token sampled at a disaggregated handoff
+        # but not yet fed through *this* pool: the adopting decode step
+        # feeds it forward without re-sampling or re-delivering it
+        self._adopted_feed: dict[int, int] = {}  # owned-by: executor-thread
         self._last_decode_end: float | None = None  # owned-by: executor-thread
         self._gaps_dropped = 0  # owned-by: executor-thread; decode_gaps entries trimmed
         if paged and getattr(cfg, "sliding_window", 0):
@@ -770,6 +816,12 @@ class ServingEngine:
 
     def _finish_failed(self, req: Request, exc: BaseException) -> None:
         """Move ``req`` to its terminal FAILED state and notify."""
+        with self._adopt_lock:
+            # a staged-but-never-landed adoption (deadline/crash before
+            # admission) must not pin its host payload forever
+            staged = self._adoptions.get(req.rid)
+            if staged is not None and staged.req is req:
+                del self._adoptions[req.rid]
         req.state = RequestState.FAILED
         req.error = exc
         req.finished_at = time.monotonic()
@@ -1007,6 +1059,37 @@ class ServingEngine:
                 jnp.asarray(host).astype(arr.dtype))
         self._state = self._state._replace(**repl)
 
+    def _write_blocks(self, bids: list[int], payloads: list[dict]) -> None:
+        """Batched :meth:`_write_block`: land ``payloads[i]`` into pool
+        block ``bids[i]`` with one functional scatter per state leaf.
+        An adopted long prompt arrives as dozens of blocks; writing them
+        one dispatch at a time would stall the decode loop for the whole
+        batch."""
+        if not bids:
+            return
+        # pad to a pow-2 bucket: the scatter compiles once per distinct
+        # index-count shape, so unbucketed writes would pay a fresh
+        # compile (hundreds of ms — a decode-cadence outlier) for every
+        # new adoption size; bucketing caps the shape set at
+        # log2(blocks) entries, all warmable.  The pad rows repeat the
+        # last (id, payload) pair — duplicate scatter indices carrying
+        # identical values land deterministically.
+        n = len(bids)
+        cap = 1
+        while cap < n:
+            cap <<= 1
+        bids = bids + [bids[-1]] * (cap - n)
+        payloads = payloads + [payloads[-1]] * (cap - n)
+        idx = jnp.asarray(bids, dtype=jnp.int32)
+        repl = {}
+        for name in payloads[0]:
+            arr = getattr(self._state, name)
+            stacked = np.stack([np.asarray(p[name]) for p in payloads],
+                               axis=1)
+            repl[name] = arr.at[:, idx].set(
+                jnp.asarray(stacked).astype(arr.dtype))
+        self._state = self._state._replace(**repl)
+
     def _spill_block(self, bid: int, key: bytes) -> bool:
         """Queue one block's device->host copy under ``key`` unless the
         tier already holds (or is receiving) it; returns True if queued.
@@ -1148,7 +1231,22 @@ class ServingEngine:
         The decode-state table row stays at the trash block until the
         prefill completes: the in-flight batched decode keeps writing
         this slot's (discarded) row, and must not corrupt half-filled
-        prompt blocks."""
+        prompt blocks.
+
+        A request whose KV arrived by migration skips prefill entirely:
+        its staged adoption payload lands here instead.  A *preempted*
+        adopted request finds its payload already consumed and falls
+        through to the normal recompute path — roles are placement
+        policy, not an engine capability split."""
+        with self._adopt_lock:
+            adoption = self._adoptions.get(req.rid)
+            if adoption is not None and adoption.req is req:
+                del self._adoptions[req.rid]
+            else:
+                adoption = None
+        if adoption is not None:
+            self._adopt_slot(slot, req, adoption)
+            return
         toks = req.prefill_tokens
         P = len(toks)
         nb = self.pool.blocks_for(P)
@@ -1305,11 +1403,26 @@ class ServingEngine:
             jnp.asarray([start], jnp.int32),
             jnp.asarray([start + real], jnp.int32),
             jnp.int32(real - 1))
+        if self.role == "prefill":
+            # full-budget chunks dispatch back-to-back, and on a shared
+            # backend (co-located replicas in tests and benches) an
+            # unforced run piles tens of ms of queued compute that a
+            # decode replica's next op then waits behind — force each
+            # chunk so the convoy never forms.  A dedicated-device
+            # prefill replica loses nothing: its chunks are serially
+            # dependent through the KV state anyway.
+            jax.block_until_ready(last)
         self.totals.prefill_tokens_computed += real
         job.pos = start + real
         if job.pos == P:                     # logits of the last real token
             del self._prefilling[slot]
             self._tables[slot] = 0
+            if self.role == "prefill" and self._on_prefilled is not None:
+                # disaggregated fleet: this replica's work ends at the
+                # last prompt token — hand the blocks to the router's
+                # migration channel instead of entering decode
+                self._handoff(slot, job, req, np.asarray(last[0]))
+                return real
             if slot in self._spec_on:
                 # speculative slots never join the batched vanilla decode:
                 # their batched-state table row stays at trash (the decode
@@ -1335,6 +1448,118 @@ class ServingEngine:
             self.scheduler.notify_capacity()
         return real
 
+    def _handoff(self, slot: int, job: _PrefillJob, req: Request,
+                 last1: np.ndarray) -> None:
+        """Disaggregated prefill completion (executor thread): export-pin
+        the prompt's blocks, capture their device slices, release the
+        slot, and fire the router's migration hook.
+
+        Ordering is what makes the in-flight payload safe against
+        free/realloc: :meth:`KVBlockPool.export_blocks` adds a holder per
+        block *before* ``release()`` drops the request's holders, so the
+        ids stay allocated (and their generations frozen) until the
+        router's completion hook frees the export — and the slices
+        captured here are immutable jax arrays, so even post-release
+        writes to the pool leave them reading the pre-release buffers
+        (the same trick the tiered spill path relies on)."""
+        # Real disaggregation returns the first token from the prefill
+        # node: the final-chunk logits are already in hand, so sample and
+        # deliver it here — migration latency leaves the TTFT path
+        # entirely.  The adopting replica feeds this token forward
+        # without re-sampling it (bit-identical: same logits, and the
+        # sampler's stream advances exactly once).
+        tok = int(req.sampler.sample(last1[None])[0])
+        req.output.append(tok)
+        if req.first_token_at is None:
+            req.first_token_at = time.monotonic()
+        self.totals.tokens += 1
+        if len(req.output) >= req.max_new_tokens:
+            # single-token request: DONE at handoff — nothing to migrate
+            if self.prefix_sharing:
+                self._register_prefix(job.keys, req)
+            self._spec_on.discard(slot)
+            req.state = RequestState.DONE
+            req.finished_at = time.monotonic()
+            self.scheduler.release(slot)
+            self._retire_slot(slot)
+            self.scheduler.notify_capacity()
+            if req.on_finish is not None:
+                req.on_finish(req)
+            return
+        ids = list(req.block_ids)
+        gens = self.pool.export_blocks(ids)
+        leaves = [self._read_block_slices(b) for b in ids]
+        if self.prefix_sharing:
+            # publish locally too: a later prompt sharing this prefix
+            # prefills cache-seeded on this replica
+            self._register_prefix(job.keys, req)
+        self._spec_on.discard(slot)   # drafter was never seeded: the slot
+        #                               retires before its decode begins
+        req.state = RequestState.PREFILLED
+        self.scheduler.release(slot)  # request holders drop; exports stay
+        self._retire_slot(slot)
+        self.scheduler.notify_capacity()   # slot + blocks just came back
+        self._on_prefilled(req, list(job.keys), ids, gens, leaves,
+                           np.asarray(job.tokens), last1)
+
+    def _adopt_slot(self, slot: int, req: Request,
+                    adoption: _Adoption) -> None:
+        """Land a migrated prefill straight into this pool (executor
+        thread): allocate blocks from the admission reservation, write
+        the payload rows functionally (the in-flight decode step keeps
+        reading the old buffers, exactly like a prefill chunk write),
+        and enter DECODE *after* the handoff-sampled first token — the
+        next decode step feeds that token forward instead of sampling,
+        so greedy outputs stay bit-identical to a local prefill and no
+        sampler stream advances twice."""
+        tokens = adoption.tokens
+        P = len(tokens)
+        nb = self.pool.blocks_for(P)
+        own = self.pool.alloc_reserved(nb)
+        req.block_ids = own
+        req.shared_blocks = 0
+        req.blocks_reserved -= nb       # remaining = decode-growth tail
+        # generation-safe: `own` was alloc_reserved just above — private
+        # refcount-1 blocks no other slot can reference, so no generation
+        # check is needed before writing
+        self._write_blocks(own, adoption.blocks)
+        self._tables[slot] = 0
+        if slot in self._spec_on:
+            # same contract as prefill completion: speculative slots stay
+            # off the batched vanilla decode; the drafter re-prefills the
+            # migrated history through its own mirror (drafter compute,
+            # not target prompt recompute)
+            self._lengths[slot] = 0
+            self._drafter.seed(slot, tokens,
+                               len(req.prompt) + req.max_new_tokens
+                               + self.spec_k)
+            # the verify invariant wants ``_last`` = distribution after
+            # the committed stream with every committed row written; the
+            # handoff-sampled token has neither, so hand it back to the
+            # verify pass as its pending ``t_0`` (no re-sample — a
+            # stochastic sampler's stream must not advance twice) and
+            # pre-compensate the commit's recount of a token the handoff
+            # already delivered
+            self._adopted_feed[slot] = req.output.pop()
+            self.totals.tokens -= 1
+        else:
+            self._tables[slot, :nb] = own
+            self._lengths[slot] = P
+            # the handoff already sampled and delivered ``output[-1]``;
+            # the next decode step feeds it forward (writing KV row P and
+            # producing next-token logits) without re-sampling it
+            self._adopted_feed[slot] = req.output[-1]
+        self._set_last(slot, adoption.last)
+        if self.prefix_sharing:
+            self._register_prefix(adoption.keys, req)
+        self.totals.kv_migrations += 1
+        self.totals.migrated_blocks += nb
+        # the whole prompt arrives precomputed: total rises, computed does
+        # not — prefill_compute_frac is the zero-recompute evidence
+        self.totals.prefill_tokens_total += P
+        req.state = RequestState.DECODE
+        self.scheduler.notify_capacity()
+
     def _set_last(self, slot: int, last1: np.ndarray) -> None:
         """Store one slot's next-token logits (lazy-allocating the batch
         buffer, and un-aliasing it when it is a read-only view of a jax
@@ -1352,6 +1577,9 @@ class ServingEngine:
         (discarded) row for this slot every step."""
         self._tables[slot] = 0
         self._lengths[slot] = 0
+        # a handoff-sampled token pending for a slot that dies before its
+        # feed step must not leak into the slot's next occupant
+        self._adopted_feed.pop(slot, None)
 
     def _grow_paged(self, still: list[tuple[int, Request]]) -> None:
         """Allocate the next block for any request whose write position
@@ -1443,9 +1671,13 @@ class ServingEngine:
             # the decode step — a long prompt prefills interleaved with
             # decodes instead of stalling them for its whole length.  The
             # remaining budget caps each chunk, so finishing one job and
-            # starting the next can never overspend the step.
+            # starting the next can never overspend the step.  A
+            # prefill-role replica has no decode slots to protect: it
+            # keeps the chunk-sized jit buckets but runs them
+            # back-to-back at full budget instead of one per step.
             self._drain_tier(timeout=0.0)    # commit landed fetches first
-            budget = self.prefill_chunk
+            budget = (self.prefill_chunk if self.role != "prefill"
+                      else (1 << 30))
             while budget >= self.block_size:
                 # oldest admission first, skipping slots whose blocks are
                 # still inbound from the host tier (skip-while-inbound:
@@ -1482,11 +1714,13 @@ class ServingEngine:
         if not active:
             return True
 
-        toks = self._sample_active(active)
+        toks = self._sample_active(
+            [(s, r) for s, r in active if s not in self._adopted_feed])
         now = time.monotonic()
         feed = np.zeros((self.slots,), np.int32)
         for slot, req in active:
-            tok = toks[slot]
+            pend = self._adopted_feed.pop(slot, None)
+            tok = toks[slot] if pend is None else pend
             try:
                 if self._fault("engine.decode", rid=req.rid) == "drop":
                     raise FaultError("engine.decode",
@@ -1497,6 +1731,12 @@ class ServingEngine:
                 self._fail_slot(slot, req, e)
                 continue
             feed[slot] = tok
+            if pend is not None:
+                # adopted slot: this token was sampled and delivered at
+                # the prefill replica's handoff — feed it forward, but do
+                # not deliver it twice (it cannot be the request's final
+                # token either: single-token requests finish at handoff)
+                continue
             if req.first_token_at is None:
                 req.first_token_at = now
             req.output.append(tok)
@@ -1575,7 +1815,12 @@ class ServingEngine:
         jobs: list[tuple[int, list[int]]] = []
         for slot, req in spec:
             P = len(req.prompt)
-            t0 = int(req.sampler.sample(self._last[slot][None])[0])
+            # an adopted slot's t_0 was already sampled (and delivered)
+            # at the prefill replica's handoff — committing it below
+            # restores the verify invariant without re-sampling
+            pend = self._adopted_feed.pop(slot, None)
+            t0 = (pend if pend is not None
+                  else int(req.sampler.sample(self._last[slot][None])[0]))
             pending[slot] = t0
             dlen = self._drafter.length(slot)
             gap = [int(t) for t in req.output[dlen - P:]]
@@ -1695,7 +1940,9 @@ class ServingEngine:
             spill_bytes=self.totals.spill_bytes,
             requests_failed=self.totals.requests_failed,
             shed_rejections=self.totals.shed_rejections,
-            faults_injected=self.totals.faults_injected)
+            faults_injected=self.totals.faults_injected,
+            kv_migrations=self.totals.kv_migrations,
+            migrated_blocks=self.totals.migrated_blocks)
 
     def collect_window(self, base: "WindowBase", requests: list[Request],
                        wall_s: float) -> ServeStats:
@@ -1733,6 +1980,10 @@ class ServingEngine:
                                  - base.shed_rejections)
         stats.faults_injected = (self.totals.faults_injected
                                  - base.faults_injected)
+        stats.kv_migrations = (self.totals.kv_migrations
+                               - base.kv_migrations)
+        stats.migrated_blocks = (self.totals.migrated_blocks
+                                 - base.migrated_blocks)
         if stats.prefix_lookups:
             stats.kv_hit_rate = ((stats.prefix_shared_blocks
                                   + stats.prefix_hits_host)
@@ -1815,9 +2066,49 @@ class ServingEngine:
                     f"queue depth {depth} >= shed threshold "
                     f"{self.shed_queue_depth}")
         self._check_fits(req)
+        req.replica = self.name
         if on_finish is not None:
             req.on_finish = on_finish
         self.scheduler.submit(req)
+
+    def adopt_blocks(self, req: Request, keys: list, tokens: np.ndarray,
+                     blocks: list, last: np.ndarray) -> int:
+        """Thread-safe admission of a *migrated* prefill — the receiver
+        half of the disaggregated handoff, called on the migration
+        worker.  Stages the payload and queues the request; the executor
+        lands the rows into freshly allocated pool blocks at admission
+        (:meth:`_adopt_slot`) and enters DECODE without recomputing a
+        single prompt token.
+
+        Unlike :meth:`submit` there is no shed check: the prefill
+        compute is already spent, so shedding here would waste it (the
+        request was shed-checked at its original admission).  Raises
+        ``CapacityError`` / :class:`ExecutorCrash` like submit; the
+        migration completion hook turns either into the
+        retry-from-bare-prompt path.  Returns the number of blocks
+        staged — the migrate payload's success result."""
+        req.replica = self.name    # before any raise: failures inside the
+        #                            adopt are charged to *this* replica
+        crash = self.failure
+        if crash is not None:
+            raise ExecutorCrash(
+                "executor is dead; adopt refused") from crash
+        self._check_fits(req)
+        # the seq was minted by the source scheduler's heap; this pool's
+        # heap must assign its own tiebreak (cross-scheduler seqs never
+        # compare), exactly like a stolen request
+        req.arrival_seq = None
+        with self._adopt_lock:
+            self._adoptions[req.rid] = _Adoption(
+                req=req, keys=keys, tokens=tokens, blocks=blocks,
+                last=last)
+        try:
+            self.scheduler.submit(req)
+        except BaseException:
+            with self._adopt_lock:
+                self._adoptions.pop(req.rid, None)
+            raise
+        return len(blocks)
 
     def stop(self, timeout: float = 10.0, *,
              raise_failure: bool = True) -> None:

@@ -30,6 +30,9 @@ Probe sites (the closed vocabulary, validated at plan construction):
                         so a raise would be a crash, not a fault)
   ``kv.fetch``          tiered-KV fetch transfer (drop/delay only;
                         a drop exercises the recompute fallback)
+  ``kv.migrate``        prefill→decode KV-block migration transfer
+                        (drop/delay only; a drop loses the handoff and
+                        exercises the retry-from-bare-prompt path)
   ``replica.executor``  top of one executor step — a raise here kills
                         the whole replica (the crash-capture path)
 
@@ -72,6 +75,7 @@ SITES = (
     "engine.decode",
     "kv.spill",
     "kv.fetch",
+    "kv.migrate",
     "replica.executor",
 )
 
@@ -79,7 +83,7 @@ ACTIONS = ("raise", "drop", "delay")
 
 # transfer sites run under pool-adjacent state where a raise would be an
 # engine crash rather than an isolable per-request fault
-_NO_RAISE_SITES = ("kv.spill", "kv.fetch")
+_NO_RAISE_SITES = ("kv.spill", "kv.fetch", "kv.migrate")
 
 
 @dataclass

@@ -33,6 +33,19 @@ the *policy* deciding which replica gets a request changed:
     a steal racing a deadline reissue safe: whichever copy finishes first
     is the result, the other is discarded on completion.
 
+  * **disaggregated prefill/decode** — replicas constructed with
+    ``role="prefill"`` run chunked prefill at full budget with no decode
+    slots contending; on completion the prompt's KV blocks *migrate* to
+    the best-placed decode-capable replica as a
+    ``("migrate", rid, keys, tables, leaves, gens)`` payload on a
+    dedicated split-phase offload channel, and the receiver adopts them
+    via :meth:`ServingEngine.adopt_blocks` — entering DECODE without
+    recomputing a single prompt token.  Latency-bound decode and
+    throughput-bound prefill stop fighting for the same slots and
+    blocks; a failed migration (the ``kv.migrate`` fault site) releases
+    the source's export pins and retries from the bare prompt through
+    the same bounded retry path as any other failure.
+
 The router is also the fleet's fault boundary (a sub-1W fleet fails one
 chip at a time, by design): it tracks per-replica health
 (HEALTHY -> DEGRADED -> DEAD), quarantines dead replicas out of
@@ -55,9 +68,11 @@ from dataclasses import dataclass
 from itertools import islice
 from typing import Callable
 
-from repro.core.offload import OffloadEngine, Target, WorkError, WorkItem
+from repro.core.offload import (KVBlockTarget, OffloadEngine, Target,
+                                WorkError, WorkItem)
 from repro.serving.engine import ServeStats, ServingEngine, prefix_digests
-from repro.serving.faults import DeadlineExceeded, ExecutorCrash, ShedError
+from repro.serving.faults import (DeadlineExceeded, ExecutorCrash,
+                                  FaultError, ShedError)
 from repro.serving.kv_pool import CapacityError
 from repro.serving.scheduler import (LoadSnapshot, Request, RequestState)
 
@@ -111,9 +126,14 @@ class ReplicaTarget(Target):
         item always resolves — retried elsewhere or typed-FAILED.  Raises
         when this replica refuses admission (dead, shedding, capacity)."""
         def done(r: Request, item: WorkItem = item) -> None:
+            # a disaggregated request finishes (or fails) on whichever
+            # replica *adopted* it, not the one this closure dispatched
+            # to — r.replica follows the request, so failures are charged
+            # to the engine that actually terminated it
             if (r.state is RequestState.FAILED
                     and self.fail_handler is not None
-                    and self.fail_handler(item, r, self.name)):
+                    and self.fail_handler(item, r,
+                                          r.replica or self.name)):
                 return
             item.complete(r, self.name)
         self.engine.submit(req, on_finish=done)
@@ -149,6 +169,58 @@ class RouterStats:
     replica_failures: int = 0   # replicas quarantined DEAD (crashed)
     rebalance_errors: int = 0   # rebalance ticks that raised (and were
     #                             contained; serve() re-surfaces the last)
+    migrations: int = 0         # disagg: prefills adopted by a decode peer
+    migration_failures: int = 0  # disagg: migrations dropped/refused (the
+    #                              request re-enters the retry path)
+
+
+@dataclass
+class _Migration:
+    """One in-flight prefill→decode KV migration.  The offload payload
+    stays the documented self-describing 6-tuple
+    (``("migrate", rid, keys, tables, leaves, gens)``); everything the
+    payload must *not* carry across the core layer — the live request
+    object, its token stream, the final-chunk logits, and the source
+    pool whose export holds pin the blocks — rides here, keyed by the
+    identity of the payload's ``tables`` list (unique per migration and
+    kept alive by this record, so the key cannot be reused mid-flight)."""
+    req: Request
+    tokens: object              # np.ndarray prompt stream for the receiver
+    last: object                # np.ndarray final-chunk logits (V,)
+    src: ServingEngine          # holds the export pins until completion
+    export_ids: list            # pinned source block ids, table order
+    tables: list                # the payload's tables list (the dict key)
+    dest: int                   # replica index chosen at handoff
+
+
+class _MigrationAdapter:
+    """Duck-typed 'tier' a :class:`~repro.core.offload.KVBlockTarget`
+    drives for the migrate payload family: ``adopt`` lands one migrated
+    prefill on its decode replica via
+    :meth:`ServingEngine.adopt_blocks`.  Before admitting, it checks the
+    generation evidence the export holds promise — ``block_live`` going
+    False for an exported block would mean the captured rows' id was
+    freed and re-allocated mid-flight, which the hold exists to prevent,
+    so a failure here is a broken invariant, not a race to tolerate."""
+
+    name = "migration"
+
+    def __init__(self, router: "ReplicaRouter", engine: ServingEngine):
+        self.router = router
+        self.engine = engine
+
+    def adopt(self, rid, keys, tables, blocks, gens):
+        with self.router._mig_lock:
+            rec = self.router._mig_records.get(id(tables))
+        if rec is None:          # record reaped by a concurrent completion
+            return None          # (first-wins: this copy lost)
+        for bid, gen in zip(rec.export_ids, gens):
+            if not rec.src.pool.block_live(bid, gen):
+                raise RuntimeError(
+                    f"migration of request {rid}: exported block {bid} no "
+                    f"longer holds generation {gen} — export pin broken")
+        return self.engine.adopt_blocks(rec.req, keys, rec.tokens, blocks,
+                                        rec.last)
 
 
 class ReplicaRouter:
@@ -229,6 +301,72 @@ class ReplicaRouter:
         self._prefix_cap = prefix_index_cap
         self._steal_stop = threading.Event()
         self._steal_thread: threading.Thread | None = None
+        # engine names (stamped on requests for failure attribution) may
+        # differ from target names; resolve both in the failure path
+        self._engine_index = {
+            name: i for i, e in enumerate(replicas)
+            if (name := getattr(e, "name", None))}
+        # disaggregated fleet: prefill-role replicas hand finished
+        # prompts to the migration channel; decode-capable replicas
+        # (role decode/mixed) adopt them.  Roles are placement policy —
+        # any replica can still run either phase if asked.
+        roles = [getattr(e, "role", "mixed") for e in replicas]
+        self._prefill_set = frozenset(
+            i for i, r in enumerate(roles) if r == "prefill")
+        self._prefill_capable = frozenset(
+            i for i, r in enumerate(roles) if r != "decode")
+        self._decode_capable = [i for i, r in enumerate(roles)
+                                if r != "prefill"]
+        self.disaggregated = bool(self._prefill_set)
+        self._mig_io = None
+        if self.disaggregated:
+            if not self._decode_capable:
+                raise ValueError(
+                    "a disaggregated fleet needs at least one decode-"
+                    "capable (role='decode' or 'mixed') replica to adopt "
+                    "migrated prefills")
+            if not paged:
+                raise ValueError("disaggregated serving needs paged KV on "
+                                 "every replica (migration moves pool "
+                                 "blocks)")
+            if self.block_size is None:
+                raise ValueError("KV migration needs one block size "
+                                 "fleet-wide (blocks land id-for-id in "
+                                 "the receiver's pool)")
+            dtypes = {e.cache_dtype for e in replicas}
+            if len(dtypes) > 1:
+                raise ValueError(
+                    f"KV migration needs one cache dtype fleet-wide — "
+                    f"adopt casts rows on write, which would silently "
+                    f"corrupt quantized scales across {sorted(dtypes)}")
+            self._mig_lock = threading.Lock()
+            self._mig_records: dict[int, _Migration] = {}  # guarded-by: self._mig_lock
+            self._mig_pending = 0                          # guarded-by: self._mig_lock
+            # one migrate target per decode-capable replica; _place_migration
+            # routes each payload to the destination its record chose
+            self._mig_target_index: dict[int, int] = {}
+            mig_targets = []
+            for k in self._decode_capable:
+                e = self.replicas[k]
+                tgt = KVBlockTarget(_MigrationAdapter(self, e),
+                                    name=f"migrate-{k}")
+                if e.fault_plan is not None:
+                    # kv.migrate probe fires on the migration worker,
+                    # charged to the *destination* engine's plan filters
+                    tgt.fault_hook = (
+                        lambda item, e=e:
+                        e._fault("kv.migrate",
+                                 rid=item.payload[1]) == "drop")
+                self._mig_target_index[k] = len(mig_targets)
+                mig_targets.append(tgt)
+            self._mig_io = OffloadEngine(mig_targets,
+                                         scheduler=self._place_migration)
+            self._mig_io.__enter__()       # daemon workers; router-lifetime
+            for i in self._prefill_set:
+                self.replicas[i]._on_prefilled = (
+                    lambda req, keys, ids, gens, leaves, tokens, last,
+                    i=i: self._migrate(i, req, keys, ids, gens, leaves,
+                                       tokens, last))
 
     # -- replica health + failure routing --------------------------------------
 
@@ -273,6 +411,8 @@ class ReplicaRouter:
         item's terminal result on False, so a request can be retried or
         failed but never stranded."""
         i = self._target_index.get(name)
+        if i is None:            # disagg attribution stamps engine names
+            i = self._engine_index.get(name)
         if i is not None:
             if (isinstance(failed.error, ExecutorCrash)
                     or self.replicas[i].failure is not None):
@@ -293,6 +433,12 @@ class ReplicaRouter:
         retry = failed.clone()
         order = sorted(self._healthy(),
                        key=lambda j: self.replicas[j].load)
+        if self.disaggregated:
+            # restart from the bare prompt on a prefill-capable replica
+            # when one survives (stable sort: load order kept within each
+            # class); a decode-role survivor still works — roles are
+            # policy, not capability
+            order.sort(key=lambda j: j not in self._prefill_capable)
         for j in order:
             if j == i and len(order) > 1:
                 continue
@@ -319,6 +465,11 @@ class ReplicaRouter:
         lazily, on fallback to the load score, so dispatch never pays
         R-1 wasted scheduler-lock rounds per hit."""
         healthy = set(self._healthy())
+        if self.disaggregated and healthy & self._prefill_capable:
+            # fresh prompts go to prefill-capable replicas; decode-role
+            # replicas receive work only by migration (or, below, as the
+            # last survivors of a fleet-wide failure)
+            healthy &= self._prefill_capable
         digests = (prefix_digests(req.prefill_tokens, self.block_size)
                    if self.affinity else [])
         if digests:
@@ -391,6 +542,124 @@ class ReplicaRouter:
     def _place(self, targets: list[Target], payload: Request) -> Target:
         return targets[self._select(payload)]
 
+    # -- KV migration (disaggregated prefill -> decode handoff) ----------------
+
+    def _select_decode(self, req: Request) -> int:
+        """Decode-side admission control: the healthy decode-capable
+        replica best placed to adopt ``req`` — same fits-now / queued-
+        tokens / free-blocks score as fresh placement, restricted to the
+        adopting half of the fleet.  Raises when nobody can adopt (the
+        caller fails the request into the bounded retry path)."""
+        healthy = set(self._healthy())
+        pool = [i for i in self._decode_capable if i in healthy]
+        if not pool:
+            raise RuntimeError(
+                f"request {req.rid}: no healthy decode-capable replica "
+                f"left to adopt the migrated KV blocks")
+        snaps = {i: self.replicas[i].load_snapshot() for i in pool}
+        return min(pool, key=lambda i: self._score(i, snaps[i], req))
+
+    def _migrate(self, src_i: int, req: Request, keys: list, ids: list,
+                 gens: list, leaves: list, tokens, last) -> None:
+        """Prefill-completion hook (runs on the *source* replica's
+        executor thread): pick the adopting replica, record the in-flight
+        migration, and submit the self-describing payload to the
+        migration channel.  The source's export holds on ``ids`` stay
+        live until :meth:`_mig_done` releases them, whatever happens to
+        the transfer."""
+        src = self.replicas[src_i]
+        try:
+            dest = self._select_decode(req)
+        except Exception as e:  # noqa: BLE001 — nobody can adopt: release
+            # the exports and fail the request into the retry path (a
+            # mixed survivor may still serve it end-to-end)
+            # generation-safe: this free only drops the +1 export pin
+            # taken by export_blocks moments ago on this same thread;
+            # it cannot recycle blocks another holder still reads
+            src.pool.free(ids)
+            with self._stats_lock:
+                self.stats.migration_failures += 1
+            req.error = e
+            req.state = RequestState.FAILED
+            req.finished_at = time.monotonic()
+            if req.on_finish is not None:
+                req.on_finish(req)
+            return
+        tables = list(ids)
+        rec = _Migration(req=req, tokens=tokens, last=last, src=src,
+                         export_ids=ids, tables=tables, dest=dest)
+        with self._mig_lock:
+            self._mig_records[id(tables)] = rec
+            self._mig_pending += 1
+        self._mig_io.submit(("migrate", req.rid, keys, tables, leaves,
+                             gens), on_done=self._mig_done)
+
+    def _place_migration(self, targets: list[Target], payload) -> Target:
+        with self._mig_lock:
+            rec = self._mig_records[id(payload[3])]
+        return targets[self._mig_target_index[rec.dest]]
+
+    def _mig_done(self, item: WorkItem) -> None:
+        """Migration completion (runs on the migration worker): release
+        the source export pins, then either count the success or fail the
+        request into the bounded bare-prompt retry path.  Every outcome —
+        adopted, dropped by a kv.migrate fault, refused by a dead or full
+        receiver — flows through here exactly once, so the export pins
+        can never leak and the request can never strand."""
+        with self._mig_lock:
+            rec = self._mig_records.pop(id(item.payload[3]), None)
+            self._mig_pending -= 1
+        if rec is None:
+            return
+        # success or failure, the source's part is over: the receiver
+        # owns fresh copies (or nothing arrived).  Cross-thread free is
+        # safe — free() never invokes on_demote, and index-held blocks
+        # just turn demotable.
+        # generation-safe: this free drops only the +1 export pin from
+        # export_blocks; the receiver copied the rows into its own pool
+        # before complete() fired, so nothing still reads these blocks
+        rec.src.pool.free(rec.export_ids)
+        result = item.result
+        if result is not None and not isinstance(result, WorkError):
+            with self._stats_lock:
+                self.stats.migrations += 1
+            return
+        with self._stats_lock:
+            self.stats.migration_failures += 1
+        req = rec.req
+        if isinstance(result, WorkError):
+            # adopt_blocks raised (dead/full receiver); req.replica was
+            # stamped with the receiver's name, so the failure is charged
+            # where it happened
+            err = result.error
+        else:
+            # an injected kv.migrate drop: the payload vanished in flight
+            err = FaultError("kv.migrate",
+                             f"migration of request {req.rid} dropped "
+                             f"in flight")
+        req.error = err
+        req.state = RequestState.FAILED
+        req.finished_at = time.monotonic()
+        if req.on_finish is not None:
+            req.on_finish(req)     # -> _on_request_failed -> retry clone
+
+    def drain_migrations(self, timeout: float = 5.0) -> None:
+        """Wait until no migration is in flight.  Export pins release in
+        the completion hook, which can lag the *request's* completion by
+        a worker beat — leak sweeps (and teardown) must not race it."""
+        if self._mig_io is None:
+            return
+        deadline = time.monotonic() + timeout
+        while True:
+            with self._mig_lock:
+                n = self._mig_pending
+            if n == 0:
+                return
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"{n} migration(s) still in flight after {timeout}s")
+            time.sleep(0.0005)
+
     # -- work stealing ---------------------------------------------------------
 
     @staticmethod
@@ -425,8 +694,20 @@ class ReplicaRouter:
             snap = snaps[i]
             if not snap.idle:
                 continue
+            if self.disaggregated and self.replicas[i].role == "decode":
+                # queued work is fresh prompts, and a decode-role replica
+                # stealing one would prefill it locally — the recompute
+                # disaggregation exists to avoid.  Its work arrives as
+                # migrated blocks instead.
+                continue
             donors = sorted(
-                (j for j in healthy if j != i and snaps[j].queued > 0),
+                (j for j in healthy if j != i and snaps[j].queued > 0
+                 and not (self.disaggregated
+                          and self.replicas[j].role == "decode")),
+                # a decode-role replica's queue holds *adopted* requests
+                # whose KV blocks already landed in its pool — stealing
+                # one would strand the staged payload and re-prefill a
+                # prompt that is already computed
                 key=lambda j: (snaps[j].queued_tokens, snaps[j].queued),
                 reverse=True)
             thief = self.replicas[i]
@@ -508,6 +789,12 @@ class ReplicaRouter:
         except Exception as e:  # noqa: BLE001 — aggregated below; the
             # replicas must still be stopped
             errors.append(e)
+        try:
+            # settle in-flight migrations while their receivers still run
+            # (an adopt against a stopped executor would strand a request)
+            self.drain_migrations()
+        except Exception as e:  # noqa: BLE001 — aggregated below
+            errors.append(e)
         for replica in self.replicas:
             try:
                 replica.stop(raise_failure=False)
@@ -540,6 +827,10 @@ class ReplicaRouter:
                 results, _ = eng.run_unordered(requests, window=window)
         finally:
             self._stop_stealing()
+        # every request resolved implies every migration resolved, but the
+        # completion hook's export release can lag by a worker beat — and
+        # the caller's leak sweep must see the pins gone
+        self.drain_migrations()
         stats = ServeStats(requests=len(requests),
                            wall_s=time.monotonic() - t0)
         delivered = 0

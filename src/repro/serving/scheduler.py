@@ -70,6 +70,10 @@ from repro.serving.sampler import Sampler, greedy
 class RequestState(Enum):
     QUEUED = "queued"      # in the admission queue
     PREFILL = "prefill"    # assigned a slot; prompt being prefilled
+    PREFILLED = "prefilled"  # prefill done on a prefill-role replica;
+    #                          KV blocks migrating to a decode replica
+    #                          (terminal *on the source* — the request
+    #                          re-enters QUEUED on the receiver)
     DECODE = "decode"      # occupying a decode slot
     DONE = "done"          # all tokens emitted
     FAILED = "failed"      # terminal: poison fault / deadline / shed /
@@ -94,6 +98,11 @@ class Request:
     on_finish: Callable[["Request"], None] | None = None
     preempted_count: int = 0        # times evicted from a decode slot
     error: BaseException | None = None   # set iff state is FAILED
+    # engine that currently owns the request — stamped at submit and
+    # re-stamped by adopt_blocks when a migration hands it to a decode
+    # replica, so failure attribution follows the request, not the
+    # dispatch target
+    replica: str | None = None
     # paged-KV bookkeeping (engine/scheduler-owned; empty when contiguous).
     # block_ids[:shared_blocks] are prefix-shared (refcounted, read-only);
     # blocks_reserved is the *remaining* unallocated reservation tail.

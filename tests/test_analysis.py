@@ -7,6 +7,8 @@ import sys
 import textwrap
 from pathlib import Path
 
+import pytest
+
 from repro.analysis import default_repo_root, repo_config, run_all
 from repro.analysis.baseline import (apply_baseline, load_baseline,
                                      write_baseline)
@@ -368,10 +370,11 @@ def test_baseline_roundtrip_and_staleness(tmp_path):
         """})
     cfg = AnalysisConfig(repo_root=tmp_path, refgen_files=["pkg/e.py"])
     findings = check_refgen(cfg)
-    write_baseline(tmp_path, findings)
+    write_baseline(tmp_path, findings, "fixture debt for the roundtrip")
     baseline = load_baseline(tmp_path)
     stale = apply_baseline(findings, baseline)
     assert all(f.suppressed for f in findings) and stale == []
+    assert all("fixture debt" in note for note in baseline.values())
     # fix the violation: the entry is now stale, and the gate reports it
     _tree(tmp_path, {"pkg/e.py": """\
         class Engine:
@@ -381,6 +384,32 @@ def test_baseline_roundtrip_and_staleness(tmp_path):
     findings = check_refgen(cfg)
     stale = apply_baseline(findings, baseline)
     assert findings == [] and len(stale) == 1
+
+
+def test_baseline_requires_note_and_keeps_old_justifications(tmp_path):
+    _tree(tmp_path, {"pkg/e.py": """\
+        class Engine:
+            def bad_drop(self, ids):
+                self.pool.free(ids)
+        """})
+    cfg = AnalysisConfig(repo_root=tmp_path, refgen_files=["pkg/e.py"])
+    findings = check_refgen(cfg)
+    with pytest.raises(ValueError, match="triage note"):
+        write_baseline(tmp_path, findings, "   ")
+    write_baseline(tmp_path, findings, "first triage")
+    # a later rewrite with a different note must not clobber the
+    # original justification on entries that already existed
+    write_baseline(tmp_path, findings, "second triage")
+    baseline = load_baseline(tmp_path)
+    assert list(baseline.values()) == ["triaged: first triage"]
+
+
+def test_cli_update_baseline_requires_note(tmp_path):
+    from repro.analysis.__main__ import main
+    with pytest.raises(SystemExit):
+        main(["--repo-root", str(tmp_path), "--update-baseline"])
+    assert main(["--repo-root", str(tmp_path), "--update-baseline",
+                 "--note", "clean fixture tree"]) == 0
 
 
 def test_finding_ids_are_line_independent(tmp_path):

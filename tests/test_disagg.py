@@ -1,0 +1,319 @@
+"""Disaggregated prefill/decode fleet: role policy and validation, KV
+block export pinning, live migration end-to-end (bit-identical greedy,
+zero decode-side prompt recompute, leak-free pools), first-token-at-
+handoff semantics, deterministic and seeded kv.migrate chaos, and
+scheduler load snapshots under in-flight prefill sentinel slots."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry as R
+from repro.models.registry import fns_for
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.faults import FaultPlan, FaultSpec
+from repro.serving.kv_pool import KVBlockPool
+from repro.serving.router import ReplicaRouter
+from repro.serving.sampler import greedy
+from repro.serving.scheduler import RequestState
+
+
+def _smoke():
+    cfg = R.smoke("qwen2.5-3b")
+    params = fns_for(cfg).init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(cfg, sizes, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+            for n in sizes]
+
+
+def _mk_reqs(prompts, new_tokens, rid0=0):
+    return [Request(rid0 + i, p, max_new_tokens=new_tokens,
+                    sampler=greedy())
+            for i, p in enumerate(prompts)]
+
+
+# -- role policy and validation ------------------------------------------------
+
+def test_role_validation():
+    cfg, params = _smoke()
+    with pytest.raises(ValueError, match="role="):
+        ServingEngine(cfg, params, max_len=24, batch_slots=1,
+                      role="prefil")
+    # disaggregated roles require the paged engine: migration moves pool
+    # blocks, which the contiguous cache does not have
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine(cfg, params, max_len=24, batch_slots=1,
+                      paged=False, role="prefill")
+    # a fleet of only prefill-role replicas has nowhere to send blocks
+    pre = ServingEngine(cfg, params, max_len=24, batch_slots=1,
+                        paged=True, block_size=8, role="prefill")
+    with pytest.raises(ValueError, match="decode-capable"):
+        ReplicaRouter([pre])
+
+
+def test_roles_are_policy_not_capability():
+    """A decode-role engine serves a fresh prompt standalone: roles only
+    shape router placement, never what an engine can execute (warmup and
+    degraded fleets rely on this)."""
+    cfg, params = _smoke()
+    prompts = _prompts(cfg, [8])
+    ref = _mk_reqs(prompts, 4)
+    ServingEngine(cfg, params, max_len=24, batch_slots=1, paged=True,
+                  block_size=8).serve(ref)
+    for role in ("prefill", "decode"):
+        reqs = _mk_reqs(prompts, 4)
+        eng = ServingEngine(cfg, params, max_len=24, batch_slots=1,
+                            paged=True, block_size=8, role=role)
+        eng.serve(reqs)
+        assert [r.output for r in reqs] == [r.output for r in ref], role
+        eng.pool.assert_leak_free()
+
+
+# -- export pinning ------------------------------------------------------------
+
+def test_export_blocks_pins_and_validates():
+    pool = KVBlockPool(8, 8)
+    pool.reserve(2)
+    ids = pool.alloc_reserved(2)
+    gens = pool.export_blocks(ids)
+    assert len(gens) == len(ids)
+    # one export holder per block on top of the allocation holder
+    assert all(pool.refcount(b) == 2 for b in ids)
+    assert all(pool.block_live(b, g) for b, g in zip(ids, gens))
+    with pytest.raises(ValueError, match="trash"):
+        pool.export_blocks([pool.TRASH])
+    free_id = next(i for i in range(1, 8) if i not in ids)
+    with pytest.raises(ValueError, match="unallocated"):
+        pool.export_blocks([free_id])
+    # the failed exports must not have leaked partial pins
+    assert all(pool.refcount(b) == 2 for b in ids)
+    pool.free(ids)              # drop the export pins...
+    pool.free(ids)              # ...then the allocation holders
+    pool.assert_leak_free()
+
+
+# -- migration end to end ------------------------------------------------------
+
+def _fleet(cfg, params, plan=None, **kw):
+    pre = ServingEngine(cfg, params, name="pre0", role="prefill",
+                        fault_plan=plan, **kw)
+    dec = ServingEngine(cfg, params, name="dec0", role="decode",
+                        fault_plan=plan, **kw)
+    return pre, dec
+
+
+def test_disagg_bit_identical_zero_recompute_leak_free():
+    cfg, params = _smoke()
+    kw = dict(max_len=64, batch_slots=3, paged=True, block_size=16,
+              prefill_chunk=16)
+    prompts = _prompts(cfg, [8, 8, 40])
+    ref = _mk_reqs(prompts, 4)
+    ServingEngine(cfg, params, name="ref", **kw).serve(ref)
+    pre, dec = _fleet(cfg, params, **kw)
+    router = ReplicaRouter([pre, dec], affinity=False, steal=False)
+    base = dec.begin_window()
+    reqs = _mk_reqs(prompts, 4)
+    stats = router.serve(reqs)
+    router.stop()
+    assert [r.output for r in reqs] == [r.output for r in ref], \
+        "migrated decode diverged from local prefill+decode"
+    assert all(r.first_token_at is not None for r in reqs)
+    w = dec.collect_window(base, [], stats.wall_s)
+    assert w.prefill_tokens_computed == 0, \
+        f"decode replica recomputed {w.prefill_tokens_computed} tokens"
+    assert w.kv_migrations == len(reqs)
+    assert w.migrated_blocks == sum(
+        -(-(len(p) + 4) // 16) for p in prompts)
+    pre.pool.assert_leak_free()
+    dec.pool.assert_leak_free()
+
+
+def test_single_token_request_finishes_at_handoff():
+    """The first token is sampled on the prefill replica at handoff, so
+    a max_new_tokens=1 request is DONE there — no migration, no decode
+    replica involvement, still bit-identical to a local serve."""
+    cfg, params = _smoke()
+    kw = dict(max_len=48, batch_slots=2, paged=True, block_size=16,
+              prefill_chunk=16)
+    prompts = _prompts(cfg, [8, 24])
+    ref = _mk_reqs(prompts, 1)
+    ServingEngine(cfg, params, name="ref", **kw).serve(ref)
+    pre, dec = _fleet(cfg, params, **kw)
+    router = ReplicaRouter([pre, dec], affinity=False, steal=False)
+    base = dec.begin_window()
+    reqs = _mk_reqs(prompts, 1)
+    stats = router.serve(reqs)
+    router.stop()
+    assert [r.output for r in reqs] == [r.output for r in ref]
+    assert all(r.state is RequestState.DONE for r in reqs)
+    w = dec.collect_window(base, [], stats.wall_s)
+    assert w.kv_migrations == 0 and w.tokens == 0, \
+        "a single-token request must never cross the migration channel"
+    pre.pool.assert_leak_free()
+    dec.pool.assert_leak_free()
+
+
+def test_steal_never_raids_the_disagg_migration_path():
+    """Work stealing stays on (the relief valve for mixed fleets) but
+    must not move fresh prompts onto a decode-role replica, nor pull an
+    adopted request — whose KV blocks already landed in the adopter's
+    pool — back off its queue to re-prefill it: every prompt migrates
+    exactly once and nothing is stolen in a 1+1 disaggregated fleet."""
+    cfg, params = _smoke()
+    kw = dict(max_len=48, batch_slots=2, paged=True, block_size=16,
+              prefill_chunk=16)
+    prompts = _prompts(cfg, [8, 8, 24], seed=13)
+    ref = _mk_reqs(prompts, 4)
+    ServingEngine(cfg, params, name="ref", **kw).serve(ref)
+    pre, dec = _fleet(cfg, params, **kw)
+    router = ReplicaRouter([pre, dec], affinity=False, steal=True)
+    base = dec.begin_window()
+    reqs = _mk_reqs(prompts, 4)
+    stats = router.serve(reqs)
+    router.stop()
+    assert [r.output for r in reqs] == [r.output for r in ref]
+    w = dec.collect_window(base, [], stats.wall_s)
+    assert w.kv_migrations == len(reqs)
+    assert w.prefill_tokens_computed == 0
+    assert stats.router_steals == 0
+    pre.pool.assert_leak_free()
+    dec.pool.assert_leak_free()
+
+
+def test_migrate_drop_retries_from_bare_prompt():
+    cfg, params = _smoke()
+    kw = dict(max_len=64, batch_slots=2, paged=True, block_size=16,
+              prefill_chunk=16)
+    prompts = _prompts(cfg, [8, 40], seed=9)
+    ref = _mk_reqs(prompts, 4)
+    ServingEngine(cfg, params, name="ref", **kw).serve(ref)
+    plan = FaultPlan([FaultSpec("kv.migrate", "drop", count=1)])
+    pre, dec = _fleet(cfg, params, plan=plan, **kw)
+    router = ReplicaRouter([pre, dec], affinity=False, steal=False,
+                           max_retries=3)
+    reqs = _mk_reqs(prompts, 4)
+    stats = router.serve(reqs)
+    router.stop()
+    assert plan.fired == 1
+    assert all(r.state is RequestState.DONE for r in reqs), \
+        [(r.rid, r.state, r.error) for r in reqs]
+    assert [r.output for r in reqs] == [r.output for r in ref], \
+        "post-retry outputs diverged from the unfaulted reference"
+    assert stats.requests_retried >= 1
+    pre.pool.assert_leak_free()
+    dec.pool.assert_leak_free()
+
+
+def test_seeded_migrate_chaos_terminal_and_leak_free():
+    """Seeded fault plans over kv.migrate (drop/delay mixes): every
+    request must reach a *typed* terminal state — never a hang — DONE
+    outputs must match the unfaulted reference, and neither pool may
+    leak a block or an export pin."""
+    cfg, params = _smoke()
+    kw = dict(max_len=48, batch_slots=2, paged=True, block_size=16,
+              prefill_chunk=16)
+    prompts = _prompts(cfg, [8, 24], seed=11)
+    ref = _mk_reqs(prompts, 3)
+    ServingEngine(cfg, params, name="ref", **kw).serve(ref)
+    ref_out = {r.rid: r.output for r in ref}
+    for seed in range(3):
+        plan = FaultPlan.from_seed(seed, n=4, sites=("kv.migrate",))
+        pre, dec = _fleet(cfg, params, plan=plan, **kw)
+        router = ReplicaRouter([pre, dec], affinity=False, steal=False,
+                               max_retries=3)
+        reqs = _mk_reqs(prompts, 3)
+        router.serve(reqs)
+        router.stop()
+        assert all(r.state in (RequestState.DONE, RequestState.FAILED)
+                   for r in reqs), \
+            [(r.rid, r.state) for r in reqs]
+        for r in reqs:
+            if r.state is RequestState.DONE:
+                assert r.output == ref_out[r.rid], (seed, r.rid)
+            else:
+                assert r.error is not None, (seed, r.rid)
+        pre.pool.assert_leak_free()
+        dec.pool.assert_leak_free()
+
+
+# -- load snapshots under prefill sentinel slots -------------------------------
+
+def test_load_snapshot_pins_mid_prefill_slot():
+    """pos == -1 (admitted, blocks not yet materialized): the snapshot
+    must count the slot as occupied and its reservation as spoken-for,
+    with exactly the overflow request queued."""
+    cfg, params = _smoke()
+    eng = ServingEngine(cfg, params, max_len=32, batch_slots=2,
+                        paged=True, block_size=8, pool_blocks=12,
+                        prefill_chunk=8)
+    free0 = eng.pool.free_blocks
+    prompts = _prompts(cfg, [16, 16, 16], seed=5)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(i, p, max_new_tokens=4, sampler=greedy()))
+    eng._step()      # admits two slots, spends the whole chunk budget
+    #                  on the oldest — the second stays at pos == -1
+    poses = sorted(j.pos for j in eng._prefilling.values())
+    assert poses == [-1, 8], poses
+    snap = eng.scheduler.load_snapshot()
+    assert snap.free_slots == 0
+    assert snap.queued == 1
+    assert snap.queued_tokens == 16          # the overflow prompt
+    # both admitted requests hold their full 3-block reservation
+    # (ceil((16 prompt + 4 new) / 8)) whether materialized or not
+    assert free0 - snap.free_blocks == 6
+    while eng.scheduler.has_work():
+        eng._step()
+    eng.pool.assert_leak_free()
+
+
+def test_load_snapshot_pins_inbound_tier_slot():
+    """pos == -2 (materialized, host-tier fetches inbound): the slot is
+    skipped by the chunk budget loop but must still read as occupied
+    with its blocks allocated; the fetch then lands and decode completes
+    bit-identically to an untiered serve."""
+    cfg, params = _smoke()
+    plan = FaultPlan([FaultSpec("kv.fetch", "delay", delay_s=0.25,
+                                count=8)])
+    eng = ServingEngine(cfg, params, max_len=24, batch_slots=1,
+                        paged=True, block_size=8, pool_blocks=5,
+                        host_blocks=16, prefill_chunk=8,
+                        fault_plan=plan)
+    # three distinct 2-block prefixes through a 4-usable-block pool:
+    # the oldest published prefix is demand-demoted to the host tier
+    rng = np.random.default_rng(6)
+    prefixes = [rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+                for _ in range(3)]
+    tails = [rng.integers(0, cfg.vocab_size, size=4).astype(np.int32)
+             for _ in range(2)]
+    eng.serve([Request(i, np.concatenate([p, tails[0]]),
+                       max_new_tokens=3, sampler=greedy())
+               for i, p in enumerate(prefixes)])
+    assert eng.totals.kv_spills > 0
+    prompt = np.concatenate([prefixes[0], tails[1]])
+    ref = Request(7, prompt, max_new_tokens=4, sampler=greedy())
+    ServingEngine(cfg, params, max_len=24, batch_slots=1, paged=True,
+                  block_size=8).serve([ref])
+    req = Request(3, prompt, max_new_tokens=4, sampler=greedy())
+    eng.submit(req)
+    eng._step()      # admission + materialization issue the (delayed)
+    #                  fetches; the slot parks at pos == -2
+    (job,) = eng._prefilling.values()
+    assert job.pos == -2
+    snap = eng.scheduler.load_snapshot()
+    assert snap.free_slots == 0
+    assert snap.queued == 0 and snap.queued_tokens == 0
+    assert snap.free_blocks == 0             # 3-block request + trash-
+    #                                          excluded pool of 4
+    deadline = time.monotonic() + 30.0
+    while req.state is not RequestState.DONE:
+        assert time.monotonic() < deadline, "inbound-tier slot hung"
+        eng._step()
+    assert req.output == ref.output, \
+        "host-tier restore diverged from the recompute baseline"
+    assert eng.totals.prefix_hits_host > 0
+    eng.pool.assert_leak_free()
